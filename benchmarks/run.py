@@ -1,0 +1,30 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (derived = the figure's headline
+number) and writes per-figure row CSVs to experiments/benchmarks/.
+"""
+import csv
+import pathlib
+import time
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "benchmarks"
+
+
+def main() -> None:
+    from benchmarks.figures import ALL
+    OUT.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in ALL.items():
+        t0 = time.perf_counter()
+        rows, derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},{derived}", flush=True)
+        if rows:
+            with open(OUT / f"{name}.csv", "w", newline="") as f:
+                w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+                w.writeheader()
+                w.writerows(rows)
+
+
+if __name__ == '__main__':
+    main()

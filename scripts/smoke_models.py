@@ -1,0 +1,46 @@
+"""Dev smoke: tiny forward (train/prefill/decode) for every arch."""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, reduced_config
+from repro.models import kvcache
+from repro.models.transformer import forward, init_params, count_params
+from repro.configs import get_config
+
+for arch in ARCH_IDS:
+    t0 = time.time()
+    cfg = reduced_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    B, S = 2, 16
+    if cfg.input_mode == "tokens":
+        inputs = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    # train
+    logits, _, aux = forward(params, cfg, inputs, mode="train")
+    assert logits.shape == (B, S, cfg.vocab_size), logits.shape
+    assert not bool(jnp.any(jnp.isnan(logits))), f"{arch}: NaN train logits"
+    # prefill
+    cache = kvcache.init_cache(cfg, B, max_len=S + 4)
+    logits_p, cache, _ = forward(params, cfg, inputs, cache=cache,
+                                 cache_index=0, mode="prefill")
+    assert not bool(jnp.any(jnp.isnan(logits_p))), f"{arch}: NaN prefill"
+    # decode one token
+    if cfg.input_mode == "tokens":
+        tok = inputs[:, -1:]
+    else:
+        tok = inputs[:, -1:, :]
+    logits_d, cache, _ = forward(params, cfg, tok, cache=cache,
+                                 cache_index=S, mode="decode")
+    assert logits_d.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits_d))), f"{arch}: NaN decode"
+    full = get_config(arch)
+    n = count_params(full)
+    na = count_params(full, active_only=True)
+    print(f"{arch:26s} ok ({time.time()-t0:5.1f}s)  "
+          f"full params={n/1e9:8.3f}B active={na/1e9:8.3f}B")
+print("ALL OK")

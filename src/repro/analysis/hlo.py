@@ -1,0 +1,243 @@
+"""Parse optimized HLO text for collective traffic.
+
+``compiled.cost_analysis()`` reports FLOPs and bytes accessed but NOT
+collective bytes, so we walk ``compiled.as_text()``:
+
+  * build a symbol table  %name -> result bytes  per computation,
+  * sum operand bytes for every all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute,
+  * multiply collectives inside while-loop bodies by the loop trip count
+    (recovered from the canonical scan lowering: the condition computation
+    compares the induction variable against a constant).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# instructions that stand for real HBM traffic in optimized (fused) HLO.
+# Elementwise/transpose/reshape/broadcast are EXCLUDED: on TPU they fuse
+# into their consumers, so counting them (as the less-fused CPU HLO would
+# suggest) wildly overstates HBM bytes. This makes traffic_bytes a
+# fusion-optimistic proxy — the §Roofline memory term is a lower bound.
+_TRAFFIC_OPS = ("fusion", "dot", "convolution", "copy", "all-gather",
+                "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "dynamic-slice", "dynamic-update-slice",
+                "scatter", "gather", "reduce", "sort", "select-and-scatter",
+                "reduce-window", "concatenate")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s+(?:\([^)]*\)\s*->|\{)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR_RE = re.compile(r"(?:body|to_apply|branch_computations)=\{?%?([\w.\-]+)")
+_COND_ATTR_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Computation:
+    name: str
+    result_bytes: Dict[str, int] = field(default_factory=dict)
+    result_dims: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
+    # (op_kind, operand_bytes, result_bytes) per collective instruction
+    collectives: List[Tuple[str, int, int]] = field(default_factory=list)
+    # (while_instr_cond, while_instr_body)
+    whiles: List[Tuple[str, str]] = field(default_factory=list)
+    calls: List[str] = field(default_factory=list)
+    fusion_calls: List[str] = field(default_factory=list)
+    max_constant: int = 0
+    dot_flops: float = 0.0            # 2*M*N*K over dot instructions
+    traffic_bytes: float = 0.0        # operands+results of real-work instrs
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if ("{" in line and "=" not in line.split("{")[0].split("(")[0]
+                and (stripped.startswith("%") or stripped.startswith("ENTRY")
+                     or re.match(r"^[\w.\-]+ ", stripped))):
+            m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def parse_hlo(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    for name, lines in _split_computations(hlo).items():
+        c = Computation(name)
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                for cm in _CONST_RE.finditer(line):
+                    c.max_constant = max(c.max_constant, int(cm.group(1)))
+                continue
+            iname, rhs = m.groups()
+            # opcode = first bare word directly followed by "(" — shape
+            # tokens before it form the (possibly tuple) result type
+            op_m = re.search(r"(?:^|\s)([a-z][\w\-]*)\(", rhs)
+            opcode = op_m.group(1) if op_m else None
+            result_part = rhs[:op_m.start()] if op_m else rhs
+            rb = shape_bytes(result_part)
+            c.result_bytes[iname] = rb
+            shape_m = _SHAPE_RE.search(result_part)
+            if shape_m:
+                dims = tuple(int(d) for d in shape_m.group(2).split(",")
+                             if d) if shape_m.group(2) else ()
+                c.result_dims[iname] = dims
+            for cm in _CONST_RE.finditer(rhs):
+                c.max_constant = max(c.max_constant, int(cm.group(1)))
+
+            operands = []
+            if op_m:
+                inner = rhs[op_m.end() - 1:]
+                operands = _OPERAND_RE.findall(inner.split(")")[0])
+
+            for kind in COLLECTIVES:
+                if opcode == kind or (opcode and opcode.startswith(
+                        kind.replace("-", "_"))):
+                    ob = sum(c.result_bytes.get(o, 0) for o in operands)
+                    c.collectives.append((kind, ob, rb))
+                    break
+
+            if opcode == "dot" and operands:
+                out_dims = c.result_dims.get(iname, ())
+                lhs_dims = c.result_dims.get(operands[0], ())
+                cm2 = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rhs)
+                k = 1
+                if cm2 and cm2.group(1):
+                    for i in cm2.group(1).split(","):
+                        idx = int(i)
+                        if idx < len(lhs_dims):
+                            k *= lhs_dims[idx]
+                mn = 1
+                for d in out_dims:
+                    mn *= d
+                c.dot_flops += 2.0 * mn * k
+            if opcode in _TRAFFIC_OPS:
+                # Traffic proxy = 2x bytes WRITTEN by real-work ops (each
+                # byte written was read ~once upstream). Counting operand
+                # bytes instead double-dips on aliased buffers: fusions
+                # that slice into scan-stacked remat buffers list the full
+                # (L, B, S, D) buffer as an operand, inflating traffic 50x.
+                if (opcode == "dynamic-update-slice"
+                        or "dynamic-update-slice" in iname) \
+                        and len(operands) >= 2:
+                    # in-place update (possibly fused): only the slice
+                    # moves — the largest operand strictly smaller than
+                    # the result is the update
+                    cand = [c.result_bytes.get(o, 0) for o in operands]
+                    upd = max([b for b in cand if b < rb] or [0])
+                    c.traffic_bytes += 2 * upd
+                else:
+                    c.traffic_bytes += 2 * rb
+            wm = _CALL_ATTR_RE.search(rhs)
+            if opcode == "while":
+                body = wm.group(1) if wm else ""
+                condm = _COND_ATTR_RE.search(rhs)
+                cond = condm.group(1) if condm else ""
+                c.whiles.append((cond, body))
+            elif wm:
+                c.calls.append(wm.group(1))
+            # fusion bodies via calls= attr: dots inside are real compute,
+            # but their internal ops are NOT HBM traffic
+            for cm2 in re.finditer(r"calls=%?([\w.\-]+)", rhs):
+                c.fusion_calls.append(cm2.group(1))
+        comps[name] = c
+    return comps
+
+
+def analyze_hlo(hlo: str, entry: str = None) -> Dict[str, object]:
+    """Walk the optimized HLO with while-loop trip-count weighting.
+
+    Returns {"collectives": {kind: {operand_bytes, result_bytes, count}},
+             "dot_flops": float,          # loop-weighted 2*M*N*K total
+             "traffic_bytes": float}      # loop-weighted HBM-traffic proxy
+
+    Fixes the two blind spots of compiled.cost_analysis(): while bodies are
+    counted once there (scan-over-layers undercounts by n_periods), and
+    collective bytes aren't reported at all."""
+    comps = parse_hlo(hlo)
+    if not comps:
+        return {"collectives": {}, "dot_flops": 0.0, "traffic_bytes": 0.0}
+    referenced = set()
+    for c in comps.values():
+        referenced.update(c.calls)
+        referenced.update(c.fusion_calls)
+        for cond, body in c.whiles:
+            referenced.add(cond)
+            referenced.add(body)
+    entries = [n for n in comps if n not in referenced]
+    coll: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"operand_bytes": 0.0, "result_bytes": 0.0, "count": 0.0})
+    acc = {"dot_flops": 0.0, "traffic_bytes": 0.0}
+
+    def visit(name: str, weight: float, seen: tuple, traffic_ok: bool):
+        if name not in comps or name in seen:
+            return
+        c = comps[name]
+        for kind, ob, rb in c.collectives:
+            t = coll[kind]
+            t["operand_bytes"] += ob * weight
+            t["result_bytes"] += rb * weight
+            t["count"] += weight
+        acc["dot_flops"] += c.dot_flops * weight
+        if traffic_ok:
+            acc["traffic_bytes"] += c.traffic_bytes * weight
+        for callee in c.calls:
+            visit(callee, weight, seen + (name,), traffic_ok)
+        for callee in c.fusion_calls:
+            visit(callee, weight, seen + (name,), False)
+        for cond, body in c.whiles:
+            trip = max(comps.get(cond, Computation("")).max_constant, 1)
+            visit(body, weight * trip, seen + (name,), traffic_ok)
+
+    for e in (([entry] if entry else []) or entries):
+        visit(e, 1.0, (), True)
+    return {"collectives": {k: dict(v) for k, v in coll.items()},
+            "dot_flops": acc["dot_flops"],
+            "traffic_bytes": acc["traffic_bytes"]}
+
+
+def collective_bytes(hlo: str, entry: str = None
+                     ) -> Dict[str, Dict[str, float]]:
+    return analyze_hlo(hlo, entry)["collectives"]
+
+
+def total_collective_operand_bytes(hlo: str) -> float:
+    return sum(v["operand_bytes"]
+               for v in collective_bytes(hlo).values())

@@ -1,0 +1,216 @@
+"""Config system: frozen dataclasses + registry.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the paper's
+diffusion models as ``DiffusionConfig``; serving-time topology as
+``CascadeConfig``/``ServingConfig``. Configs are pure data — nothing here
+touches jax device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Block pattern vocabulary
+# ---------------------------------------------------------------------------
+# A transformer stack is (prefix_pattern, period_pattern * n_periods, suffix).
+# Each entry is (mixer, ffn):
+#   mixer ∈ {"attn", "mla", "mamba", "mlstm", "slstm"}
+#   ffn   ∈ {"mlp", "moe", None}
+BlockSpec = Tuple[str, Optional[str]]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0
+    top_k: int = 0
+    num_shared_experts: int = 0
+    d_ff: int = 0                     # per-expert hidden dim
+    router_aux_coef: float = 0.001    # load-balance loss coefficient
+    router_dtype: str = "float32"
+    capacity_factor: float = 1.25     # per-expert buffer slack (drops above)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style Multi-head Latent Attention."""
+    q_lora_rank: int = 0              # 0 => dense q projection
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                  # 0 => ceil(d_model/16)
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    proj_factor: float = 2.0          # mLSTM up-projection
+    conv_kernel: int = 4
+    slstm_proj_factor: float = 4.0 / 3.0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                 # 0 => d_model // num_heads
+
+    # Norm / position / activations
+    norm: str = "rmsnorm"             # rmsnorm | layernorm | nonparam_ln
+    norm_eps: float = 1e-5
+    rope: str = "rope"                # rope | mrope | none
+    rope_theta: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = ()   # head_dim/2 split for M-RoPE (t,h,w)
+    pos_emb: str = "none"             # none | learned
+    mlp: str = "swiglu"               # swiglu | gelu
+    tie_embeddings: bool = False
+    max_position: int = 1 << 20
+
+    # Block layout
+    prefix_pattern: Tuple[BlockSpec, ...] = ()
+    period_pattern: Tuple[BlockSpec, ...] = (("attn", "mlp"),)
+
+    # Sub-configs
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    mla: Optional[MLAConfig] = None
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    xlstm: XLSTMConfig = field(default_factory=XLSTMConfig)
+
+    # Frontend
+    input_mode: str = "tokens"        # tokens | embeddings
+    num_position_dims: int = 1        # 3 for M-RoPE (t, h, w)
+
+    # Multi-token prediction (DeepSeek-V3)
+    mtp_depth: int = 0
+
+    # Implementation knobs (perf-relevant; hillclimbed in §Perf)
+    attn_impl: str = "xla"            # xla | pallas
+    remat: str = "none"               # none | dots | full
+    scan_layers: bool = True
+    dtype: str = "bfloat16"
+    fsdp: bool = False                # shard weights over data axes too
+    sequence_parallel: bool = False   # shard activations' seq dim on long prefill
+    opt_8bit_moments: bool = False    # block-quantized Adam moments
+
+    # ---------------- derived ----------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def n_periods(self) -> int:
+        body = self.num_layers - len(self.prefix_pattern)
+        if body % max(len(self.period_pattern), 1) != 0:
+            raise ValueError(
+                f"{self.name}: {body} body layers not divisible by period "
+                f"{len(self.period_pattern)}")
+        return body // len(self.period_pattern)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True when per-token decode cost does not grow with context length
+        (SSM / SSM-dominant hybrid). Used for the long_500k skip rule."""
+        mixers = [m for m, _ in self.prefix_pattern + self.period_pattern]
+        n_attn = sum(m in ("attn", "mla") for m in mixers)
+        return n_attn == 0 or (n_attn / len(mixers)) <= 0.25
+
+    def flat_pattern(self) -> Tuple[BlockSpec, ...]:
+        return self.prefix_pattern + self.period_pattern * self.n_periods
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init; used for MODEL_FLOPS)."""
+        from repro.models.transformer import count_params
+        return count_params(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.transformer import count_params
+        return count_params(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class DiffusionConfig:
+    """Latent-diffusion UNet variant (the paper's served model class)."""
+    name: str
+    image_size: int = 64              # latent resolution
+    in_channels: int = 4
+    base_channels: int = 128
+    channel_mults: Tuple[int, ...] = (1, 2, 4)
+    num_res_blocks: int = 2
+    attn_resolutions: Tuple[int, ...] = (16, 8)
+    num_heads: int = 4
+    text_dim: int = 256               # cross-attention conditioning width
+    num_steps: int = 50               # sampler steps (1 for distilled "turbo")
+    sampler: str = "ddim"             # ddim | euler
+    dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class LatencyProfile:
+    """Per-model execution-latency profile e(b) (seconds for a batch of b).
+
+    ``base_s`` is batch-1 latency; ``marginal_s`` the per-extra-query cost
+    (diffusion batches scale near-linearly past small b; profiled in the
+    paper on A100-80GB).
+    """
+    base_s: float
+    marginal_s: float
+
+    def exec_latency(self, batch: int) -> float:
+        return self.base_s + self.marginal_s * max(batch - 1, 0)
+
+    def throughput(self, batch: int) -> float:
+        return batch / self.exec_latency(batch)
+
+
+@dataclass(frozen=True)
+class CascadeConfig:
+    name: str
+    light: str                        # model name in the repository
+    heavy: str
+    discriminator: str = "efficientnet_s"
+    slo_s: float = 5.0
+    light_profile: LatencyProfile = field(default_factory=lambda: LatencyProfile(0.10, 0.01))
+    heavy_profile: LatencyProfile = field(default_factory=lambda: LatencyProfile(1.78, 0.70))
+    disc_latency_s: float = 0.010     # EfficientNet on A100 (paper §4.4)
+    # FID* calibration anchors (paper-reported statistics; see DESIGN.md §7)
+    fid_all_heavy: float = 18.55
+    fid_all_light: float = 22.6
+    fid_best_mix: float = 17.9
+    best_mix_defer_frac: float = 0.65
+    easy_fraction: float = 0.30       # 20-40% of queries are "easy"
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    cascade: CascadeConfig
+    num_workers: int = 16
+    batch_choices: Tuple[int, ...] = (1, 2, 4, 8, 16)
+    control_period_s: float = 2.0
+    ewma_alpha: float = 0.6
+    overprovision: float = 1.05       # λ in the paper
+    threshold_grid: int = 101         # discretization of t ∈ [0, 1]
+    drop_predicted_misses: bool = True
+    hedge_quantile: float = 0.99      # straggler hedging trigger
+    heartbeat_timeout_s: float = 4.0
+    worker_tp_size: int = 1           # chips per worker (TPU slice width)
+    rho_light: float = 0.90           # utilization cap (queue stability)
+    rho_heavy: float = 0.85
+
+
+def replace(cfg, **kw):
+    """dataclasses.replace that works through our frozen configs."""
+    return dataclasses.replace(cfg, **kw)

@@ -1,0 +1,88 @@
+"""ResourceManager — the controller's brain (paper §3.3).
+
+Wraps the MILP solver with: EWMA demand estimation, Little's-law queueing
+inputs from live telemetry, elastic worker counts (failures / scale events),
+and the ablation modes evaluated in §4.5 (static threshold, AIMD batching,
+Proteus queuing heuristic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from repro.config.base import CascadeConfig, ServingConfig
+from repro.core.confidence import DeferralProfile
+from repro.core.milp import AllocationPlan, Telemetry, solve_allocation
+
+
+@dataclasses.dataclass
+class AllocatorOptions:
+    mode: str = "diffserve"       # diffserve | static_threshold |
+    #                               aimd_batching | no_queuing_model
+    static_threshold: float = 0.7
+    aimd_increase: int = 1
+    aimd_decrease: float = 0.5
+
+
+class ResourceManager:
+    def __init__(self, cascade: CascadeConfig, serving: ServingConfig,
+                 profile: DeferralProfile,
+                 options: Optional[AllocatorOptions] = None):
+        self.cascade = cascade
+        self.serving = serving
+        self.profile = profile
+        self.options = options or AllocatorOptions()
+        self._demand_ewma: Optional[float] = None
+        self._aimd_b1 = max(serving.batch_choices)
+        self._aimd_b2 = max(serving.batch_choices)
+        self.solve_times_ms: List[float] = []
+        self.last_plan: Optional[AllocationPlan] = None
+
+    # ------------------------------------------------------------------
+    def estimate_demand(self, observed_qps: float) -> float:
+        a = self.serving.ewma_alpha
+        if self._demand_ewma is None:
+            self._demand_ewma = observed_qps
+        else:
+            self._demand_ewma = a * observed_qps + (1 - a) * self._demand_ewma
+        return self._demand_ewma
+
+    def observe_slo_timeout(self):
+        """AIMD ablation signal: multiplicative decrease on timeout."""
+        self._aimd_b1 = max(1, int(self._aimd_b1 * self.options.aimd_decrease))
+        self._aimd_b2 = max(1, int(self._aimd_b2 * self.options.aimd_decrease))
+
+    def observe_ok_tick(self):
+        ch = self.serving.batch_choices
+        self._aimd_b1 = min(max(ch), self._aimd_b1 + self.options.aimd_increase)
+        self._aimd_b2 = min(max(ch), self._aimd_b2 + self.options.aimd_increase)
+
+    # ------------------------------------------------------------------
+    def plan(self, telemetry: Telemetry) -> AllocationPlan:
+        demand = self.estimate_demand(telemetry.demand_qps)
+        opts = self.options
+        kw = dict(
+            num_workers=telemetry.live_workers or self.serving.num_workers,
+            queue_light=telemetry.queue_light,
+            queue_heavy=telemetry.queue_heavy,
+            arrival_light=telemetry.arrival_light_qps,
+            arrival_heavy=telemetry.arrival_heavy_qps,
+        )
+        if opts.mode == "static_threshold":
+            plan = solve_allocation(self.cascade, self.serving, self.profile,
+                                    demand, fixed_threshold=opts.static_threshold,
+                                    **kw)
+        elif opts.mode == "aimd_batching":
+            plan = solve_allocation(self.cascade, self.serving, self.profile,
+                                    demand,
+                                    fixed_batches=(self._aimd_b1,
+                                                   self._aimd_b2), **kw)
+        elif opts.mode == "no_queuing_model":
+            plan = solve_allocation(self.cascade, self.serving, self.profile,
+                                    demand, queuing_model="proteus_2x", **kw)
+        else:
+            plan = solve_allocation(self.cascade, self.serving, self.profile,
+                                    demand, **kw)
+        self.solve_times_ms.append(plan.solve_ms)
+        self.last_plan = plan
+        return plan

@@ -1,0 +1,91 @@
+"""Model-cascade abstraction (the paper's core object).
+
+A cascade = (light model, heavy model, discriminator). ``run_batch``
+executes the real pipeline: light generation → discriminator confidence →
+threshold → heavy generation for deferred queries. The same interface
+drives diffusion cascades (the paper) and LM cascades (§5 extension, used
+for the assigned LM architectures).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import CascadeConfig, DiffusionConfig
+from repro.models import diffusion as diff
+from repro.models.efficientnet import (DiscriminatorConfig,
+                                       apply_discriminator)
+
+
+@dataclasses.dataclass
+class CascadeResult:
+    outputs: np.ndarray            # final images / tokens per query
+    confidences: np.ndarray        # discriminator scores of light outputs
+    deferred: np.ndarray           # bool mask: sent to heavy
+    light_outputs: np.ndarray
+
+
+class DiffusionCascade:
+    """Real-execution diffusion cascade (toy scale on CPU, full on TPU)."""
+
+    def __init__(self, light_cfg: DiffusionConfig, light_params,
+                 heavy_cfg: DiffusionConfig, heavy_params,
+                 disc_cfg: DiscriminatorConfig, disc_params,
+                 latent_to_image: Optional[Callable] = None):
+        self.light_cfg, self.light_params = light_cfg, light_params
+        self.heavy_cfg, self.heavy_params = heavy_cfg, heavy_params
+        self.disc_cfg, self.disc_params = disc_cfg, disc_params
+        self.latent_to_image = latent_to_image or (lambda z: z)
+
+        self._light = jax.jit(
+            lambda p, k, toks: diff.ddim_sample(p, light_cfg, k, toks))
+        self._heavy = jax.jit(
+            lambda p, k, toks: diff.ddim_sample(p, heavy_cfg, k, toks))
+        self._score = jax.jit(
+            lambda p, imgs: jax.nn.softmax(
+                apply_discriminator(p, disc_cfg, imgs)[0], -1)[:, 1])
+
+    def confidence(self, images) -> np.ndarray:
+        return np.asarray(self._score(self.disc_params, images))
+
+    def run_batch(self, key, prompt_tokens, threshold: float) -> CascadeResult:
+        kl, kh = jax.random.split(key)
+        light = self._light(self.light_params, kl, prompt_tokens)
+        imgs = self.latent_to_image(light)
+        conf = self.confidence(imgs)
+        deferred = conf < threshold
+        outputs = np.asarray(imgs)
+        if bool(deferred.any()):
+            heavy = self._heavy(self.heavy_params, kh, prompt_tokens)
+            heavy_imgs = np.asarray(self.latent_to_image(heavy))
+            outputs = np.where(deferred[:, None, None, None], heavy_imgs,
+                               outputs)
+        return CascadeResult(outputs=outputs, confidences=conf,
+                             deferred=np.asarray(deferred),
+                             light_outputs=np.asarray(imgs))
+
+
+class LMCascade:
+    """LM cascade (paper §5): light/heavy LM configs of the same family;
+    confidence = mean top-token probability of the light generation."""
+
+    def __init__(self, light_step: Callable, heavy_step: Callable):
+        """*_step(prompt_tokens) -> (tokens, logprobs) host callables."""
+        self.light_step = light_step
+        self.heavy_step = heavy_step
+
+    def run_batch(self, prompt_tokens, threshold: float) -> CascadeResult:
+        tokens, logprobs = self.light_step(prompt_tokens)
+        conf = np.exp(np.asarray(logprobs)).mean(axis=-1)
+        deferred = conf < threshold
+        outputs = np.asarray(tokens)
+        if bool(deferred.any()):
+            h_tokens, _ = self.heavy_step(prompt_tokens)
+            outputs = np.where(deferred[:, None], np.asarray(h_tokens),
+                               outputs)
+        return CascadeResult(outputs=outputs, confidences=conf,
+                             deferred=deferred, light_outputs=np.asarray(tokens))

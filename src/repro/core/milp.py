@@ -1,0 +1,196 @@
+"""The DiffServe resource-allocation MILP (paper §3.3) and its exact solver.
+
+    max_{x1,x2,b1,b2,t}  t
+    s.t.  e1(b1) + q1 + e2(b2) + q2 + disc  <=  SLO          (latency, Eq.1)
+          x1 * T1(b1)  >=  λD                                 (Eq.2)
+          x2 * T2(b2)  >=  λD * f(t)                          (Eq.3)
+          x1 + x2      <=  S                                  (Eq.4)
+
+Decision space: b1,b2 from a small discrete set; x1,x2 integers; t in [0,1].
+Because f is monotone non-decreasing in t, the optimal t for fixed
+(b1, b2) is found exactly by inverting f at the residual heavy capacity —
+so full enumeration over (b1, b2) gives the global optimum. A generic
+branch-and-bound solver (core/bnb.py) cross-checks the integer parts
+(property-tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro.config.base import CascadeConfig, LatencyProfile, ServingConfig
+from repro.core.confidence import DeferralProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class AllocationPlan:
+    x1: int                   # workers hosting light + discriminator
+    x2: int                   # workers hosting heavy
+    b1: int
+    b2: int
+    threshold: float
+    expected_latency: float
+    feasible: bool
+    solve_ms: float = 0.0
+    objective: float = -1.0
+
+    @property
+    def total_workers(self) -> int:
+        return self.x1 + self.x2
+
+
+@dataclasses.dataclass
+class Telemetry:
+    """Controller inputs gathered from workers each tick."""
+    demand_qps: float
+    queue_light: float = 0.0
+    queue_heavy: float = 0.0
+    arrival_light_qps: float = 0.0
+    arrival_heavy_qps: float = 0.0
+    live_workers: int = 0
+
+
+def queuing_delay(queue_len: float, arrival_qps: float) -> float:
+    """Little's law: W = L / λ (paper Eq. before Eq.1)."""
+    if arrival_qps <= 1e-9:
+        return 0.0
+    return queue_len / arrival_qps
+
+
+def solve_allocation(
+    cascade: CascadeConfig,
+    serving: ServingConfig,
+    profile: DeferralProfile,
+    demand_qps: float,
+    *,
+    num_workers: Optional[int] = None,
+    queue_light: float = 0.0,
+    queue_heavy: float = 0.0,
+    arrival_light: float = 0.0,
+    arrival_heavy: float = 0.0,
+    queuing_model: str = "littles_law",   # | "proteus_2x" (ablation)
+    fixed_threshold: Optional[float] = None,
+    fixed_batches: Optional[Tuple[int, int]] = None,
+) -> AllocationPlan:
+    """Exact solver: enumerate (b1, b2), close the integer/threshold forms."""
+    t0 = time.perf_counter()
+    S = num_workers if num_workers is not None else serving.num_workers
+    lam_D = serving.overprovision * max(demand_qps, 1e-9)
+    e1 = cascade.light_profile.exec_latency
+    e2 = cascade.heavy_profile.exec_latency
+    T1 = cascade.light_profile.throughput
+    T2 = cascade.heavy_profile.throughput
+
+    best: Optional[AllocationPlan] = None
+    batch_pairs = ([fixed_batches] if fixed_batches else
+                   [(a, b) for a in serving.batch_choices
+                    for b in serving.batch_choices])
+
+    for b1, b2 in batch_pairs:
+        if queuing_model == "littles_law":
+            q1 = queuing_delay(queue_light, max(arrival_light, lam_D))
+            q2 = queuing_delay(queue_heavy, max(arrival_heavy, 1e-9)) \
+                if queue_heavy else 0.0
+        else:                               # Proteus heuristic (ablation)
+            q1, q2 = 2 * e1(b1), 2 * e2(b2)
+        latency = e1(b1) + q1 + e2(b2) + q2 + cascade.disc_latency_s
+        if latency > cascade.slo_s:
+            continue
+        # utilization caps keep queues stable (ρ<1 — Little's law blows up
+        # at ρ=1); backlog drains within one SLO window
+        drain1 = queue_light / max(cascade.slo_s, 1e-9)
+        drain2 = queue_heavy / max(cascade.slo_s, 1e-9)
+        x1 = max(int(math.ceil(
+            (lam_D / serving.rho_light + drain1) / T1(b1))), 1)
+        if x1 > S:
+            continue
+        remaining = S - x1
+        eff_T2 = T2(b2) * serving.rho_heavy
+        if fixed_threshold is not None:
+            t = fixed_threshold
+            need2 = lam_D * profile.f(t) + drain2
+            x2 = int(math.ceil(need2 / eff_T2)) if need2 > 0 else 0
+            if x2 > remaining:
+                continue
+        else:
+            # largest t whose deferred load fits the residual capacity
+            cap_frac = max(remaining * eff_T2 - drain2, 0.0) / lam_D
+            t = profile.inverse(cap_frac)
+            x2 = int(math.ceil((lam_D * profile.f(t) + drain2) / eff_T2)) \
+                if profile.f(t) > 0 or drain2 > 0 else 0
+            x2 = min(x2, remaining)
+        cand = AllocationPlan(x1=x1, x2=x2, b1=b1, b2=b2, threshold=t,
+                              expected_latency=latency, feasible=True,
+                              objective=t)
+        if (best is None or cand.objective > best.objective
+                or (cand.objective == best.objective
+                    and cand.total_workers < best.total_workers)):
+            best = cand
+
+    ms = (time.perf_counter() - t0) * 1e3
+    if best is None:
+        # infeasible: degrade to all-light at max batch (SLO-pressure mode)
+        b1 = max(serving.batch_choices)
+        x1 = min(S, max(int(math.ceil(lam_D / T1(b1))), 1))
+        return AllocationPlan(x1=x1, x2=max(S - x1, 0), b1=b1,
+                              b2=max(serving.batch_choices), threshold=0.0,
+                              expected_latency=e1(b1), feasible=False,
+                              solve_ms=ms, objective=0.0)
+    return dataclasses.replace(best, solve_ms=ms)
+
+
+def solve_heterogeneous(
+    cascade: CascadeConfig,
+    serving: ServingConfig,
+    profile: DeferralProfile,
+    demand_qps: float,
+    classes: Dict[str, Tuple[int, float]],
+    threshold_grid: int = 41,
+) -> Dict[str, object]:
+    """Heterogeneous-cluster extension (paper §5): worker classes c with
+    (count_c, speed_c). Solved as a true MILP via core/bnb.py:
+      max t  ≅  for t on a grid: feasibility ILP over x_{model,class}.
+    Returns the best feasible plan."""
+    from repro.core.bnb import MILP, solve_milp
+    import numpy as np
+
+    names = sorted(classes)
+    counts = [classes[c][0] for c in names]
+    speeds = [classes[c][1] for c in names]
+    lam_D = serving.overprovision * max(demand_qps, 1e-9)
+    best = None
+    for k in range(threshold_grid - 1, -1, -1):
+        t = k / (threshold_grid - 1)
+        need2 = lam_D * profile.f(t)
+        # vars: x1_c..., x2_c...  minimize total workers subject to capacity
+        n = len(names)
+        b1 = max(serving.batch_choices)
+        b2 = max(serving.batch_choices)
+        T1 = cascade.light_profile.throughput(b1)
+        T2 = cascade.heavy_profile.throughput(b2)
+        c_obj = np.ones(2 * n)
+        A, rhs = [], []
+        # -sum(x1_c * T1 * speed_c) <= -lam_D
+        A.append([-T1 * s for s in speeds] + [0.0] * n)
+        rhs.append(-lam_D)
+        A.append([0.0] * n + [-T2 * s for s in speeds])
+        rhs.append(-need2)
+        for i in range(n):                       # class capacity
+            row = [0.0] * (2 * n)
+            row[i] = 1.0
+            row[n + i] = 1.0
+            A.append(row)
+            rhs.append(counts[i])
+        sol = solve_milp(MILP(c=c_obj, A_ub=np.array(A), b_ub=np.array(rhs),
+                              integer=list(range(2 * n)),
+                              upper=np.array(counts + counts, float)))
+        if sol.status == "optimal":
+            best = {"threshold": t,
+                    "x1": {names[i]: int(round(sol.x[i])) for i in range(n)},
+                    "x2": {names[i]: int(round(sol.x[n + i]))
+                           for i in range(n)},
+                    "objective": t}
+            break
+    return best or {"threshold": 0.0, "x1": {}, "x2": {}, "objective": 0.0}

@@ -1,0 +1,109 @@
+"""Response-quality metrics.
+
+FID* — exact Fréchet distance between feature distributions (discriminator
+penultimate features stand in for InceptionV3, which is unavailable offline;
+the math is the real thing).
+
+Simulator quality model — FID as a function of the deferral fraction p and
+router skill, calibrated to the paper's reported statistics:
+  * all-light / all-heavy FID anchors per cascade,
+  * non-monotone dip: best FID at a partial mix (paper Fig. 1a / §4.2),
+  * router skill: discriminator > random > pickscore/clipscore (Fig. 1a).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from repro.config.base import CascadeConfig
+
+
+# ---------------------------------------------------------------------------
+# Exact Fréchet distance
+# ---------------------------------------------------------------------------
+def feature_stats(feats: np.ndarray):
+    mu = feats.mean(axis=0)
+    cov = np.cov(feats, rowvar=False)
+    return mu, np.atleast_2d(cov)
+
+
+def frechet_distance(mu1, cov1, mu2, cov2, eps: float = 1e-6) -> float:
+    """d^2 = |mu1-mu2|^2 + Tr(C1 + C2 - 2 (C1 C2)^{1/2}).
+
+    Matrix sqrt via eigendecomposition of the symmetrized product
+    (C1^{1/2} C2 C1^{1/2} is PSD and shares the trace of (C1 C2)^{1/2})."""
+    mu1, mu2 = np.asarray(mu1), np.asarray(mu2)
+    cov1 = np.atleast_2d(cov1) + eps * np.eye(len(mu1))
+    cov2 = np.atleast_2d(cov2) + eps * np.eye(len(mu2))
+    diff = mu1 - mu2
+
+    w1, v1 = np.linalg.eigh(cov1)
+    sqrt1 = (v1 * np.sqrt(np.clip(w1, 0, None))) @ v1.T
+    inner = sqrt1 @ cov2 @ sqrt1
+    w = np.linalg.eigvalsh(inner)
+    tr_sqrt = np.sum(np.sqrt(np.clip(w, 0, None)))
+    return float(diff @ diff + np.trace(cov1) + np.trace(cov2) - 2 * tr_sqrt)
+
+
+def fid_from_features(real_feats: np.ndarray, gen_feats: np.ndarray) -> float:
+    m1, c1 = feature_stats(real_feats)
+    m2, c2 = feature_stats(gen_feats)
+    return frechet_distance(m1, c1, m2, c2)
+
+
+# ---------------------------------------------------------------------------
+# Simulator quality model (calibrated to the paper)
+# ---------------------------------------------------------------------------
+ROUTER_SKILL = {
+    # Fig. 1a ordering: trained discriminator best; CLIPScore/PickScore
+    # routers are *worse than random* (the paper's surprising finding).
+    "discriminator": 1.0,
+    "random": 0.0,
+    "pickscore": -0.15,
+    "clipscore": -0.30,
+    "oracle": 1.25,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityModel:
+    """FID(p; skill): p = fraction deferred to the heavy model."""
+    fid_all_light: float
+    fid_all_heavy: float
+    fid_best_mix: float
+    best_mix_p: float
+    dip_width: float = 0.45
+
+    def fid(self, p: float, router: str = "discriminator") -> float:
+        p = min(max(p, 0.0), 1.0)
+        skill = ROUTER_SKILL.get(router, 0.0)
+        linear = self.fid_all_light + p * (self.fid_all_heavy
+                                           - self.fid_all_light)
+        # bell-shaped dip centred at the best mix, normalized so that a
+        # skill-1.0 router hits exactly fid_best_mix at best_mix_p (only a
+        # *good* router harvests the dip; a bad one pays it as a penalty)
+        def shape(x):
+            bell = math.exp(-0.5 * ((x - self.best_mix_p)
+                                    / self.dip_width) ** 2)
+            return bell * (4 * x * (1 - x) + 0.15)
+
+        linear_best = self.fid_all_light + self.best_mix_p * (
+            self.fid_all_heavy - self.fid_all_light)
+        dip_at_best = linear_best - self.fid_best_mix
+        return linear - skill * dip_at_best * shape(p) / shape(self.best_mix_p)
+
+    @classmethod
+    def from_cascade(cls, c: CascadeConfig) -> "QualityModel":
+        return cls(fid_all_light=c.fid_all_light,
+                   fid_all_heavy=c.fid_all_heavy,
+                   fid_best_mix=c.fid_best_mix,
+                   best_mix_p=c.best_mix_defer_frac)
+
+
+def pickscore_like(rng: np.random.Generator, n: int):
+    """Per-query light-minus-heavy quality deltas with the paper's Fig. 1b
+    shape: 20-40% of queries have delta >= 0 ("easy")."""
+    return rng.normal(loc=-0.35, scale=0.7, size=n)

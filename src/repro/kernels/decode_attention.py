@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: single-token GQA attention against a long KV cache
+(the decode_32k / long_500k hot-spot).
+
+Grid = (B*KH, T/BK) with the KV axis innermost (sequential), carrying
+online-softmax state in VMEM scratch. All G queries of a KV head are
+processed together as a (G, D) tile, so per-step work is a (G, BK) MXU
+matmul — no (B, H, T) fp32 score materialization (the XLA path's memory
+problem; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(vl_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, block_k: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = vl_ref[0]
+    k_start = ki * block_k
+
+    @pl.when(k_start < valid)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)             # (G, D)
+        k = k_ref[0].astype(jnp.float32)             # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(cols < valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, valid_len, *, block_k: int = 512,
+                     interpret: bool = False):
+    """q: (B, H, D) new-token queries; k, v: (B, T, KH, D);
+    valid_len: (B,) int32 — number of live cache entries per sequence."""
+    B, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    block_k = min(block_k, T)
+    assert T % block_k == 0, (T, block_k)
+
+    qr = q.reshape(B, KH, G, D).reshape(B * KH, G, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KH, T, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KH, T, D)
+    vl = jnp.repeat(valid_len.astype(jnp.int32), KH)
+
+    grid = (B * KH, T // block_k)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, D), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, D), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KH, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vl, qr, kr, vr)
+    return out.reshape(B, H, D)

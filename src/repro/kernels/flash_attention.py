@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: causal GQA flash attention (prefill hot-spot).
+
+Tiling: grid = (batch*kv_heads*q_groups, Sq/BQ, Skv/BK); the KV axis is the
+innermost (sequential on TPU) grid dim, carrying the online-softmax state
+(m, l, acc) in VMEM scratch. Block sizes default to 128 (MXU-aligned); K/V
+stream through VMEM in (BK, D) tiles so the working set is
+O(BQ*D + BK*D + BQ*BK) regardless of sequence length.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, seq_len: int,
+                  causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # causal: skip blocks fully above the diagonal
+    run = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)            # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK,
+                    interpret: bool = False):
+    """q: (B, Sq, H, D); k, v: (B, Sk, KH, D) with H = KH*G. Causal assumes
+    q and k cover the same positions (prefill)."""
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+
+    # layout: fold (B, KH, G) into the leading grid dim
+    qr = q.reshape(B, Sq, KH, G, D).transpose(0, 2, 3, 1, 4) \
+        .reshape(B * KH * G, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KH, Sk, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KH, Sk, D)
+
+    grid = (B * KH * G, Sq // block_q, Sk // block_k)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=block_q,
+                          block_k=block_k, seq_len=Sk, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b // G, ki, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, qi, ki: (b // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KH * G, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, KH, G, Sq, D).transpose(0, 3, 1, 2, 4) \
+        .reshape(B, Sq, H, D)

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: chunked selective scan (Mamba hot-loop).
+
+Grid = (B, E/BE, T/CHUNK) with the time axis innermost (sequential on TPU);
+the recurrent state h (BE, N) lives in VMEM scratch and carries across
+chunk steps. Within a chunk the recurrence runs as a fori_loop over CHUNK
+steps of vectorized (BE, N) VPU ops — the state never round-trips to HBM
+(the XLA scan path writes h back every step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(u_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, h_scr,
+                  *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    u = u_ref[0].astype(jnp.float32)        # (CHUNK, BE)
+    dt = dt_ref[0].astype(jnp.float32)      # (CHUNK, BE)
+    A = A_ref[...].astype(jnp.float32)      # (BE, N)
+    Bm = B_ref[0].astype(jnp.float32)       # (CHUNK, N)
+    Cm = C_ref[0].astype(jnp.float32)       # (CHUNK, N)
+    Dv = D_ref[...].astype(jnp.float32)     # (BE,)
+
+    def step(t, carry):
+        h, ys = carry
+        dA = jnp.exp(dt[t][:, None] * A)                  # (BE, N)
+        h = dA * h + (dt[t] * u[t])[:, None] * Bm[t][None, :]
+        y = jnp.sum(h * Cm[t][None, :], axis=1) + Dv * u[t]
+        ys = jax.lax.dynamic_update_slice(ys, y[None, :], (t, 0))
+        return h, ys
+
+    ys0 = jnp.zeros_like(u)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h_scr[...], ys0))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+def mamba_scan(u, dt, A, B, C, D, *, block_e: int = 256, chunk: int = 64,
+               interpret: bool = False):
+    """u, dt: (Bt, T, E); A: (E, N); B, C: (Bt, T, N); D: (E,).
+    Returns y: (Bt, T, E)."""
+    Bt, T, E = u.shape
+    N = A.shape[1]
+    be = min(block_e, E)
+    while E % be:
+        be -= 1
+    ch = min(chunk, T)
+    while T % ch:
+        ch -= 1
+
+    grid = (Bt, E // be, T // ch)
+    out = pl.pallas_call(
+        functools.partial(_mamba_kernel, chunk=ch),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ch, be), lambda b, e, c: (b, c, e)),
+            pl.BlockSpec((1, ch, be), lambda b, e, c: (b, c, e)),
+            pl.BlockSpec((be, N), lambda b, e, c: (e, 0)),
+            pl.BlockSpec((1, ch, N), lambda b, e, c: (b, c, 0)),
+            pl.BlockSpec((1, ch, N), lambda b, e, c: (b, c, 0)),
+            pl.BlockSpec((be,), lambda b, e, c: (e,)),
+        ],
+        out_specs=pl.BlockSpec((1, ch, be), lambda b, e, c: (b, c, e)),
+        out_shape=jax.ShapeDtypeStruct((Bt, T, E), u.dtype),
+        scratch_shapes=[pltpu.VMEM((be, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, B, C, D)
+    return out

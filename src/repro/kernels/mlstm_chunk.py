@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: chunkwise mLSTM (matrix-memory recurrence).
+
+Grid = (B*H, T/CHUNK), time innermost; the matrix memory C (dk, dv), the
+normalizer n (dk,) and the stabilizer m (scalar) carry in VMEM scratch.
+Within a chunk the stabilized exponential-gating recurrence runs as a
+fori_loop of rank-1 (k v^T) updates — the (dk, dv) state never leaves VMEM
+(per chunk the XLA scan writes it to HBM every step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, h_ref,
+                  C_scr, n_scr, m_scr, *, chunk: int, dk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        C_scr[...] = jnp.zeros_like(C_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+
+    q = q_ref[0].astype(jnp.float32) * (dk ** -0.5)    # (CHUNK, dk)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)                    # (CHUNK, dv)
+    lf = jax.nn.log_sigmoid(f_ref[0].astype(jnp.float32))   # (CHUNK,)
+    ii = i_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        C, n, m, hs = carry
+        m_new = jnp.maximum(lf[t] + m, ii[t])
+        fg = jnp.exp(lf[t] + m - m_new)
+        ig = jnp.exp(ii[t] - m_new)
+        C = fg * C + ig * (k[t][:, None] * v[t][None, :])
+        n = fg * n + ig * k[t]
+        num = jnp.sum(C * q[t][:, None], axis=0)            # (dv,)
+        den = jnp.maximum(jnp.abs(jnp.sum(n * q[t])), jnp.exp(-m_new))
+        h = num / den
+        hs = jax.lax.dynamic_update_slice(hs, h[None, :], (t, 0))
+        return C, n, m_new, hs
+
+    hs0 = jnp.zeros_like(v)
+    C, n, m, hs = jax.lax.fori_loop(
+        0, chunk, step, (C_scr[...], n_scr[...], m_scr[0], hs0))
+    C_scr[...] = C
+    n_scr[...] = n
+    m_scr[0] = m
+    h_ref[0] = hs.astype(h_ref.dtype)
+
+
+def mlstm_chunk(q, k, v, i_pre, f_pre, *, chunk: int = 64,
+                interpret: bool = False):
+    """q,k,v: (B, T, H, dh); i_pre, f_pre: (B, T, H). Returns h like v.
+    Note: q is scaled by dh^-0.5 and k is expected pre-scaled the same way
+    as models/xlstm.mlstm_apply does."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    ch = min(chunk, T)
+    while T % ch:
+        ch -= 1
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, x.shape[-1])
+    qr, kr, vr = fold(q), fold(k), fold(v)
+    ir = i_pre.transpose(0, 2, 1).reshape(B * H, T)
+    fr = f_pre.transpose(0, 2, 1).reshape(B * H, T)
+
+    grid = (B * H, T // ch)
+    out = pl.pallas_call(
+        functools.partial(_mlstm_kernel, chunk=ch, dk=dk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ch, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, ch, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, ch, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, ch), lambda b, c: (b, c)),
+            pl.BlockSpec((1, ch), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, ch, dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, dv), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dk, dv), jnp.float32),
+            pltpu.VMEM((dk,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr, ir, fr)
+    return out.reshape(B, H, T, dv).transpose(0, 2, 1, 3)

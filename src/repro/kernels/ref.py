@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B,Sq,H,D); k,v: (B,Sk,KH,D). fp32 softmax, same-position causal."""
+    B, Sq, H, D = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, Sq, KH, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kf) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool))
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, vf)
+    return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, valid_len):
+    """q: (B,H,D) one token; k,v: (B,T,KH,D); valid_len: (B,) int."""
+    B, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) \
+        / math.sqrt(D)
+    pos = jnp.arange(T)[None, None, None, :]
+    s = jnp.where(pos < valid_len[:, None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5, residual=None):
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def swiglu_ref(gate, up):
+    return (jax.nn.silu(gate.astype(jnp.float32))
+            * up.astype(jnp.float32)).astype(gate.dtype)
+
+
+def mamba_scan_ref(u, dt, A, B, C, D):
+    """Sequential selective scan (fp32). Shapes as kernels/mamba_scan."""
+    from repro.models.ssm import selective_scan
+    y, _ = selective_scan(u, dt, A, B, C, D)
+    return y
+
+
+def mlstm_chunk_ref(q, k, v, i_pre, f_pre):
+    """Stabilized mLSTM recurrence (fp32 scan)."""
+    from repro.models.xlstm import mlstm_scan
+    h, _ = mlstm_scan(q, k, v, i_pre, f_pre)
+    return h

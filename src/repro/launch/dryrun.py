@@ -1,0 +1,139 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh)
+cell on 512 placeholder host devices; record memory_analysis,
+cost_analysis, and HLO collective traffic for §Dry-run / §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.analysis.hlo import analyze_hlo
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_serve_step, build_train_step
+
+OUT_ROOT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides=None) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "axes": list(mesh.axis_names),
+           "n_devices": int(mesh.devices.size),
+           "status": "skipped", "overrides": {k: str(v) for k, v in
+                                              (overrides or {}).items()}}
+    if not applicable(cfg, shape):
+        rec["reason"] = ("long_500k skipped: pure full-attention arch "
+                        "(see DESIGN.md §4)")
+        return rec
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            jit_step, args, _ = build_train_step(cfg, mesh)
+            pshapes, oshapes, ispec = args
+            lowered = jit_step.lower(pshapes, oshapes, ispec)
+        else:
+            jit_step, args, _ = build_serve_step(cfg, mesh, shape)
+            lowered = jit_step.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    rec["cost_analysis"] = {k: float(v) for k, v in (ca or {}).items()
+                            if isinstance(v, (int, float))}
+
+    t2 = time.time()
+    hlo = compiled.as_text()
+    rec["hlo_bytes"] = len(hlo)
+    h = analyze_hlo(hlo)
+    rec["collectives"] = h["collectives"]
+    rec["hlo_dot_flops"] = h["dot_flops"]          # per-device, loop-weighted
+    rec["hlo_traffic_bytes"] = h["traffic_bytes"]  # per-device HBM proxy
+    rec["hlo_parse_s"] = round(time.time() - t2, 2)
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override key=value (python literal)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        import ast
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    for arch, shape_name, mp in cells:
+        mesh_tag = "2x16x16" if mp else "16x16"
+        out_dir = OUT_ROOT / mesh_tag
+        out_dir.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape_name}{args.tag}.json"
+        out = out_dir / name
+        t0 = time.time()
+        try:
+            rec = run_cell(arch, shape_name, mp, overrides or None)
+        except Exception as e:  # noqa: BLE001 — record the failure
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-4000:]}
+        rec["wall_s"] = round(time.time() - t0, 2)
+        out.write_text(json.dumps(rec, indent=1))
+        print(f"[{rec['status']:7s}] {mesh_tag} {arch} {shape_name} "
+              f"({rec['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

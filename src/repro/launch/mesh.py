@@ -1,0 +1,26 @@
+"""Production mesh builders. Functions (not module constants) so importing
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def make_worker_mesh(tp: int = 1):
+    """Serving-cluster worker slice: a small TP group (cluster mode)."""
+    n = len(jax.devices())
+    tp = min(tp, n)
+    return jax.make_mesh((n // tp, tp), ("data", "model"))

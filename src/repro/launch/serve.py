@@ -1,0 +1,72 @@
+"""End-to-end serving driver (the paper's kind of system).
+
+Runs the full DiffServe pipeline — controller + MILP + cascade + trace —
+either in simulator mode (paper-profile latencies; the paper's own headline
+results are simulator results) or with a real JAX-executed toy cascade
+whose latencies are measured on this machine and fed to the same MILP.
+
+  PYTHONPATH=src python -m repro.launch.serve --cascade sdturbo \
+      --baseline diffserve --workers 16 --trace-min 4 --trace-max 32
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+from repro.serving.baselines import BASELINES, run_baseline
+from repro.serving.profiles import CASCADES, default_serving
+from repro.serving.trace import azure_like_trace, load_trace_file, static_trace
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cascade", default="sdturbo", choices=sorted(CASCADES))
+    ap.add_argument("--baseline", default="diffserve",
+                    choices=list(BASELINES))
+    ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--duration", type=int, default=360)
+    ap.add_argument("--trace-min", type=float, default=4.0)
+    ap.add_argument("--trace-max", type=float, default=32.0)
+    ap.add_argument("--trace-file", default=None)
+    ap.add_argument("--static-qps", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.trace_file:
+        trace = load_trace_file(args.trace_file)
+    elif args.static_qps:
+        trace = static_trace(args.static_qps, args.duration)
+    else:
+        trace = azure_like_trace(args.duration, seed=3).scale(
+            args.trace_min, args.trace_max)
+    serving = default_serving(args.cascade, num_workers=args.workers)
+    r = run_baseline(args.baseline, trace, serving, seed=args.seed)
+
+    report = {
+        "cascade": args.cascade, "baseline": args.baseline,
+        "workers": args.workers, "trace": trace.name,
+        "total_queries": r.total, "completed": r.completed,
+        "dropped": r.dropped, "slo_violation_ratio": round(r.violation_ratio, 4),
+        "mean_fid": round(r.mean_fid, 3),
+        "defer_fraction": round(r.defer_fraction, 3),
+        "p50_latency_s": round(float(np.percentile(r.latencies, 50)), 3)
+        if r.latencies else None,
+        "p99_latency_s": round(float(np.percentile(r.latencies, 99)), 3)
+        if r.latencies else None,
+        "mean_milp_ms": round(float(np.mean(r.solve_ms)), 3)
+        if r.solve_ms else None,
+        "hedged": r.hedged,
+        "threshold_timeline": r.threshold_timeline[:: max(
+            len(r.threshold_timeline) // 50, 1)],
+    }
+    print(json.dumps(report, indent=1))
+    if args.out:
+        pathlib.Path(args.out).write_text(json.dumps(report, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Step builders + input specs + shardings for every (arch × shape) cell.
+
+``input_specs()`` returns weak-type-correct ShapeDtypeStructs (no device
+allocation) for each input of the step being lowered:
+  train   — {"inputs", "labels"(, "positions")}
+  prefill — (params, cache, inputs(, positions))
+  decode  — (params, cache, tokens, cache_index(, positions))
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import kvcache
+from repro.models.transformer import forward, init_params
+from repro.parallel.sharding import (make_rules, param_pspecs,
+                                     sharding_rules)
+from repro.training.optimizer import AdamWState, opt_state_pspecs
+from repro.training.train_loop import TrainConfig, make_train_step
+
+# per-arch grad-accumulation: chosen via §Perf hillclimbing so per-device
+# temp fits v5e HBM (16 GB) under SP + dots_nb remat
+MICROBATCHES = {"deepseek-v3-671b": 8, "llama4-scout-17b-a16e": 4,
+                "jamba-v0.1-52b": 4, "yi-9b": 4, "qwen2-vl-7b": 2,
+                "starcoder2-3b": 2, "musicgen-large": 2}
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    if shape.kind == "train":
+        S = shape.seq_len
+    elif shape.kind == "prefill":
+        S = shape.seq_len
+    else:                      # decode: one new token vs a seq_len cache
+        S = 1
+
+    if cfg.input_mode == "tokens":
+        inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+
+    specs: Dict[str, Any] = {"inputs": inputs}
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32) \
+            if cfg.input_mode == "tokens" else \
+            jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.rope == "mrope":
+        specs["positions"] = jax.ShapeDtypeStruct(
+            (cfg.num_position_dims, B, S), jnp.int32)
+    return specs
+
+
+def cache_len(shape: ShapeConfig) -> int:
+    """Cache allocation length, padded to a multiple of 512 so the sequence
+    dim stays shardable over the model axis (decode holds seq_len history
+    plus the token being written)."""
+    need = shape.seq_len if shape.kind == "prefill" else shape.seq_len + 1
+    return ((need + 511) // 512) * 512
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules per (cfg, mesh)
+# ---------------------------------------------------------------------------
+def rules_for(cfg: ModelConfig, mesh: Mesh, *, fsdp: Optional[bool] = None,
+              sequence_parallel: Optional[bool] = None,
+              serve: bool = False):
+    da = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return make_rules(
+        data_axes=da, model_axis="model",
+        fsdp=cfg.fsdp if fsdp is None else fsdp,
+        sequence_parallel=(cfg.sequence_parallel if sequence_parallel is None
+                           else sequence_parallel),
+        serve=serve)
+
+
+def batch_pspec(rules) -> P:
+    return P(rules["batch"])
+
+
+def input_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules) -> Dict[str, P]:
+    dp = rules["batch"]
+    out: Dict[str, P] = {}
+    if cfg.input_mode == "tokens":
+        out["inputs"] = P(dp, None)
+    else:
+        out["inputs"] = P(dp, None, None)
+    if shape.kind == "train":
+        out["labels"] = P(dp, None)
+    if cfg.rope == "mrope":
+        out["positions"] = P(None, dp, None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step builders (jit-ready, sharding-annotated)
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, mesh: Mesh,
+                     tcfg: Optional[TrainConfig] = None):
+    """Returns (jit_step, arg_specs, shardings_dict). Donates params+opt."""
+    tcfg = tcfg or TrainConfig(
+        microbatches=MICROBATCHES.get(cfg.name, 1))
+    rules = rules_for(cfg, mesh)
+    _, step = make_train_step(cfg, tcfg)
+
+    pshapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                             jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_specs = param_pspecs(pshapes, rules)
+
+    from repro.training.optimizer import make_adamw, OptimizerConfig
+    ocfg = dataclasses.replace(tcfg.opt,
+                               eight_bit_moments=tcfg.opt.eight_bit_moments
+                               or cfg.opt_8bit_moments)
+    opt_init, _ = make_adamw(ocfg)
+    oshapes = jax.eval_shape(opt_init, pshapes)
+    o_specs = opt_state_pspecs(oshapes, p_specs)
+
+    ispec = input_specs(cfg, _train_shape(cfg))
+    b_specs = input_pspecs(cfg, _train_shape(cfg), rules)
+
+    def wrapped(params, opt_state, batch):
+        with sharding_rules(rules, mesh):
+            return step(params, opt_state, batch)
+
+    p_sh = named_safe(mesh, p_specs, pshapes)
+    o_sh = named_safe(mesh, o_specs, oshapes)
+    b_sh = named_safe(mesh, b_specs, ispec)
+    m_shapes = jax.eval_shape(wrapped, pshapes, oshapes, ispec)[2]
+    m_sh = jax.tree.map(lambda s: NamedSharding(mesh, P()), m_shapes)
+    jit_step = jax.jit(wrapped, in_shardings=(p_sh, o_sh, b_sh),
+                       out_shardings=(p_sh, o_sh, m_sh),
+                       donate_argnums=(0, 1))
+    return jit_step, (pshapes, oshapes, ispec), \
+        {"params": p_specs, "opt": o_specs, "batch": b_specs, "rules": rules}
+
+
+def _train_shape(cfg):
+    from repro.configs.shapes import SHAPES
+    return SHAPES["train_4k"]
+
+
+def build_serve_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig,
+                     rules=None):
+    """Prefill or decode step for serving. Donates the cache."""
+    rules = rules or rules_for(cfg, mesh, serve=True)
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    pshapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                             jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_specs = param_pspecs(pshapes, rules)
+    cshapes = kvcache.cache_specs(cfg, shape.global_batch, cache_len(shape))
+    c_specs = kvcache.cache_pspecs(cshapes, rules, model_size)
+    ispec = input_specs(cfg, shape)
+    b_specs = input_pspecs(cfg, shape, rules)
+
+    p_sh = named_safe(mesh, p_specs, pshapes)
+    c_sh = named_safe(mesh, c_specs, cshapes)
+    b_sh = named_safe(mesh, b_specs, ispec)
+    logit_spec = P(rules["batch"], rules.get("vocab"))
+    logit_shape = jax.ShapeDtypeStruct(
+        (shape.global_batch, cfg.vocab_size), jnp.bfloat16)
+    l_sh = named_safe(mesh, logit_spec, logit_shape)
+
+    if shape.kind == "prefill":
+        def serve(params, cache, batch):
+            with sharding_rules(rules, mesh):
+                logits, new_cache, _ = forward(
+                    params, cfg, batch["inputs"],
+                    positions=batch.get("positions"),
+                    cache=cache, cache_index=0, mode="prefill")
+                # return only last-position logits (next-token sampling)
+                return logits[:, -1, :], new_cache
+        jit_step = jax.jit(serve, in_shardings=(p_sh, c_sh, b_sh),
+                           out_shardings=(l_sh, c_sh), donate_argnums=(1,))
+        args = (pshapes, cshapes, ispec)
+    else:
+        def serve(params, cache, batch, cache_index):
+            with sharding_rules(rules, mesh):
+                logits, new_cache, _ = forward(
+                    params, cfg, batch["inputs"],
+                    positions=batch.get("positions"),
+                    cache=cache, cache_index=cache_index, mode="decode")
+                return logits[:, -1, :], new_cache
+        jit_step = jax.jit(
+            serve,
+            in_shardings=(p_sh, c_sh, b_sh, NamedSharding(mesh, P())),
+            out_shardings=(l_sh, c_sh), donate_argnums=(1,))
+        args = (pshapes, cshapes, ispec,
+                jax.ShapeDtypeStruct((), jnp.int32))
+    return jit_step, args, {"params": p_specs, "cache": c_specs,
+                            "batch": b_specs, "rules": rules}
+
+
+def _named(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree, is_leaf=lambda s: isinstance(s, P))
+
+
+def named_safe(mesh: Mesh, specs, shapes):
+    """NamedShardings with divisibility fallback: any dim whose size is not
+    divisible by its assigned mesh-axis product is replicated instead (e.g.
+    3 KV heads on a 16-way model axis — Megatron replicates KV too)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(spec, shp):
+        if spec is None:
+            return NamedSharding(mesh, P())
+        parts = list(tuple(spec))
+        ndim = len(shp.shape)
+        parts = parts[:ndim] + [None] * (ndim - len(parts))
+        new = []
+        used = set()
+        for d, entry in enumerate(parts):
+            if entry is None:
+                new.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            # longest suffix of still-unused axes that divides the dim
+            # (e.g. 16 experts on ("data","model")=256 fall back to
+            # ("model",)=16, freeing "data" for another dim)
+            avail = tuple(a for a in axes if a not in used)
+            chosen = None
+            for start in range(len(avail)):
+                sub = avail[start:]
+                prod = 1
+                for a in sub:
+                    prod *= sizes[a]
+                if prod > 1 and shp.shape[d] % prod == 0:
+                    chosen = sub if len(sub) > 1 else sub[0]
+                    used.update(sub)
+                    break
+            new.append(chosen)
+        return NamedSharding(mesh, P(*new))
+
+    return jax.tree.map(one, specs, shapes,
+                        is_leaf=lambda s: isinstance(s, P) or s is None)

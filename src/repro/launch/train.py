@@ -1,0 +1,83 @@
+"""LM training driver (reduced-scale on CPU; full-scale via the same code
+path on a pod): synthetic token stream, AdamW, checkpoints + resume.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \
+      --steps 50 --batch 8 --seq 128 --ckpt /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models.transformer import init_params
+from repro.training import checkpoint
+from repro.training.data import zipf_tokens
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import TrainConfig, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=ARCH_IDS)
+    ap.add_argument("--full-scale", action="store_true",
+                    help="use the full config (pod-scale; default reduced)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full_scale \
+        else reduced_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    tcfg = TrainConfig(opt=OptimizerConfig(
+        peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+        total_steps=args.steps))
+    opt_init, step = make_train_step(cfg, tcfg)
+    opt_state = opt_init(params)
+    start = 0
+    if args.ckpt:
+        latest = checkpoint.latest_step(args.ckpt) \
+            if __import__("os").path.isdir(args.ckpt) else None
+        if latest is not None:
+            (params, opt_state), start, _ = checkpoint.load(
+                args.ckpt, (params, opt_state))
+            print(f"resumed from step {start}")
+
+    jit_step = jax.jit(step, donate_argnums=(0, 1))
+    rng = np.random.default_rng(args.seed + start)
+    t0 = time.time()
+    for i in range(start, args.steps):
+        inp, lab = zipf_tokens(rng, args.batch, args.seq, cfg.vocab_size)
+        batch = {"inputs": jnp.asarray(inp), "labels": jnp.asarray(lab)}
+        if cfg.input_mode == "embeddings":
+            batch["inputs"] = jax.random.normal(
+                jax.random.fold_in(key, i),
+                (args.batch, args.seq, cfg.d_model))
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(jnp.arange(args.seq)[None, None],
+                                   (3, args.batch, args.seq)).astype(jnp.int32)
+            batch["positions"] = pos
+        params, opt_state, m = jit_step(params, opt_state, batch)
+        if (i + 1) % 10 == 0 or i == start:
+            print(f"step {i+1:4d} loss {float(m['loss']):.4f} "
+                  f"ce {float(m['ce']):.4f} "
+                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)", flush=True)
+        if args.ckpt and (i + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt, (params, opt_state), i + 1)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, (params, opt_state), args.steps)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

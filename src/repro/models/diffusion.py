@@ -1,0 +1,92 @@
+"""Diffusion process: cosine schedule, epsilon-prediction training loss,
+DDIM / Euler samplers with ``lax`` control flow (static step count).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config.base import DiffusionConfig
+from repro.models.unet import apply_unet
+
+NUM_TRAIN_STEPS = 1000
+
+
+@functools.lru_cache()
+def _schedule(n: int = NUM_TRAIN_STEPS):
+    t = jnp.arange(n + 1, dtype=jnp.float32) / n
+    f = jnp.cos((t + 0.008) / 1.008 * jnp.pi / 2) ** 2
+    alphas_bar = f / f[0]
+    return jnp.clip(alphas_bar, 1e-5, 1.0)
+
+
+def q_sample(x0, t, noise):
+    """Forward process: x_t = sqrt(ab_t) x0 + sqrt(1-ab_t) eps."""
+    ab = _schedule()[t][:, None, None, None]
+    return jnp.sqrt(ab) * x0 + jnp.sqrt(1.0 - ab) * noise
+
+
+def diffusion_loss(params, cfg: DiffusionConfig, key, x0, prompt_tokens):
+    kt, kn = jax.random.split(key)
+    B = x0.shape[0]
+    t = jax.random.randint(kt, (B,), 0, NUM_TRAIN_STEPS)
+    noise = jax.random.normal(kn, x0.shape, x0.dtype)
+    xt = q_sample(x0, t, noise)
+    eps = apply_unet(params, cfg, xt, t, prompt_tokens)
+    return jnp.mean(jnp.square(eps - noise))
+
+
+def ddim_sample(params, cfg: DiffusionConfig, key, prompt_tokens,
+                num_steps: Optional[int] = None, eta: float = 0.0):
+    """Deterministic DDIM (eta=0). num_steps=1 reproduces the distilled
+    'turbo' execution profile of the paper's light models."""
+    steps = num_steps or cfg.num_steps
+    B = prompt_tokens.shape[0]
+    shape = (B, cfg.image_size, cfg.image_size, cfg.in_channels)
+    x = jax.random.normal(key, shape, jnp.float32)
+    ab = _schedule()
+    ts = jnp.linspace(NUM_TRAIN_STEPS - 1, 0, steps).astype(jnp.int32)
+
+    def body(i, x):
+        t = ts[i]
+        t_next = jnp.where(i + 1 < steps, ts[jnp.minimum(i + 1, steps - 1)],
+                           -1)
+        eps = apply_unet(params, cfg, x, jnp.full((B,), t), prompt_tokens)
+        ab_t = ab[t]
+        ab_n = jnp.where(t_next >= 0, ab[jnp.maximum(t_next, 0)], 1.0)
+        x0 = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+        x0 = jnp.clip(x0, -3.0, 3.0)
+        return jnp.sqrt(ab_n) * x0 + jnp.sqrt(1 - ab_n) * eps
+
+    x = lax.fori_loop(0, steps, body, x)
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def euler_sample(params, cfg: DiffusionConfig, key, prompt_tokens,
+                 num_steps: Optional[int] = None):
+    """Euler ancestral-style ODE sampler (alternative to DDIM)."""
+    steps = num_steps or cfg.num_steps
+    B = prompt_tokens.shape[0]
+    shape = (B, cfg.image_size, cfg.image_size, cfg.in_channels)
+    ab = _schedule()
+    sigmas = jnp.sqrt((1 - ab) / ab)
+    ts = jnp.linspace(NUM_TRAIN_STEPS - 1, 0, steps).astype(jnp.int32)
+    x = jax.random.normal(key, shape, jnp.float32) * sigmas[ts[0]]
+
+    def body(i, x):
+        t = ts[i]
+        sig = sigmas[t]
+        xin = x / jnp.sqrt(sig ** 2 + 1)
+        eps = apply_unet(params, cfg, xin, jnp.full((B,), t), prompt_tokens)
+        d = eps
+        sig_next = jnp.where(i + 1 < steps, sigmas[ts[jnp.minimum(i + 1,
+                                                                  steps - 1)]],
+                             0.0)
+        return x + d * (sig_next - sig)
+
+    x = lax.fori_loop(0, steps, body, x)
+    return jnp.clip(x, -1.0, 1.0)

@@ -1,0 +1,120 @@
+"""Cache structures for serving: KV (attention), latent (MLA), recurrent
+state (mamba/xlstm). Built as ShapeDtypeStruct trees for the dry-run and as
+zero arrays for real execution; layout mirrors the model's (prefix, scan)
+split so caches thread straight through ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config.base import ModelConfig
+from repro.models import mla as MLA
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.parallel.sharding import MeshAxes
+
+
+def cache_dtype(cfg: ModelConfig):
+    """KV caches are bf16 for bf16 models (the serving memory budget);
+    fp32 models (CPU test scale) cache in fp32 so decode == teacher-forced
+    exactly (tests/test_arch_smoke.py)."""
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _entry_specs(cfg: ModelConfig, spec, batch: int, max_len: int):
+    mixer, _ = spec
+    dt = cache_dtype(cfg)
+    if mixer == "attn":
+        KH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        return {"k": jax.ShapeDtypeStruct((batch, max_len, KH, hd), dt),
+                "v": jax.ShapeDtypeStruct((batch, max_len, KH, hd), dt)}
+    if mixer == "mla":
+        return MLA.mla_cache_specs(cfg, batch, max_len, dtype=dt)
+    if mixer == "mamba":
+        return SSM.mamba_state_specs(cfg, batch)
+    if mixer == "mlstm":
+        return XL.mlstm_state_specs(cfg, batch)
+    if mixer == "slstm":
+        return XL.slstm_state_specs(cfg, batch)
+    raise ValueError(mixer)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct tree matching forward()'s cache argument."""
+    prefix = [_entry_specs(cfg, s, batch, max_len)
+              for s in cfg.prefix_pattern]
+
+    def stack(sds):
+        return jax.ShapeDtypeStruct((cfg.n_periods,) + sds.shape, sds.dtype)
+
+    scan = {f"b{i}": jax.tree.map(stack, _entry_specs(cfg, s, batch, max_len))
+            for i, s in enumerate(cfg.period_pattern)}
+    return {"prefix": prefix, "scan": scan}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Zero-initialized cache (real execution path)."""
+    specs = cache_specs(cfg, batch, max_len)
+
+    def fix_m(path, leaf):   # xlstm stabilizer m must start at -inf
+        name = str(getattr(path[-1], "key", ""))
+        if name == "m":
+            return jnp.full(leaf.shape, -jnp.inf, leaf.dtype)
+        return jnp.zeros(leaf.shape, leaf.dtype)
+    return jax.tree_util.tree_map_with_path(fix_m, specs)
+
+
+# Base (un-stacked) partition layouts by leaf name and base ndim.
+# KV caches: shard heads on the model axis when divisible, otherwise shard
+# the sequence dim (flash-decoding-across-chips; softmax combines via
+# SPMD-inserted collectives). MLA latent caches have no head dim => always
+# sequence-sharded — combined with the latent compression this is what makes
+# deepseek-v3 decode_32k fit per chip.
+_BASE_SPECS = {
+    ("c_kv", 3): ("batch", "cache_seq", None),
+    ("k_rope", 3): ("batch", "cache_seq", None),
+    ("conv", 3): ("batch", None, "ffn"),       # (B, W-1, E)
+    ("h", 3): ("batch", "ffn", None),          # mamba (B, E, N)
+    ("C", 4): ("batch", "heads", None, None),  # mlstm (B, H, dk, dv)
+    ("n", 3): ("batch", "heads", None),        # mlstm (B, H, dk)
+    ("m", 2): ("batch", None),                 # mlstm (B, H)
+    ("c", 2): ("batch", None),                 # slstm (B, D)
+    ("n", 2): ("batch", None),
+    ("h", 2): ("batch", None),
+}
+
+
+def cache_pspecs(cache_tree, rules: Dict[str, MeshAxes],
+                 model_axis_size: int = 0):
+    """PartitionSpecs for a cache tree. Leaves under the "scan" subtree carry
+    a leading (n_periods,) axis, detected via the path. ``model_axis_size``
+    (if given) selects head- vs sequence-sharding for attention KV."""
+    def one(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+        name = keys[-1]
+        stacked = "scan" in keys
+        base_ndim = len(leaf.shape) - (1 if stacked else 0)
+        if name in ("k", "v") and base_ndim == 4:
+            kv_heads = leaf.shape[-2]
+            if model_axis_size and kv_heads % model_axis_size == 0:
+                logical = ("batch", None, "kv_heads", None)
+            else:
+                logical = ("batch", "cache_seq", None, None)
+        else:
+            logical = _BASE_SPECS.get((name, base_ndim),
+                                      ("batch",) + (None,) * (base_ndim - 1))
+        spec = tuple(rules.get(a) if a else None for a in logical)
+        if stacked:
+            spec = (None,) + spec
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def cache_bytes(cache_tree) -> int:
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree_util.tree_leaves(cache_tree))

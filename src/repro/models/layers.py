@@ -1,0 +1,356 @@
+"""Common neural-net building blocks (pure-functional init/apply).
+
+Conventions:
+  * params are nested dicts of jnp arrays; leaf names drive sharding rules
+    (see parallel/sharding.py).
+  * activations default to cfg dtype (bf16 on TPU); norms, softmax, router
+    logits run in float32.
+  * every apply() works for both full-sequence and single-token (decode)
+    inputs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import constrain
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    if scale is None:
+        fan_in = shape[0] if len(shape) <= 2 else math.prod(shape[:-1])
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def norm_init(kind: str, dim: int):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((dim,), jnp.float32)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((dim,), jnp.float32),
+                "bias": jnp.zeros((dim,), jnp.float32)}
+    if kind == "nonparam_ln":          # OLMo: no learnable params
+        return {}
+    raise ValueError(kind)
+
+
+def norm_apply(params, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * lax.rsqrt(var + eps) * params["scale"]
+    elif kind in ("layernorm", "nonparam_ln"):
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            out = out * params["scale"] + params["bias"]
+    else:
+        raise ValueError(kind)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_angles(positions, rot_dim: int, theta: float,
+                sections: Tuple[int, ...] = ()):
+    """positions: (B, S) or (P, B, S) for M-RoPE.  Returns cos/sin (B,S,rot/2)."""
+    half = rot_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 3:            # M-RoPE: (P,B,S) with per-section axes
+        if not sections:
+            sections = (half,) + (0,) * (positions.shape[0] - 1)
+        assert sum(sections) == half, (sections, half)
+        parts = []
+        start = 0
+        for i, sec in enumerate(sections):
+            if sec == 0:
+                continue
+            ang = positions[i][..., None].astype(jnp.float32) \
+                * inv_freq[start:start + sec]
+            parts.append(ang)
+            start += sec
+        angles = jnp.concatenate(parts, axis=-1)          # (B,S,half)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * inv_freq
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D) — rotate-half convention; cos/sin: (B, S, D/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(jnp.float32)
+    s = sin[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (XLA path; Pallas path lives in kernels/ops.py)
+# ---------------------------------------------------------------------------
+def gqa_attention(q, k, v, *, causal: bool = True,
+                  q_positions=None, kv_valid_len=None,
+                  logit_dtype=jnp.float32):
+    """Grouped-query attention in flat-head layout.
+
+    q: (B, S, H, D);  k, v: (B, T, KH, D) with H = KH * G.  KV heads are
+    repeated to H (the Megatron/MaxText TP layout): reshaping H->(KH, G)
+    instead makes neither factor divisible by a 16-way model axis, so SPMD
+    replicates the whole (B, H, S, T) score tensor on every chip — a 16x
+    memory/compute blow-up found via the §Roofline traffic analysis.
+    q_positions: (B, S) absolute positions of the queries (for causal
+      masking against a cache longer than S).  Defaults to arange(S).
+    kv_valid_len: (B,) number of valid cache entries (decode).
+    """
+    B, S, H, D = q.shape
+    T, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)               # (B, T, H, D)
+        v = jnp.repeat(v, G, axis=2)
+    if q_positions is None:
+        q_positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def dense_chunk(qc, qpc):
+        """qc: (B, c, H, D); qpc: (B, c) — full-T attention for one chunk."""
+        scores = jnp.einsum("bshd,bthd->bhst", qc, k,
+                            preferred_element_type=logit_dtype) * scale
+        if T == S == qc.shape[1]:
+            # unchunked fresh-KV path: pin head-sharded scores. Cache paths
+            # stay unconstrained: the cache is sequence-sharded there, and
+            # seq-sharded partial softmax beats all-gathering the cache.
+            scores = constrain(scores, "batch", "heads", None, None)
+        kv_pos = jnp.arange(T)[None, None, None, :]
+        neg = jnp.asarray(jnp.finfo(logit_dtype).min, logit_dtype)
+        if causal:
+            qp = qpc[:, None, :, None]
+            scores = jnp.where(kv_pos <= qp, scores, neg)
+        if kv_valid_len is not None:
+            ok = kv_pos < kv_valid_len[:, None, None, None]
+            scores = jnp.where(ok, scores, neg)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(qc.dtype)
+        return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+    # chunk long-sequence attention over query rows (flash-style at the XLA
+    # level): bounds the live (B, H, c, T) score tile; jax.checkpoint makes
+    # the backward recompute chunk scores instead of storing them all
+    # (§Perf: llama4 prefill_32k temp 746 GiB -> per-chunk tiles)
+    CHUNK = 1024
+    if S > CHUNK and S % CHUNK == 0:
+        nc = S // CHUNK
+        qr = jnp.moveaxis(q.reshape(B, nc, CHUNK, H, D), 1, 0)
+        qpr = jnp.moveaxis(q_positions.reshape(B, nc, CHUNK), 1, 0)
+        body = jax.checkpoint(lambda _, xs: (None, dense_chunk(*xs)),
+                              prevent_cse=False)
+        _, outs = jax.lax.scan(body, None, (qr, qpr))
+        return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, v.shape[-1])
+    return dense_chunk(q, q_positions)
+
+
+def attn_init(key, cfg):
+    D, H, KH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    dt = _dtype(cfg.dtype)
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (D, H, hd), dtype=dt),
+        "wk": dense_init(kk, (D, KH, hd), dtype=dt),
+        "wv": dense_init(kv, (D, KH, hd), dtype=dt),
+        "wo": dense_init(ko, (H, hd, D), scale=1.0 / math.sqrt(H * hd),
+                         dtype=dt),
+    }
+
+
+def attn_apply(params, cfg, x, *, positions, cache=None, cache_index=None):
+    """Standard GQA attention block (optionally with a KV cache).
+
+    cache: dict with "k","v" of shape (B, T_max, KH, hd) or None.
+    cache_index: scalar int32 — write offset (decode step / chunked prefill).
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+
+    if cfg.rope != "none":
+        pos = positions
+        if cfg.rope == "mrope":
+            cos, sin = rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta,
+                                   cfg.mrope_sections)
+            qpos_1d = pos[0]
+        else:
+            if pos.ndim == 3:
+                pos = pos[0]
+            cos, sin = rope_angles(pos, cfg.resolved_head_dim, cfg.rope_theta)
+            qpos_1d = pos
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    else:
+        qpos_1d = positions if positions.ndim == 2 else positions[0]
+
+    new_cache = None
+    if cache is not None:
+        ck = lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, cache_index, 0, 0))
+        cv = lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        valid = jnp.full((B,), cache_index + S, jnp.int32)
+        out = gqa_attention(q, ck, cv, causal=True, q_positions=qpos_1d,
+                            kv_valid_len=valid)
+    else:
+        out = gqa_attention(q, k, v, causal=True, q_positions=qpos_1d)
+    out = constrain(out, "batch", None, "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return constrain(y, "batch", "seq", "act_embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = _dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {"wi": dense_init(k1, (D, F), dtype=dt),
+                "wg": dense_init(k2, (D, F), dtype=dt),
+                "wo_mlp": dense_init(k3, (F, D), dtype=dt)}
+    return {"wi": dense_init(k1, (D, F), dtype=dt),
+            "wo_mlp": dense_init(k3, (F, D), dtype=dt)}
+
+
+def mlp_apply(params, cfg, x):
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    h = constrain(h, "batch", None, "ffn")
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("bsf,fd->bsd", h, params["wo_mlp"])
+    return constrain(y, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity dispatch, EP-shardable)
+# ---------------------------------------------------------------------------
+def moe_init(key, cfg):
+    D = cfg.d_model
+    m = cfg.moe
+    F = m.d_ff or cfg.d_ff
+    dt = _dtype(cfg.dtype)
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(keys[0], (D, m.num_experts), dtype=jnp.float32),
+        "e_wi": dense_init(keys[1], (m.num_experts, D, F), dtype=dt),
+        "e_wg": dense_init(keys[2], (m.num_experts, D, F), dtype=dt),
+        "e_wo": dense_init(keys[3], (m.num_experts, F, D), dtype=dt),
+    }
+    if m.num_shared_experts:
+        p["shared"] = mlp_init(keys[4], cfg, d_ff=F * m.num_shared_experts)
+    return p
+
+
+def moe_apply(params, cfg, x, *, capacity_factor: Optional[float] = None):
+    """Top-k expert routing with per-expert capacity (dropped overflow).
+
+    Returns (y, aux_loss).  Experts dim is EP-sharded via leaf names e_w*.
+    """
+    m = cfg.moe
+    capacity_factor = capacity_factor or m.capacity_factor
+    B, S, D = x.shape
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = lax.top_k(probs, K)          # (T,K)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    cap = max(int(math.ceil(T * K * capacity_factor / E)), 4)
+
+    # position of each (token, k) within its expert's capacity buffer
+    flat_expert = expert_idx.reshape(T * K)              # column-major? use row
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)   # (TK, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot       # exclusive cumsum
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)            # (TK,)
+    keep = pos < cap
+
+    dst = jnp.where(keep, flat_expert * cap + pos, E * cap)   # drop bucket
+    buf = jnp.zeros((E * cap + 1, D), x.dtype)
+    tok_rep = jnp.repeat(xt, K, axis=0)                  # (TK, D)
+    buf = buf.at[dst].add(tok_rep)
+    ebuf = buf[:-1].reshape(E, cap, D)
+    ebuf = constrain(ebuf, "experts", "expert_cap", None)
+
+    h = jnp.einsum("ecd,edf->ecf", ebuf, params["e_wi"])
+    g = jnp.einsum("ecd,edf->ecf", ebuf, params["e_wg"])
+    h = jax.nn.silu(g) * h
+    eout = jnp.einsum("ecf,efd->ecd", h, params["e_wo"])
+    eout = constrain(eout, "experts", "expert_cap", None)
+
+    flat_out = jnp.concatenate(
+        [eout.reshape(E * cap, D), jnp.zeros((1, D), x.dtype)], axis=0)
+    gathered = flat_out[dst]                             # (TK, D)
+    w = (gate_vals.reshape(T * K, 1).astype(x.dtype)
+         * keep[:, None].astype(x.dtype))
+    y = jnp.sum((gathered * w).reshape(T, K, D), axis=1)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], cfg, x).reshape(T, D)
+
+    # load-balance auxiliary loss (Switch-style)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) * m.router_aux_coef
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def embed_init(key, cfg):
+    dt = _dtype(cfg.dtype)
+    p = {"embedding": dense_init(key, (cfg.vocab_size, cfg.d_model),
+                                 scale=0.02, dtype=dt)}
+    if cfg.pos_emb == "learned":
+        p["pos_embedding"] = dense_init(
+            jax.random.fold_in(key, 1), (cfg.max_position, cfg.d_model),
+            scale=0.02, dtype=dt)
+    return p
+
+
+def embed_apply(params, cfg, tokens, positions=None):
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    if cfg.pos_emb == "learned" and positions is not None:
+        pos = positions if positions.ndim == 2 else positions[0]
+        x = x + jnp.take(params["pos_embedding"], pos, axis=0)
+    return constrain(x, "batch", None, "act_embed")

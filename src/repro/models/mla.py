@@ -1,0 +1,155 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+KV is compressed into a per-token latent c_kv (kv_lora_rank) plus a shared
+RoPE key (qk_rope_head_dim). The decode path uses the *absorbed* formulation:
+the cache stays in latent form — this is the MLA memory win that makes
+deepseek-v3 decode_32k fit (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import (dense_init, norm_init, norm_apply,
+                                 rope_angles, apply_rope, _dtype)
+from repro.parallel.sharding import constrain
+
+
+def mla_init(key, cfg):
+    D, H = cfg.d_model, cfg.num_heads
+    m = cfg.mla
+    dn, dr, dv, r = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                     m.v_head_dim, m.kv_lora_rank)
+    dt = _dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "w_dkv": dense_init(ks[0], (D, r), dtype=dt),
+        "kv_norm": norm_init("rmsnorm", r),
+        "w_uk": dense_init(ks[1], (r, H, dn), dtype=dt),
+        "w_uv": dense_init(ks[2], (r, H, dv), dtype=dt),
+        "w_kr": dense_init(ks[3], (D, dr), dtype=dt),
+        "wo": dense_init(ks[4], (H, dv, D), scale=1.0 / math.sqrt(H * dv),
+                         dtype=dt),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = dense_init(ks[5], (D, m.q_lora_rank), dtype=dt)
+        p["q_norm"] = norm_init("rmsnorm", m.q_lora_rank)
+        p["w_uq"] = dense_init(ks[6], (m.q_lora_rank, H, dn + dr), dtype=dt)
+    else:
+        p["w_uq"] = dense_init(ks[6], (D, H, dn + dr), dtype=dt)
+    return p
+
+
+def _queries(params, cfg, x):
+    m = cfg.mla
+    if m.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, params["w_dq"])
+        cq = norm_apply(params["q_norm"], cq, "rmsnorm", cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["w_uq"])
+    return q    # (B,S,H,dn+dr)
+
+
+def mla_prefill(params, cfg, x, positions, cache=None, cache_index=0):
+    """Full-sequence MLA (materializes per-head K/V — flash-friendly).
+
+    cache (optional): {"c_kv": (B,T,r), "k_rope": (B,T,dr)} to fill."""
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr = m.qk_nope_head_dim, m.qk_rope_head_dim
+
+    q = _queries(params, cfg, x)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv = norm_apply(params["kv_norm"], c_kv, "rmsnorm", cfg.norm_eps)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, params["w_kr"])
+
+    pos = positions if positions.ndim == 2 else positions[0]
+    cos, sin = rope_angles(pos, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, params["w_uv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    from repro.models.layers import gqa_attention
+    out = gqa_attention(q_full, k, v, causal=True, q_positions=pos)
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+
+    new_cache = None
+    if cache is not None:
+        ck = lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype),
+            (0, cache_index, 0))
+        kr = lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, cache_index, 0))
+        new_cache = {"c_kv": ck, "k_rope": kr}
+    return constrain(y, "batch", "seq", "act_embed"), new_cache
+
+
+def mla_decode(params, cfg, x, positions, cache, cache_index):
+    """Absorbed single/few-token MLA decode against the latent cache."""
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, r = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                     m.v_head_dim, m.kv_lora_rank)
+
+    q = _queries(params, cfg, x)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos = positions if positions.ndim == 2 else positions[0]
+    cos, sin = rope_angles(pos, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_new = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_new = norm_apply(params["kv_norm"], c_new, "rmsnorm", cfg.norm_eps)
+    k_rope_new = jnp.einsum("bsd,dk->bsk", x, params["w_kr"])
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    c_kv = lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, cache_index, 0))
+    k_rope = lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+        (0, cache_index, 0))
+
+    # absorb W_uk into the query:  score = (q_nope W_uk)·c_kv + q_rope·k_rope
+    q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])
+    scale = 1.0 / math.sqrt(dn + dr)
+    s_nope = jnp.einsum("bshr,btr->bhst", q_abs, c_kv,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale                       # (B,H,S,T)
+
+    T = c_kv.shape[1]
+    kv_pos = jnp.arange(T)[None, None, None, :]
+    qp = pos[:, None, :, None]
+    valid = (kv_pos <= qp) & (kv_pos < cache_index + S)
+    neg = jnp.finfo(jnp.float32).min
+    scores = jnp.where(valid, scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+
+    ctx = jnp.einsum("bhst,btr->bshr", probs, c_kv)          # latent context
+    out = jnp.einsum("bshr,rhv->bshv", ctx, params["w_uv"])  # absorb W_uv
+    y = jnp.einsum("bshv,hvd->bsd", out, params["wo"])
+    return (constrain(y, "batch", "seq", "act_embed"),
+            {"c_kv": c_kv, "k_rope": k_rope})
+
+
+def mla_cache_specs(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {"c_kv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank),
+                                         dtype),
+            "k_rope": jax.ShapeDtypeStruct((batch, max_len,
+                                            m.qk_rope_head_dim),
+                                           dtype)}

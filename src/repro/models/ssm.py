@@ -1,0 +1,141 @@
+"""Mamba (selective-state-space) block — XLA reference path.
+
+The TPU hot-loop lives in kernels/mamba_scan.py (chunked Pallas kernel); this
+module is the lowering/dry-run path and the correctness oracle's home.
+
+State for decode: {"conv": (B, d_conv-1, E), "h": (B, E, N)} — O(1) in
+sequence length, which is what makes xlstm/jamba `long_500k`-capable.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, _dtype
+from repro.parallel.sharding import constrain
+
+
+def _dims(cfg):
+    E = cfg.ssm.expand * cfg.d_model
+    N = cfg.ssm.d_state
+    R = cfg.ssm.dt_rank or max(cfg.d_model // 16, 1)
+    return E, N, R
+
+
+def mamba_init(key, cfg):
+    D = cfg.d_model
+    E, N, R = _dims(cfg)
+    dt = _dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (E, 1))
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[4], (E,), jnp.float32)
+        * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))    # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * E), dtype=dt),
+        "conv_kernel": dense_init(ks[1], (cfg.ssm.d_conv, E),
+                                  scale=1.0 / math.sqrt(cfg.ssm.d_conv),
+                                  dtype=dt),
+        "conv_bias": jnp.zeros((E,), jnp.float32),
+        "x_proj": dense_init(ks[2], (E, R + 2 * N), dtype=dt),
+        "dt_proj": dense_init(ks[3], (R, E), scale=R ** -0.5, dtype=dt),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(A),
+        "D": jnp.ones((E,), jnp.float32),
+        "out_proj": dense_init(ks[5], (E, D), dtype=dt),
+    }
+
+
+def _causal_conv(x, kernel, bias, state=None):
+    """Depthwise causal conv over time. x: (B,S,E), kernel: (W,E).
+    state: (B, W-1, E) trailing context (decode).  Returns (y, new_state)."""
+    W = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)               # (B, S+W-1, E)
+    y = sum(xp[:, i:i + x.shape[1], :] * kernel[i] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else pad
+    return y + bias.astype(x.dtype), new_state
+
+
+def selective_scan(u, dt, A, B, C, D, h0=None, chunk: int = 256):
+    """y_t = C_t·h_t + D·u_t ;  h_t = exp(dt_t A) h_{t-1} + dt_t B_t u_t.
+
+    u:(Bt,S,E) dt:(Bt,S,E) A:(E,N) B,C:(Bt,S,N) D:(E,)
+    Returns (y, h_last).  fp32 state math.
+
+    Memory design (§Perf iteration): dA/dBu are computed PER STEP inside
+    the scan — pre-materializing them is a (Bt,S,E,N) buffer, 651 GiB per
+    device for jamba prefill_32k. The time axis is chunked with
+    jax.checkpoint so the backward pass stores chunk-boundary states only.
+    """
+    Bt, S, E = u.shape
+    N = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bt, E, N), jnp.float32)
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp                # (Bt,E),(Bt,E),(Bt,N),(Bt,N)
+        dA = jnp.exp(dt_t[..., None] * A)        # (Bt,E,N)
+        h = dA * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("ben,bn->be", h, c_t)
+        return h, y
+
+    def chunk_body(h, xs):
+        return lax.scan(step, h, xs)
+
+    uf = jnp.moveaxis(u.astype(jnp.float32), 1, 0)
+    dtf = jnp.moveaxis(dt.astype(jnp.float32), 1, 0)
+    Bf = jnp.moveaxis(B.astype(jnp.float32), 1, 0)
+    Cf = jnp.moveaxis(C.astype(jnp.float32), 1, 0)
+    if S > chunk and S % chunk == 0:
+        def resh(x):
+            return x.reshape((S // chunk, chunk) + x.shape[1:])
+        body = jax.checkpoint(chunk_body, prevent_cse=False)
+        hT, ys = lax.scan(lambda h, xs: body(h, xs), h0,
+                          (resh(uf), resh(dtf), resh(Bf), resh(Cf)))
+        ys = ys.reshape((S,) + ys.shape[2:])
+    else:
+        hT, ys = chunk_body(h0, (uf, dtf, Bf, Cf))
+    y = jnp.moveaxis(ys, 0, 1) + u.astype(jnp.float32) * D
+    return y.astype(u.dtype), hT
+
+
+def mamba_apply(params, cfg, x, *, state=None):
+    """x: (B,S,D). state: {"conv","h"} or None. Returns (y, new_state)."""
+    E, N, R = _dims(cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xz = constrain(xz, "batch", None, "ffn")
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_kernel"],
+                                params["conv_bias"], conv_state)
+    xc = jax.nn.silu(xc)
+    proj = jnp.einsum("bse,ef->bsf", xc, params["x_proj"])
+    dt_r, Bm, Cm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, params["dt_proj"]).astype(jnp.float32)
+        + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    h0 = state["h"] if state is not None else None
+    y, hT = selective_scan(xc, dt, A, Bm, Cm, params["D"], h0=h0)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    conv_dt = state["conv"].dtype if state is not None else x.dtype
+    new_state = {"conv": new_conv.astype(conv_dt), "h": hT}
+    return constrain(out, "batch", "seq", "act_embed"), new_state
+
+
+def mamba_state_specs(cfg, batch: int):
+    E, N, _ = _dims(cfg)
+    W = cfg.ssm.d_conv
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {"conv": jax.ShapeDtypeStruct((batch, W - 1, E), dt),
+            "h": jax.ShapeDtypeStruct((batch, E, N), jnp.float32)}

@@ -1,0 +1,296 @@
+"""Decoder-only LM supporting every assigned architecture family.
+
+A model is (prefix_pattern, period_pattern × n_periods): the prefix is
+unrolled (heterogeneous allowed, e.g. deepseek's 3 dense layers), the body is
+``lax.scan``-ned over periods to keep HLO compact at 61-layer scale. Each
+block is (mixer, ffn) with mixer ∈ {attn, mla, mamba, mlstm, slstm} and
+ffn ∈ {mlp, moe, None}.
+
+All functions are mode-polymorphic:
+  mode="train"    — full sequence, no cache
+  mode="prefill"  — full sequence, fills the cache
+  mode="decode"   — S new tokens (usually 1) against a cache at cache_index
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mla as MLA
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+def block_init(key, cfg: ModelConfig, spec) -> Dict[str, Any]:
+    mixer, ffn = spec
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"ln1": L.norm_init(cfg.norm, cfg.d_model)}
+    if mixer == "attn":
+        p["attn"] = L.attn_init(k1, cfg)
+    elif mixer == "mla":
+        p["attn"] = MLA.mla_init(k1, cfg)
+    elif mixer == "mamba":
+        p["mixer"] = SSM.mamba_init(k1, cfg)
+    elif mixer == "mlstm":
+        p["mixer"] = XL.mlstm_init(k1, cfg)
+    elif mixer == "slstm":
+        p["mixer"] = XL.slstm_init(k1, cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn is not None:
+        p["ln2"] = L.norm_init(cfg.norm, cfg.d_model)
+        p["ffn"] = L.moe_init(k2, cfg) if ffn == "moe" else L.mlp_init(k2, cfg)
+    return p
+
+
+def block_apply(params, cfg: ModelConfig, spec, x, *, positions,
+                cache_entry, cache_index, mode: str):
+    """Returns (x, new_cache_entry, aux_loss)."""
+    mixer, ffn = spec
+    h = L.norm_apply(params["ln1"], x, cfg.norm, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    new_entry: Dict[str, Any] = {}
+
+    if mixer == "attn":
+        y, nc = L.attn_apply(params["attn"], cfg, h, positions=positions,
+                             cache=cache_entry or None,
+                             cache_index=cache_index)
+        new_entry = nc or {}
+    elif mixer == "mla":
+        if mode == "decode":
+            y, nc = MLA.mla_decode(params["attn"], cfg, h, positions,
+                                   cache_entry, cache_index)
+        else:
+            y, nc = MLA.mla_prefill(params["attn"], cfg, h, positions,
+                                    cache=cache_entry or None,
+                                    cache_index=cache_index)
+        new_entry = nc or {}
+    elif mixer == "mamba":
+        y, nc = SSM.mamba_apply(params["mixer"], cfg, h,
+                                state=cache_entry or None)
+        new_entry = nc if cache_entry is not None or mode == "prefill" else {}
+    elif mixer == "mlstm":
+        y, nc = XL.mlstm_apply(params["mixer"], cfg, h,
+                               state=cache_entry or None)
+        new_entry = nc if cache_entry is not None or mode == "prefill" else {}
+    elif mixer == "slstm":
+        y, nc = XL.slstm_apply(params["mixer"], cfg, h,
+                               state=cache_entry or None)
+        new_entry = nc if cache_entry is not None or mode == "prefill" else {}
+    else:
+        raise ValueError(mixer)
+    x = x + y
+
+    if ffn is not None:
+        h = L.norm_apply(params["ln2"], x, cfg.norm, cfg.norm_eps)
+        if ffn == "moe":
+            y, aux = L.moe_apply(params["ffn"], cfg, h)
+        else:
+            y = L.mlp_apply(params["ffn"], cfg, h)
+        x = x + y
+    return x, new_entry, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 6)
+    p: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        p["embed"] = L.embed_init(keys[0], cfg)
+    elif cfg.pos_emb == "learned":
+        p["embed"] = {"pos_embedding": L.dense_init(
+            keys[0], (cfg.max_position, cfg.d_model), scale=0.02,
+            dtype=L._dtype(cfg.dtype))}
+
+    p["prefix"] = [block_init(jax.random.fold_in(keys[1], i), cfg, spec)
+                   for i, spec in enumerate(cfg.prefix_pattern)]
+
+    def one_period(k):
+        ks = jax.random.split(k, len(cfg.period_pattern))
+        return {f"b{i}": block_init(ks[i], cfg, spec)
+                for i, spec in enumerate(cfg.period_pattern)}
+
+    period_keys = jax.random.split(keys[2], cfg.n_periods)
+    p["scan"] = jax.vmap(one_period)(period_keys)
+
+    p["final_norm"] = L.norm_init(cfg.norm, cfg.d_model)
+    if not (cfg.tie_embeddings and cfg.input_mode == "tokens"):
+        p["lm_head"] = L.dense_init(keys[3], (cfg.d_model, cfg.vocab_size),
+                                    scale=cfg.d_model ** -0.5,
+                                    dtype=L._dtype(cfg.dtype))
+    if cfg.mtp_depth:
+        p["mtp"] = {
+            "proj": L.dense_init(keys[4], (2 * cfg.d_model, cfg.d_model),
+                                 dtype=L._dtype(cfg.dtype)),
+            "norm_h": L.norm_init(cfg.norm, cfg.d_model),
+            "norm_e": L.norm_init(cfg.norm, cfg.d_model),
+            "block": block_init(keys[5], cfg, cfg.period_pattern[-1]),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _default_positions(cfg, batch, seq, cache_index):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + cache_index
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope == "mrope":
+        pos = jnp.broadcast_to(pos[None], (cfg.num_position_dims, batch, seq))
+    return pos
+
+
+def forward(params, cfg: ModelConfig, inputs, *, positions=None,
+            cache=None, cache_index=0, mode: str = "train",
+            return_hidden: bool = False):
+    """inputs: int tokens (B,S) or float embeddings (B,S,D).
+
+    cache: {"prefix": [entry...], "scan": {"b{i}": stacked-entry}} or None.
+    Returns (logits, new_cache, aux_loss[, hidden])."""
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        B, S = inputs.shape
+    else:
+        B, S = inputs.shape[:2]
+    if positions is None:
+        positions = _default_positions(cfg, B, S, cache_index)
+
+    if inputs.dtype in (jnp.int32, jnp.int64):
+        x = L.embed_apply(params["embed"], cfg, inputs, positions)
+    else:
+        x = inputs.astype(L._dtype(cfg.dtype))
+        if cfg.pos_emb == "learned":
+            pos1 = positions if positions.ndim == 2 else positions[0]
+            x = x + jnp.take(params["embed"]["pos_embedding"], pos1, axis=0)
+    x = constrain(x, "batch", "seq", "act_embed")
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prefix = []
+    for i, spec in enumerate(cfg.prefix_pattern):
+        entry = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = block_apply(params["prefix"][i], cfg, spec, x,
+                                 positions=positions, cache_entry=entry,
+                                 cache_index=cache_index, mode=mode)
+        new_prefix.append(nc)
+        aux_total = aux_total + aux
+
+    # ---- scanned body ----
+    def period_body(x, scanned):
+        pparams, pcache = scanned
+        new_entries = {}
+        aux_p = jnp.zeros((), jnp.float32)
+        for i, spec in enumerate(cfg.period_pattern):
+            entry = pcache.get(f"b{i}") if pcache else None
+            x, nc, aux = block_apply(pparams[f"b{i}"], cfg, spec, x,
+                                     positions=positions, cache_entry=entry,
+                                     cache_index=cache_index, mode=mode)
+            new_entries[f"b{i}"] = nc
+            aux_p = aux_p + aux
+        return x, (new_entries, aux_p)
+
+    body = period_body
+    if cfg.remat != "none":
+        # "dots_nb" (default for dense stacks) saves weight-matmul outputs
+        # but NOT attention scores: plain checkpoint_dots pins the fp32
+        # (L, B, H, S, S) score buffer — 25.8 GB/device for yi-9b train_4k
+        # (found via §Roofline; see EXPERIMENTS.md §Perf iteration 1).
+        policy = {
+            "dots": jax.checkpoint_policies.checkpoint_dots,
+            "dots_nb":
+                jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            "full": jax.checkpoint_policies.nothing_saveable,
+        }[cfg.remat]
+        body = jax.checkpoint(period_body, policy=policy,
+                              prevent_cse=False)
+
+    scan_cache = cache["scan"] if cache is not None else {}
+    if cfg.scan_layers:
+        x, (new_scan, auxs) = lax.scan(body, x,
+                                       (params["scan"], scan_cache))
+        aux_total = aux_total + jnp.sum(auxs)
+    else:
+        new_list = []
+        for j in range(cfg.n_periods):
+            pj = jax.tree.map(lambda a: a[j], params["scan"])
+            cj = jax.tree.map(lambda a: a[j], scan_cache) if cache else {}
+            x, (nc, aux) = body(x, (pj, cj))
+            new_list.append(nc)
+            aux_total = aux_total + aux
+        new_scan = (jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+                    if new_list and jax.tree_util.tree_leaves(new_list)
+                    else {})
+
+    hidden = x
+    x = L.norm_apply(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    if cfg.tie_embeddings and cfg.input_mode == "tokens":
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["embedding"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    logits = constrain(logits, "batch", None, "vocab")
+
+    new_cache = None
+    if cache is not None or mode == "prefill":
+        new_cache = {"prefix": new_prefix, "scan": new_scan}
+    out = (logits, new_cache, aux_total)
+    return out + (hidden,) if return_hidden else out
+
+
+def mtp_logits(params, cfg: ModelConfig, hidden, next_tokens, positions=None):
+    """DeepSeek-V3 multi-token-prediction head (depth 1): predict t_{i+2}
+    from hidden_i combined with emb(t_{i+1})."""
+    mp = params["mtp"]
+    B, S, D = hidden.shape
+    if positions is None:
+        positions = _default_positions(cfg, B, S, 0)
+    emb = jnp.take(params["embed"]["embedding"], next_tokens, axis=0)
+    h = jnp.concatenate([
+        L.norm_apply(mp["norm_h"], hidden, cfg.norm, cfg.norm_eps),
+        L.norm_apply(mp["norm_e"], emb, cfg.norm, cfg.norm_eps)], axis=-1)
+    h = jnp.einsum("bsd,df->bsf", h, mp["proj"])
+    h, _, aux = block_apply(mp["block"], cfg, cfg.period_pattern[-1], h,
+                            positions=positions, cache_entry=None,
+                            cache_index=0, mode="train")
+    h = L.norm_apply(params["final_norm"], h, cfg.norm, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        lg = jnp.einsum("bsd,vd->bsv", h, params["embed"]["embedding"])
+    else:
+        lg = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return lg, aux
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (analytic, via eval_shape — no allocation)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False,
+                 include_embedding: bool = True) -> int:
+    shapes = _param_shapes(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        spath = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                         for k in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if not include_embedding and ("embedding" in spath):
+            continue
+        if active_only and any(s in spath for s in ("e_wi", "e_wg", "e_wo")):
+            n = n * cfg.moe.top_k // max(cfg.moe.num_experts, 1)
+        total += n
+    return total

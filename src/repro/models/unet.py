@@ -1,0 +1,175 @@
+"""Latent-diffusion UNet — the served model class of the paper.
+
+ResBlocks (GroupNorm+SiLU) with timestep embedding, self+cross attention at
+the configured resolutions, text conditioning via a toy prompt encoder.
+Light variants = smaller width + 1-step sampling (SD-Turbo/SDXS analogues);
+heavy variants = wider + 50-step DDIM (SDv1.5/SDXL analogues).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config.base import DiffusionConfig
+from repro.models.efficientnet import _conv_init, _gn_init, conv, groupnorm
+
+
+def timestep_embedding(t, dim):
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10_000) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def _dense_init(key, cin, cout):
+    return jax.random.normal(key, (cin, cout), jnp.float32) / math.sqrt(cin)
+
+
+def _resblock_init(key, cin, cout, temb_dim):
+    ks = jax.random.split(key, 4)
+    p = {"gn1": _gn_init(cin), "w1": _conv_init(ks[0], 3, 3, cin, cout),
+         "temb": _dense_init(ks[1], temb_dim, cout),
+         "gn2": _gn_init(cout), "w2": _conv_init(ks[2], 3, 3, cout, cout)}
+    if cin != cout:
+        p["skip"] = _conv_init(ks[3], 1, 1, cin, cout)
+    return p
+
+
+def _resblock(p, x, temb, groups=8):
+    h = jax.nn.silu(groupnorm(x, p["gn1"]["scale"], p["gn1"]["bias"], groups))
+    h = conv(h, p["w1"])
+    h = h + (jax.nn.silu(temb) @ p["temb"])[:, None, None, :]
+    h = jax.nn.silu(groupnorm(h, p["gn2"]["scale"], p["gn2"]["bias"], groups))
+    h = conv(h, p["w2"])
+    skip = conv(x, p["skip"]) if "skip" in p else x
+    return h + skip
+
+
+def _attn_init(key, c, text_dim):
+    ks = jax.random.split(key, 6)
+    return {"gn": _gn_init(c),
+            "wq": _dense_init(ks[0], c, c), "wk": _dense_init(ks[1], c, c),
+            "wv": _dense_init(ks[2], c, c), "wo": _dense_init(ks[3], c, c),
+            "ck": _dense_init(ks[4], text_dim, c),
+            "cv": _dense_init(ks[5], text_dim, c)}
+
+
+def _attn(p, x, ctx, num_heads, groups=8):
+    """Self-attention over pixels + cross-attention to text ctx (B,L,T)."""
+    B, H, W, C = x.shape
+    h = groupnorm(x, p["gn"]["scale"], p["gn"]["bias"], groups)
+    seq = h.reshape(B, H * W, C)
+    q = seq @ p["wq"]
+    k = jnp.concatenate([seq @ p["wk"], ctx @ p["ck"]], axis=1)
+    v = jnp.concatenate([seq @ p["wv"], ctx @ p["cv"]], axis=1)
+    hd = C // num_heads
+
+    def split(a):
+        return a.reshape(B, -1, num_heads, hd).transpose(0, 2, 1, 3)
+    qh, kh, vh = split(q), split(k), split(v)
+    att = jax.nn.softmax(
+        jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(hd), axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
+    out = out.transpose(0, 2, 1, 3).reshape(B, H * W, C) @ p["wo"]
+    return x + out.reshape(B, H, W, C)
+
+
+def init_unet(key, cfg: DiffusionConfig):
+    ks = jax.random.split(key, 64)
+    ki = iter(range(64))
+    c0 = cfg.base_channels
+    temb_dim = 4 * c0
+    p = {
+        "temb1": _dense_init(ks[next(ki)], c0, temb_dim),
+        "temb2": _dense_init(ks[next(ki)], temb_dim, temb_dim),
+        "text_embed": jax.random.normal(
+            ks[next(ki)], (1024, cfg.text_dim), jnp.float32) * 0.02,
+        "in": _conv_init(ks[next(ki)], 3, 3, cfg.in_channels, c0),
+    }
+    res = cfg.image_size
+    chans = [c0]
+    cin = c0
+    downs = []
+    for lvl, mult in enumerate(cfg.channel_mults):
+        cout = c0 * mult
+        level = {"blocks": [], "attns": []}
+        for _ in range(cfg.num_res_blocks):
+            level["blocks"].append(
+                _resblock_init(ks[next(ki)], cin, cout, temb_dim))
+            level["attns"].append(
+                _attn_init(ks[next(ki)], cout, cfg.text_dim)
+                if res in cfg.attn_resolutions else None)
+            cin = cout
+            chans.append(cin)
+        if lvl < len(cfg.channel_mults) - 1:
+            level["down"] = _conv_init(ks[next(ki)], 3, 3, cin, cin)
+            chans.append(cin)
+            res //= 2
+        downs.append(level)
+    p["downs"] = downs
+    p["mid1"] = _resblock_init(ks[next(ki)], cin, cin, temb_dim)
+    p["mid_attn"] = _attn_init(ks[next(ki)], cin, cfg.text_dim)
+    p["mid2"] = _resblock_init(ks[next(ki)], cin, cin, temb_dim)
+    ups = []
+    for lvl, mult in reversed(list(enumerate(cfg.channel_mults))):
+        cout = c0 * mult
+        level = {"blocks": [], "attns": []}
+        for _ in range(cfg.num_res_blocks + 1):
+            level["blocks"].append(
+                _resblock_init(ks[next(ki)], cin + chans.pop(), cout,
+                               temb_dim))
+            level["attns"].append(
+                _attn_init(ks[next(ki)], cout, cfg.text_dim)
+                if res in cfg.attn_resolutions else None)
+            cin = cout
+        if lvl > 0:
+            level["up"] = _conv_init(ks[next(ki)], 3, 3, cin, cin)
+            res *= 2
+        ups.append(level)
+    p["ups"] = ups
+    p["out_gn"] = _gn_init(cin)
+    p["out"] = _conv_init(ks[next(ki)], 3, 3, cin, cfg.in_channels)
+    return p
+
+
+def apply_unet(params, cfg: DiffusionConfig, x, t, prompt_tokens):
+    """x: (B,H,W,Cin) noisy latent; t: (B,) timesteps in [0, 1000);
+    prompt_tokens: (B, L) int32. Returns epsilon prediction."""
+    temb = timestep_embedding(t, cfg.base_channels)
+    temb = jax.nn.silu(temb @ params["temb1"]) @ params["temb2"]
+    ctx = jnp.take(params["text_embed"], prompt_tokens % 1024, axis=0)
+
+    h = conv(x, params["in"])
+    skips = [h]
+    res = cfg.image_size
+    for lvl, level in enumerate(params["downs"]):
+        for bp, ap in zip(level["blocks"], level["attns"]):
+            h = _resblock(bp, h, temb)
+            if ap is not None:
+                h = _attn(ap, h, ctx, cfg.num_heads)
+            skips.append(h)
+        if "down" in level:
+            h = conv(h, level["down"], stride=2)
+            skips.append(h)
+            res //= 2
+    h = _resblock(params["mid1"], h, temb)
+    h = _attn(params["mid_attn"], h, ctx, cfg.num_heads)
+    h = _resblock(params["mid2"], h, temb)
+    for level in params["ups"]:
+        for bp, ap in zip(level["blocks"], level["attns"]):
+            h = _resblock(bp, jnp.concatenate([h, skips.pop()], axis=-1),
+                          temb)
+            if ap is not None:
+                h = _attn(ap, h, ctx, cfg.num_heads)
+        if "up" in level:
+            B, H, W, C = h.shape
+            h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
+            h = conv(h, level["up"])
+    h = jax.nn.silu(groupnorm(h, params["out_gn"]["scale"],
+                              params["out_gn"]["bias"], 8))
+    return conv(h, params["out"])

@@ -1,0 +1,222 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponentially gated — parallelizable)
+and sLSTM (scalar memory with recurrent gating — sequential).
+
+XLA reference path here; the chunkwise-parallel mLSTM Pallas kernel lives in
+kernels/mlstm_chunk.py. Decode state is O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, norm_apply, _dtype
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def _mlstm_dims(cfg):
+    E = int(cfg.xlstm.proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    dh = E // H
+    return E, H, dh
+
+
+def mlstm_init(key, cfg):
+    D = cfg.d_model
+    E, H, dh = _mlstm_dims(cfg)
+    dt = _dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "wi_up": dense_init(ks[0], (D, 2 * E), dtype=dt),     # x and z branch
+        "conv_kernel": dense_init(ks[1], (cfg.xlstm.conv_kernel, E),
+                                  scale=cfg.xlstm.conv_kernel ** -0.5,
+                                  dtype=dt),
+        "conv_bias": jnp.zeros((E,), jnp.float32),
+        "wq_m": dense_init(ks[2], (E, E), dtype=dt),
+        "wk_m": dense_init(ks[3], (E, E), dtype=dt),
+        "wv_m": dense_init(ks[4], (E, E), dtype=dt),
+        # input/forget gates are scalar per head, projected from x-branch
+        "w_if": dense_init(ks[5], (E, 2 * H), dtype=dt),
+        "i_bias": jnp.zeros((H,), jnp.float32),
+        "f_bias": jnp.linspace(3.0, 6.0, cfg.num_heads, dtype=jnp.float32),
+        "ogate_scale": jnp.ones((E,), jnp.float32),           # learnable skip
+        "out_proj": dense_init(ks[6], (E, D), dtype=dt),
+    }
+
+
+def mlstm_scan(q, k, v, i_pre, f_pre, state=None):
+    """Stabilized exponentially-gated matrix-memory recurrence.
+
+    q,k,v: (B,S,H,dh); i_pre,f_pre: (B,S,H) pre-activations.
+    state: {"C": (B,H,dh,dh), "n": (B,H,dh), "m": (B,H)}.
+    Returns (h: (B,S,H,dh), new_state)."""
+    B, S, H, dh = q.shape
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))      # (B,S,H)
+    ipre = i_pre.astype(jnp.float32)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, lf, ii = inp                              # (B,H,dh)...
+        m_new = jnp.maximum(lf + m, ii)
+        fg = jnp.exp(lf + m - m_new)                          # (B,H)
+        ig = jnp.exp(ii - m_new)
+        C = fg[..., None, None] * C \
+            + ig[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = fg[..., None] * n + ig[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (qf, kf, vf, logf, ipre))
+    # chunked + checkpointed: the naive scan's backward saves the (B,H,
+    # dh,dh) matrix memory at EVERY step — 149 GiB/device for xlstm-125m
+    # train_4k. Chunking stores boundary states only (§Perf iteration).
+    chunk = 256
+
+    def chunk_body(carry, cxs):
+        return lax.scan(step, carry, cxs)
+
+    if S > chunk and S % chunk == 0:
+        def resh(x):
+            return x.reshape((S // chunk, chunk) + x.shape[1:])
+        body = jax.checkpoint(chunk_body, prevent_cse=False)
+        (CT, nT, mT), hs = lax.scan(lambda c, cxs: body(c, cxs),
+                                    (C0, n0, m0),
+                                    tuple(resh(a) for a in xs))
+        hs = hs.reshape((S,) + hs.shape[2:])
+    else:
+        (CT, nT, mT), hs = chunk_body((C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1)                                # (B,S,H,dh)
+    return h, {"C": CT, "n": nT, "m": mT}
+
+
+def mlstm_apply(params, cfg, x, *, state=None):
+    """x: (B,S,D) -> (y, new_state). state: {"conv", "C", "n", "m"}."""
+    from repro.models.ssm import _causal_conv
+    B, S, D = x.shape
+    E, H, dh = _mlstm_dims(cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["wi_up"])
+    up = constrain(up, "batch", None, "ffn")
+    xb, z = jnp.split(up, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = _causal_conv(xb, params["conv_kernel"],
+                                params["conv_bias"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = jnp.einsum("bse,ef->bsf", xc, params["wq_m"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", xc, params["wk_m"]).reshape(B, S, H, dh) \
+        * (dh ** -0.5)
+    v = jnp.einsum("bse,ef->bsf", xb, params["wv_m"]).reshape(B, S, H, dh)
+    gates = jnp.einsum("bse,eg->bsg", xc, params["w_if"]).reshape(B, S, H, 2)
+    i_pre = gates[..., 0] + params["i_bias"]
+    f_pre = gates[..., 1] + params["f_bias"]
+    mstate = None if state is None else \
+        {"C": state["C"], "n": state["n"], "m": state["m"]}
+    h, new_m = mlstm_scan(q, k, v, i_pre, f_pre, mstate)
+    h = h.reshape(B, S, E).astype(x.dtype)
+    h = h + xc * params["ogate_scale"].astype(x.dtype)        # learnable skip
+    y = h * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    conv_dt = state["conv"].dtype if state is not None else x.dtype
+    new_state = {"conv": new_conv.astype(conv_dt), **new_m}
+    return constrain(out, "batch", "seq", "act_embed"), new_state
+
+
+def mlstm_state_specs(cfg, batch: int):
+    E, H, dh = _mlstm_dims(cfg)
+    W = cfg.xlstm.conv_kernel
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {"conv": jax.ShapeDtypeStruct((batch, W - 1, E), dt),
+            "C": jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+            "n": jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+            "m": jax.ShapeDtypeStruct((batch, H), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_init(key, cfg):
+    D = cfg.d_model
+    H = cfg.num_heads
+    dh = D // H
+    dt = _dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        # 4 gates (i, f, z, o) from input, + block-diagonal recurrent weights
+        "w_gates": dense_init(ks[0], (D, 4 * D), dtype=dt),
+        "r_gates": dense_init(ks[1], (H, dh, 4 * dh),
+                              scale=dh ** -0.5, dtype=dt),
+        "i_bias": jnp.zeros((D,), jnp.float32),
+        "f_bias": jnp.ones((D,), jnp.float32) * 3.0,
+        "z_bias": jnp.zeros((D,), jnp.float32),
+        "o_bias": jnp.zeros((D,), jnp.float32),
+        "up_proj": dense_init(ks[2], (D, int(cfg.xlstm.slstm_proj_factor * D)),
+                              dtype=dt),
+        "down_proj": dense_init(jax.random.fold_in(ks[2], 1),
+                                (int(cfg.xlstm.slstm_proj_factor * D), D),
+                                dtype=dt),
+    }
+
+
+def slstm_apply(params, cfg, x, *, state=None):
+    """Scalar-memory LSTM with exponential gating + per-head recurrence.
+
+    state: {"c","n","m","h"} each (B, D)."""
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    if state is None:
+        z = jnp.zeros((B, D), jnp.float32)
+        state = {"c": z, "n": z, "m": jnp.full((B, D), -jnp.inf, jnp.float32),
+                 "h": z}
+    gx = jnp.einsum("bsd,dg->bsg", x, params["w_gates"]).astype(jnp.float32)
+    gx = gx + jnp.concatenate([params["i_bias"], params["f_bias"],
+                               params["z_bias"], params["o_bias"]])
+
+    rw = params["r_gates"].astype(jnp.float32)                # (H,dh,4dh)
+
+    def step(carry, g_t):
+        c, n, m, h = carry
+        hh = h.reshape(B, H, dh)
+        rec = jnp.einsum("bhd,hdg->bhg", hh, rw).reshape(B, 4 * D)
+        g = g_t + rec
+        ip, fp, zp, op = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(fp) + m, ip)
+        ig = jnp.exp(ip - m_new)
+        fg = jnp.exp(jax.nn.log_sigmoid(fp) + m - m_new)
+        c = fg * c + ig * jnp.tanh(zp)
+        n = fg * n + ig
+        h = jax.nn.sigmoid(op) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h), h
+
+    carry0 = (state["c"], state["n"], state["m"], state["h"])
+    (cT, nT, mT, hT), hs = lax.scan(
+        step, carry0, jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                # (B,S,D)
+    y = jnp.einsum("bsf,fd->bsd",
+                   jax.nn.gelu(jnp.einsum("bsd,df->bsf", y,
+                                          params["up_proj"])),
+                   params["down_proj"])
+    new_state = {"c": cT, "n": nT, "m": mT, "h": hT}
+    return constrain(y, "batch", "seq", "act_embed"), new_state
+
+
+def slstm_state_specs(cfg, batch: int):
+    D = cfg.d_model
+    s = jax.ShapeDtypeStruct((batch, D), jnp.float32)
+    return {"c": s, "n": s, "m": s, "h": s}

@@ -1,0 +1,65 @@
+"""GPipe-style pipeline parallelism via shard_map + ppermute.
+
+Each rank of the ``stage`` mesh axis holds one stage's parameters;
+microbatches stream through the ring, activations hop stage→stage+1 with
+``ppermute`` each tick. total ticks = n_micro + n_stages - 1; bubble
+fraction = (n_stages-1)/ticks. Used as an optional layout for training
+(DESIGN.md §5 — the assigned shapes fit with DP×TP×EP, so PP is a feature,
+exercised at small scale in tests/test_pipeline.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def run_pipeline(stage_fn: Callable, stage_params, microbatches, *,
+                 mesh: Mesh, axis: str = "stage"):
+    """stage_fn(params_i, x) -> x, applied by every stage in sequence.
+
+    stage_params: pytree with leading axis = n_stages (stage i's params).
+    microbatches: (n_micro, ...) — per-microbatch inputs (same shape out).
+    Returns (n_micro, ...) outputs after all stages.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = microbatches.shape[0]
+    ticks = n_micro + n_stages - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def worker(params, xs):
+        params = jax.tree.map(lambda a: a[0], params)   # this stage's slice
+        sid = jax.lax.axis_index(axis)
+        buf = jnp.zeros_like(xs[0])                     # incoming activation
+        outs = jnp.zeros_like(xs)
+
+        def tick(t, carry):
+            buf, outs = carry
+            mb = t - sid                                # microbatch id here
+            active = (mb >= 0) & (mb < n_micro)
+            feed = xs[jnp.clip(mb, 0, n_micro - 1)]
+            x = jnp.where(sid == 0, feed, buf)
+            y = stage_fn(params, x)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            # last stage records its result; others pass it on
+            write = active & (sid == n_stages - 1)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(write, y, outs[jnp.clip(mb, 0, n_micro - 1)]),
+                jnp.clip(mb, 0, n_micro - 1), 0)
+            buf = jax.lax.ppermute(y, axis, perm)
+            return buf, outs
+
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (buf, outs))
+        # only the last stage holds real outputs; share them with the ring
+        outs = jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    spec_params = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = shard_map(worker, mesh=mesh,
+                   in_specs=(spec_params, P()), out_specs=P(),
+                   check_rep=False)
+    return fn(stage_params, microbatches)

@@ -1,0 +1,199 @@
+"""Logical-axis sharding: models annotate activations/params with *logical*
+axis names; a rules table maps them to mesh axes. On CPU tests no mesh is
+active and every annotation is a no-op.
+
+Usage:
+    with sharding_rules(RULES_TP), mesh:
+        y = model.forward(...)          # constrain() calls inside take effect
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _current_rules() -> Optional[Mapping[str, MeshAxes]]:
+    return getattr(_state, "rules", None)
+
+
+def _current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(rules: Mapping[str, MeshAxes], mesh: Optional[Mesh] = None):
+    prev = (_current_rules(), _current_mesh())
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def logical_to_pspec(logical_axes: Sequence[Optional[str]],
+                     rules: Mapping[str, MeshAxes]) -> P:
+    return P(*[rules.get(a) if a is not None else None for a in logical_axes])
+
+
+def constrain(x, *logical_axes: Optional[str]):
+    """Pin activation sharding by logical axis names (no-op without rules).
+    Dims not divisible by their mesh-axis product fall back to replicated."""
+    rules = _current_rules()
+    if rules is None:
+        return x
+    spec = logical_to_pspec(logical_axes, rules)
+    mesh = _current_mesh()
+    if mesh is None:
+        return jax.lax.with_sharding_constraint(x, spec)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = list(tuple(spec))
+    parts = parts[:x.ndim] + [None] * (x.ndim - len(parts))
+    safe = []
+    used = set()
+    for d, entry in enumerate(parts):
+        if entry is None:
+            safe.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        avail = tuple(a for a in axes if a not in used)
+        chosen = None
+        for start in range(len(avail)):     # longest dividing unused suffix
+            sub = avail[start:]
+            prod = 1
+            for a in sub:
+                prod *= sizes[a]
+            if prod > 1 and x.shape[d] % prod == 0:
+                chosen = sub if len(sub) > 1 else sub[0]
+                used.update(sub)
+                break
+        safe.append(chosen)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*safe)))
+
+
+# ---------------------------------------------------------------------------
+# Standard rule tables.  data axes = ("pod", "data") on the multi-pod mesh.
+# ---------------------------------------------------------------------------
+def make_rules(*, data_axes: Tuple[str, ...] = ("data",),
+               model_axis: str = "model",
+               fsdp: bool = False,
+               sequence_parallel: bool = False,
+               serve: bool = False) -> Mapping[str, MeshAxes]:
+    """Logical-axis → mesh-axis mapping.
+
+    batch   — global batch dim                → all data axes
+    seq     — sequence dim (activations)      → model axis when SP is on
+    embed   — d_model dim of *weights*        → data axes when FSDP is on
+    heads/kv_heads/ffn/vocab                  → model axis (tensor parallel)
+    experts — model axis for training; ALL axes for serving (full EP, the
+              DeepSeek deployment style: 1 expert slice per chip, token
+              all-to-all, no weight gathering on the decode path)
+    cache_seq — cache sequence dim (sequence-sharded KV for decode)
+    """
+    da = data_axes if len(data_axes) > 1 else data_axes[0]
+    all_axes = tuple(data_axes) + (model_axis,)
+    return {
+        "batch": da,
+        "seq": model_axis if sequence_parallel else None,
+        "embed": None if serve else (da if fsdp else None),
+        "act_embed": None,
+        "heads": model_axis,
+        "kv_heads": model_axis,
+        "ffn": model_axis,
+        "experts": all_axes if serve else model_axis,
+        # serving shards expert FFN width over the data axes too (small-E
+        # archs like llama4's 16 experts can't cover 256 chips on E alone);
+        # the axis-conflict resolution in named_safe keeps E and F disjoint
+        "expert_ffn": da if serve else None,
+        "vocab": model_axis,
+        "expert_cap": None,
+        "state": None,
+        "cache_seq": model_axis,
+    }
+
+
+def param_pspec(path: str, shape: Tuple[int, ...],
+                rules: Mapping[str, MeshAxes]) -> P:
+    """Map a parameter (by its pytree path) to a PartitionSpec.
+
+    Conventions (see models/*.py init functions):
+      embedding table   (V, D)        -> (vocab, embed)
+      lm head           (D, V)        -> (embed, vocab)
+      attn q/kv proj    (D, H, hd)    -> (embed, heads, None)
+      attn out proj     (H, hd, D)    -> (heads, None, embed)
+      mla latent projs  (D, r)/(r, ..)-> embed on the d_model-sized dim
+      mlp in            (D, F)        -> (embed, ffn)
+      mlp out           (F, D)        -> (ffn, embed)
+      moe experts       (E, D, F)     -> (experts, embed|None, ffn)... E-major
+      scan-stacked params gain a leading None (layer) axis.
+    """
+    leaf = path.split("/")[-1]
+    n = len(shape)
+
+    def spec(*axes):
+        # pad leading axes with None for scan stacking
+        axes = (None,) * (n - len(axes)) + tuple(axes)
+        return P(*[rules.get(a) if a else None for a in axes])
+
+    if leaf in ("scale", "bias", "A_log", "D", "dt_bias", "conv_bias",
+                "i_bias", "f_bias", "o_bias", "z_bias"):
+        return P(*([None] * n))
+    if leaf == "embedding":
+        return spec("vocab", "embed")
+    if leaf == "pos_embedding":
+        return spec(None, "embed")
+    if leaf == "lm_head":
+        return spec("embed", "vocab")
+    if leaf in ("wq", "wk", "wv"):
+        return spec("embed", "heads", None)
+    if leaf == "wo":
+        return spec("heads", None, "embed")
+    if leaf in ("w_dq", "w_dkv"):                 # MLA down-projections
+        return spec("embed", None)
+    if leaf in ("w_uq", "w_uk", "w_uv"):          # MLA up-projections
+        return spec(None, "heads", None)
+    if leaf == "w_qr":
+        return spec(None, "heads", None)
+    if leaf == "w_kr":
+        return spec("embed", None)
+    if leaf in ("wi", "wg"):
+        return spec("embed", "ffn")
+    if leaf == "wo_mlp":
+        return spec("ffn", "embed")
+    if leaf == "router":
+        return spec("embed", "experts")
+    if leaf in ("e_wi", "e_wg"):                  # (E, D, F): EP on experts,
+        return spec("experts", "embed", "expert_ffn")  # FSDP on d_model,
+    if leaf == "e_wo":                            # (E, F, D)   F for serving
+        return spec("experts", "expert_ffn", "embed")
+    if leaf in ("in_proj", "x_proj", "dt_proj", "out_proj",
+                "wi_up", "wq_m", "wk_m", "wv_m", "w_if", "w_gates"):
+        # ssm / xlstm projections: shard the larger (inner) dim on model axis
+        if n >= 2:
+            inner = "ffn"
+            if leaf in ("out_proj", "wo_m"):
+                return spec("ffn", "embed")
+            return spec("embed", inner)
+        return P(*([None] * n))
+    if leaf == "conv_kernel":
+        return P(*([None] * n))
+    return P(*([None] * n))
+
+
+def param_pspecs(params, rules) -> object:
+    """PSpec pytree matching ``params`` (works on ShapeDtypeStructs too)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        spath = "/".join(getattr(k, "key", getattr(k, "name", str(k)))
+                         for k in path)
+        specs.append(param_pspec(spath, leaf.shape, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)

@@ -1,0 +1,106 @@
+"""The paper's comparison systems (Table 1) as simulator configurations.
+
+  Clipper-Light     static, query-agnostic, all-light
+  Clipper-Heavy     static, query-agnostic, all-heavy
+  Proteus           dynamic allocation, RANDOM routing (query-agnostic)
+  DiffServe-Static  query-aware cascade, provisioned for peak, fixed t
+  DiffServe         query-aware + dynamic MILP (this paper)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.config.base import ServingConfig
+from repro.core.allocator import AllocatorOptions
+from repro.core.confidence import (DeferralProfile,
+                                   synthetic_confidence_scores)
+from repro.core.milp import AllocationPlan, solve_allocation
+from repro.serving.simulator import SimConfig, Simulator, SimResult, HEAVY
+from repro.serving.trace import Trace
+
+BASELINES = ("clipper-light", "clipper-heavy", "proteus",
+             "diffserve-static", "diffserve")
+
+
+def make_profile(serving: ServingConfig, seed: int = 0,
+                 uniform: bool = False) -> DeferralProfile:
+    rng = np.random.default_rng(seed)
+    if uniform:                      # Proteus: random routing => f(t) = t
+        return DeferralProfile(rng.random(5000))
+    return DeferralProfile(synthetic_confidence_scores(
+        rng, 5000, serving.cascade.easy_fraction))
+
+
+def run_baseline(name: str, trace: Trace, serving: ServingConfig,
+                 *, seed: int = 0, sim_overrides: Optional[dict] = None,
+                 overprovision: Optional[float] = None) -> SimResult:
+    name = name.lower()
+    if overprovision is not None:
+        serving = dataclasses.replace(serving, overprovision=overprovision)
+    peak = float(np.max(trace.qps))
+    sim_kw = dict(seed=seed)
+    sim_kw.update(sim_overrides or {})
+    rng = np.random.default_rng(seed + 1)
+
+    if name == "clipper-light":
+        profile = make_profile(serving, seed)
+        plan = solve_allocation(serving.cascade, serving, profile, peak,
+                                fixed_threshold=0.0,
+                                num_workers=serving.num_workers)
+        plan = dataclasses.replace(plan, x1=serving.num_workers, x2=0,
+                                   threshold=0.0)
+        sim = Simulator(serving, profile,
+                        SimConfig(router="random", fixed_plan=plan, **sim_kw))
+    elif name == "clipper-heavy":
+        profile = make_profile(serving, seed)
+        c = serving.cascade
+        # largest batch whose execution latency still fits the SLO
+        feas = [b for b in serving.batch_choices
+                if c.heavy_profile.exec_latency(b) <= c.slo_s]
+        b2 = max(feas) if feas else min(serving.batch_choices)
+        plan = AllocationPlan(x1=0, x2=serving.num_workers, b1=1, b2=b2,
+                              threshold=1.0, expected_latency=
+                              c.heavy_profile.exec_latency(b2),
+                              feasible=True)
+        sim = Simulator(serving, profile,
+                        SimConfig(router="random", arrival_stage=HEAVY,
+                                  fixed_plan=plan, **sim_kw))
+    elif name == "proteus":
+        profile = make_profile(serving, seed, uniform=True)
+        sim = Simulator(serving, profile,
+                        SimConfig(router="random", **sim_kw),
+                        confidence_fn=lambda n: rng.random(n))
+    elif name == "diffserve-static":
+        # provisioned exactly for nominal peak (no burst margins, fixed
+        # threshold): good quality off-peak, but bursts above nominal peak
+        # produce violations it cannot react to (paper Fig. 5: up to 19%
+        # at peak for the static variant)
+        profile = make_profile(serving, seed)
+        s_nomargin = dataclasses.replace(serving, rho_light=1.0,
+                                         rho_heavy=1.0)
+        plan = solve_allocation(serving.cascade, s_nomargin, profile, peak,
+                                num_workers=serving.num_workers)
+        sim = Simulator(serving, profile,
+                        SimConfig(router="discriminator", fixed_plan=plan,
+                                  **sim_kw))
+    elif name == "diffserve":
+        profile = make_profile(serving, seed)
+        sim = Simulator(serving, profile,
+                        SimConfig(router="discriminator", **sim_kw))
+    else:
+        raise KeyError(f"unknown baseline {name!r}; known {BASELINES}")
+    return sim.run(trace)
+
+
+def run_ablation(mode: str, trace: Trace, serving: ServingConfig,
+                 *, seed: int = 0, **alloc_kw) -> SimResult:
+    """Resource-allocation ablations (paper §4.5): static_threshold,
+    aimd_batching, no_queuing_model."""
+    profile = make_profile(serving, seed)
+    sim = Simulator(serving, profile, SimConfig(router="discriminator",
+                                                seed=seed),
+                    allocator_options=AllocatorOptions(mode=mode, **alloc_kw))
+    return sim.run(trace)

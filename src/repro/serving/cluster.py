@@ -1,0 +1,79 @@
+"""Cluster mode: DiffServe "workers" as TP slices of a TPU pod mesh.
+
+On real hardware each worker is a ``worker_tp_size``-chip slice of the
+``model`` axis; the allocator's plan maps onto slices of the pod. On this
+CPU container the same code runs with 1 device and toy models — the point
+is the interface and the measured-profile path (``measure_profile`` builds
+e(b) tables by timing the real jitted cascade, replacing the paper's
+offline A100 profiling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import CascadeConfig, LatencyProfile, ServingConfig
+from repro.core.cascade import DiffusionCascade
+
+
+@dataclasses.dataclass
+class WorkerSlice:
+    """A TP slice of the pod assigned to one model variant."""
+    wid: int
+    role: Optional[str] = None
+    devices: tuple = ()
+
+
+class ClusterRuntime:
+    """Executes real batched cascade queries; measures execution profiles."""
+
+    def __init__(self, cascade: DiffusionCascade, serving: ServingConfig):
+        self.cascade = cascade
+        self.serving = serving
+        n = len(jax.devices())
+        tp = max(serving.worker_tp_size, 1)
+        self.slices: List[WorkerSlice] = [
+            WorkerSlice(wid=i,
+                        devices=tuple(jax.devices()[(i * tp) % n:
+                                                    (i * tp) % n + tp]))
+            for i in range(serving.num_workers)]
+
+    def measure_profile(self, batches=(1, 2, 4), prompt_len: int = 8,
+                        repeats: int = 2) -> Dict[str, LatencyProfile]:
+        """Time the real light/heavy samplers → LatencyProfile fits."""
+        out = {}
+        for name, fn, params in (
+                ("light", self.cascade._light, self.cascade.light_params),
+                ("heavy", self.cascade._heavy, self.cascade.heavy_params)):
+            ts = []
+            for b in batches:
+                toks = jnp.zeros((b, prompt_len), jnp.int32)
+                key = jax.random.PRNGKey(0)
+                fn(params, key, toks)[0].block_until_ready() \
+                    if hasattr(fn(params, key, toks), "__getitem__") else None
+                best = min(_time_call(fn, params, key, toks)
+                           for _ in range(repeats))
+                ts.append((b, best))
+            base = ts[0][1]
+            if len(ts) > 1:
+                marg = max((ts[-1][1] - base) / (ts[-1][0] - 1), 1e-4)
+            else:
+                marg = base * 0.5
+            out[name] = LatencyProfile(base_s=base, marginal_s=marg)
+        return out
+
+    def serve_batch(self, key, prompt_tokens, threshold: float):
+        return self.cascade.run_batch(key, prompt_tokens, threshold)
+
+
+def _time_call(fn, *args):
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.tree.map(lambda x: x.block_until_ready()
+                 if hasattr(x, "block_until_ready") else x, out)
+    return time.perf_counter() - t0

@@ -1,0 +1,104 @@
+"""Fault tolerance for the serving plane.
+
+* ``snapshot``/``restore`` — full simulator/controller state (queues,
+  in-flight work, stats, RNG, deferral profile) with atomic writes; a
+  restored run continues deterministically (property-tested).
+* ``FailureInjector`` — Poisson worker failures with repair times.
+* Failure *detection* is heartbeat-based in the controller (see
+  simulator._check_heartbeats); recovery re-enqueues lost queries and
+  re-solves the MILP with the reduced worker count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import tempfile
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.serving.simulator import Simulator
+
+
+def snapshot(sim: Simulator, path: str) -> None:
+    state = {
+        "now": sim.now,
+        "threshold": sim.threshold,
+        "workers": sim.workers,
+        "events": sim._events,
+        "eid_next": next(sim._eid),
+        "result": sim.result,
+        "arrivals_window": sim._arrivals_window,
+        "recent_defer": sim._recent_defer,
+        "active_S": sim._active_S,
+        "rng_state": sim.rng.bit_generator.state,
+        "profile_scores": list(sim.profile._scores),
+        "rm_demand": sim.rm._demand_ewma,
+    }
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            pickle.dump(state, f)
+        os.replace(tmp, path)          # atomic
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore(sim: Simulator, path: str) -> Simulator:
+    """Load a snapshot into a freshly-constructed Simulator (same configs)."""
+    import itertools
+    with open(path, "rb") as f:
+        state = pickle.load(f)
+    sim.now = state["now"]
+    sim.threshold = state["threshold"]
+    sim.workers = state["workers"]
+    sim._events = state["events"]
+    sim._eid = itertools.count(state["eid_next"])
+    sim.result = state["result"]
+    sim._arrivals_window = state["arrivals_window"]
+    sim._recent_defer = state["recent_defer"]
+    sim._active_S = state["active_S"]
+    sim.rng.bit_generator.state = state["rng_state"]
+    sim.profile._scores = state["profile_scores"]
+    sim.rm._demand_ewma = state["rm_demand"]
+    return sim
+
+
+def resume(sim: Simulator, end_t: float):
+    """Continue a restored simulation until the event queue drains."""
+    import heapq
+    while sim._events and sim._events[0][0] <= end_t:
+        t, kind, _, payload = heapq.heappop(sim._events)
+        sim.now = t
+        if kind == sim.ARRIVAL:
+            sim._on_arrival(payload)
+        elif kind == sim.BATCH_DONE:
+            sim._on_batch_done(payload)
+        elif kind == sim.CONTROL:
+            sim._on_control()
+        elif kind == sim.FAIL:
+            sim._on_fail(*payload)
+        elif kind == sim.RECOVER:
+            sim._on_recover(payload)
+        elif kind == sim.SCALE:
+            sim._on_scale(payload)
+    return sim.result
+
+
+def poisson_failures(rng: np.random.Generator, num_workers: int,
+                     duration_s: float, mtbf_s: float = 600.0,
+                     repair_s: Tuple[float, float] = (20.0, 60.0)
+                     ) -> List[Tuple[float, int, float]]:
+    """Failure schedule: exponential inter-failure times per worker."""
+    events = []
+    for wid in range(num_workers):
+        t = float(rng.exponential(mtbf_s))
+        while t < duration_s:
+            dur = float(rng.uniform(*repair_s))
+            events.append((t, wid, dur))
+            t += dur + float(rng.exponential(mtbf_s))
+    return sorted(events)

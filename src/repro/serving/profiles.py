@@ -1,0 +1,57 @@
+"""Latency/throughput profiles and the paper's three cascades.
+
+Profiled numbers are the paper's A100-80GB measurements (§4.1):
+  SD-Turbo  ~0.10 s/img (1 step)     SDXS ~0.05 s (1 step)
+  SDv1.5    ~1.78 s (50 steps)       SDXL-Lightning ~0.5 s (2 steps)
+  SDXL      ~6 s (50 steps)          discriminator ~10 ms
+Batch scaling: diffusion latency grows near-linearly in batch with a
+sub-linear startup term (profiled marginal costs below reproduce the
+paper's 4.6x SDXL-vs-Lightning gap at batch 16).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.config.base import CascadeConfig, LatencyProfile, ServingConfig
+
+# model -> e(b) = base + marginal*(b-1)
+MODEL_PROFILES: Dict[str, LatencyProfile] = {
+    "sd-turbo": LatencyProfile(0.10, 0.055),
+    "sdxs": LatencyProfile(0.05, 0.028),
+    "sdv1.5": LatencyProfile(1.78, 0.95),
+    "sdxl-lightning": LatencyProfile(0.50, 0.30),
+    "sdxl": LatencyProfile(6.00, 3.40),
+}
+
+DISCRIMINATOR_LATENCY_S = {"efficientnet_s": 0.010, "resnet34": 0.002,
+                           "vit_b16": 0.005}
+
+CASCADES: Dict[str, CascadeConfig] = {
+    # Cascade 1: SD-Turbo -> SDv1.5, SLO 5 s, MS-COCO 512x512
+    "sdturbo": CascadeConfig(
+        name="sdturbo", light="sd-turbo", heavy="sdv1.5", slo_s=5.0,
+        light_profile=MODEL_PROFILES["sd-turbo"],
+        heavy_profile=MODEL_PROFILES["sdv1.5"],
+        fid_all_heavy=18.55, fid_all_light=22.6, fid_best_mix=17.9,
+        best_mix_defer_frac=0.65, easy_fraction=0.35),
+    # Cascade 2: SDXS -> SDv1.5, SLO 5 s
+    "sdxs": CascadeConfig(
+        name="sdxs", light="sdxs", heavy="sdv1.5", slo_s=5.0,
+        light_profile=MODEL_PROFILES["sdxs"],
+        heavy_profile=MODEL_PROFILES["sdv1.5"],
+        fid_all_heavy=18.55, fid_all_light=24.1, fid_best_mix=18.1,
+        best_mix_defer_frac=0.70, easy_fraction=0.25),
+    # Cascade 3: SDXL-Lightning -> SDXL, SLO 15 s, DiffusionDB 1024x1024
+    "sdxlltn": CascadeConfig(
+        name="sdxlltn", light="sdxl-lightning", heavy="sdxl", slo_s=15.0,
+        light_profile=MODEL_PROFILES["sdxl-lightning"],
+        heavy_profile=MODEL_PROFILES["sdxl"],
+        fid_all_heavy=21.0, fid_all_light=27.3, fid_best_mix=20.3,
+        best_mix_defer_frac=0.60, easy_fraction=0.30),
+}
+
+
+def default_serving(cascade: str = "sdturbo", num_workers: int = 16,
+                    **kw) -> ServingConfig:
+    return ServingConfig(cascade=CASCADES[cascade],
+                         num_workers=num_workers, **kw)

@@ -1,0 +1,414 @@
+"""Discrete-event simulator for DiffServe (paper §4.1: the paper's headline
+results come from its simulator; the testbed validated it to within 0.56 %
+FID / 1.1 % SLO violations).
+
+Entities: queries, workers (role = light|heavy, local queue, batched
+execution with profiled latencies + straggler jitter), a load balancer
+(least-loaded routing + hedged re-dispatch), and a controller (EWMA demand,
+MILP re-planning, failure detection via heartbeats, elastic worker counts).
+
+Confidence scores come from the calibrated DeferralProfile (sim mode) or a
+real cascade (cluster mode via serving/cluster.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config.base import CascadeConfig, ServingConfig
+from repro.core.allocator import AllocatorOptions, ResourceManager
+from repro.core.confidence import DeferralProfile
+from repro.core.milp import Telemetry
+from repro.core.quality import QualityModel
+from repro.serving.trace import Trace
+
+LIGHT, HEAVY = "light", "heavy"
+
+
+@dataclasses.dataclass
+class Query:
+    qid: int
+    arrival: float
+    deadline: float
+    stage: str = LIGHT            # current stage
+    confidence: Optional[float] = None
+    enqueued_at: float = 0.0
+    done_at: Optional[float] = None
+    dropped: bool = False
+    deferred: bool = False
+    hedged: bool = False
+
+
+@dataclasses.dataclass
+class Worker:
+    wid: int
+    role: Optional[str] = None    # None while (re)loading a model
+    batch_size: int = 1
+    queue: deque = dataclasses.field(default_factory=deque)
+    busy_until: float = 0.0
+    alive: bool = True
+    loading_until: float = 0.0
+    in_flight: List[Query] = dataclasses.field(default_factory=list)
+    batch_started: float = 0.0
+    last_heartbeat: float = 0.0
+
+
+@dataclasses.dataclass
+class SimConfig:
+    seed: int = 0
+    straggler_sigma: float = 0.06      # lognormal execution jitter
+    straggler_prob: float = 0.01       # prob of a 3-8x straggler batch
+    model_load_s: float = 2.0          # role-switch (model load) delay
+    router: str = "discriminator"      # quality-model router skill
+    quality_window_s: float = 30.0
+    failure_times: Tuple[Tuple[float, int, float], ...] = ()
+    #   (t_fail, worker_id, repair_duration_s)
+    hedging: bool = True
+    scale_events: Tuple[Tuple[float, int], ...] = ()   # (t, new_S) elastic
+    arrival_stage: str = LIGHT        # Clipper-Heavy sends straight to heavy
+    fixed_plan: Optional[object] = None   # static baselines: never re-plan
+
+
+@dataclasses.dataclass
+class SimResult:
+    completed: int = 0
+    dropped: int = 0
+    violations: int = 0
+    total: int = 0
+    deferred: int = 0
+    fid_timeline: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list)
+    threshold_timeline: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list)
+    violation_timeline: List[Tuple[float, float]] = dataclasses.field(
+        default_factory=list)
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    solve_ms: List[float] = dataclasses.field(default_factory=list)
+    hedged: int = 0
+    requeued_on_failure: int = 0
+
+    @property
+    def violation_ratio(self) -> float:
+        return self.violations / max(self.total, 1)
+
+    @property
+    def defer_fraction(self) -> float:
+        return self.deferred / max(self.completed, 1)
+
+    @property
+    def mean_fid(self) -> float:
+        vals = [f for _, f in self.fid_timeline]
+        return float(np.mean(vals)) if vals else float("nan")
+
+
+class Simulator:
+    ARRIVAL, BATCH_DONE, CONTROL, FAIL, RECOVER, SCALE = range(6)
+
+    def __init__(self, serving: ServingConfig, profile: DeferralProfile,
+                 sim: Optional[SimConfig] = None,
+                 allocator_options: Optional[AllocatorOptions] = None,
+                 confidence_fn: Optional[Callable[[int], np.ndarray]] = None,
+                 quality_model: Optional[QualityModel] = None):
+        self.serving = serving
+        self.cascade = serving.cascade
+        self.sim = sim or SimConfig()
+        self.rng = np.random.default_rng(self.sim.seed)
+        self.profile = profile
+        self.rm = ResourceManager(self.cascade, serving, profile,
+                                  allocator_options)
+        self.confidence_fn = confidence_fn
+        self.quality = quality_model or QualityModel.from_cascade(self.cascade)
+
+        self.workers: Dict[int, Worker] = {
+            i: Worker(wid=i) for i in range(serving.num_workers)}
+        self.threshold = 0.8
+        self.now = 0.0
+        self._events: List[Tuple[float, int, int, object]] = []
+        self._eid = itertools.count()
+        self.result = SimResult()
+        self._arrivals_window: deque = deque()
+        self._recent_defer: deque = deque()
+        self._window_done = 0
+        self._active_S = serving.num_workers
+
+    # ------------------------------------------------------------------
+    def push(self, t, kind, payload=None):
+        heapq.heappush(self._events, (t, kind, next(self._eid), payload))
+
+    def run(self, trace: Trace) -> SimResult:
+        arrivals = trace.arrivals(self.rng)
+        self.result.total = len(arrivals)
+        for i, t in enumerate(arrivals):
+            self.push(float(t), self.ARRIVAL,
+                      Query(qid=i, arrival=float(t),
+                            deadline=float(t) + self.cascade.slo_s))
+        self.push(0.0, self.CONTROL)
+        for (tf, wid, dur) in self.sim.failure_times:
+            self.push(tf, self.FAIL, (wid, dur))
+        for (ts, new_s) in self.sim.scale_events:
+            self.push(ts, self.SCALE, new_s)
+        end_t = trace.duration_s + 4 * self.cascade.slo_s
+
+        # initial plan
+        self._apply_plan_now(first=True)
+
+        while self._events and self._events[0][0] <= end_t:
+            t, kind, _, payload = heapq.heappop(self._events)
+            self.now = t
+            if kind == self.ARRIVAL:
+                self._on_arrival(payload)
+            elif kind == self.BATCH_DONE:
+                self._on_batch_done(payload)
+            elif kind == self.CONTROL:
+                self._on_control()
+            elif kind == self.FAIL:
+                self._on_fail(*payload)
+            elif kind == self.RECOVER:
+                self._on_recover(payload)
+            elif kind == self.SCALE:
+                self._on_scale(payload)
+        return self.result
+
+    # ------------------------------------------------------------------
+    def _live(self, role=None):
+        ws = [w for w in self.workers.values()
+              if w.alive and w.wid < self._active_S
+              and self.now >= w.loading_until]
+        if role:
+            ws = [w for w in ws if w.role == role]
+        return ws
+
+    def _route(self, q: Query, role: str) -> bool:
+        ws = self._live(role)
+        if not ws:
+            # no live worker of that role: park on a loading one if any
+            ws = [w for w in self.workers.values()
+                  if w.alive and w.wid < self._active_S and w.role == role]
+        if not ws:
+            return False
+        w = min(ws, key=lambda w: len(w.queue) + len(w.in_flight))
+        q.enqueued_at = self.now
+        w.queue.append(q)
+        self._maybe_start(w)
+        return True
+
+    def _on_arrival(self, q: Query):
+        self._arrivals_window.append(q.arrival)
+        q.stage = self.sim.arrival_stage
+        if q.stage == HEAVY:
+            q.deferred = True
+        if not self._route(q, q.stage):
+            q.dropped = True
+            self.result.dropped += 1
+            self.result.violations += 1
+
+    def _exec_latency(self, w: Worker, n: int) -> float:
+        prof = (self.cascade.light_profile if w.role == LIGHT
+                else self.cascade.heavy_profile)
+        base = prof.exec_latency(n)
+        if w.role == LIGHT:
+            base += self.cascade.disc_latency_s
+        jit = float(self.rng.lognormal(0.0, self.sim.straggler_sigma))
+        if self.rng.random() < self.sim.straggler_prob:
+            jit *= float(self.rng.uniform(3.0, 8.0))
+        return base * jit
+
+    def _maybe_start(self, w: Worker):
+        if (not w.alive or w.role is None or self.now < w.loading_until
+                or self.now < w.busy_until or w.in_flight or not w.queue):
+            return
+        batch: List[Query] = []
+        while w.queue and len(batch) < w.batch_size:
+            q = w.queue.popleft()
+            if q.done_at is not None or q.dropped:
+                continue           # hedged duplicate already finished
+            # predictive drop (paper: queries predicted to miss are dropped)
+            est_done = self.now + self._exec_latency(w, w.batch_size) * 0.9
+            if (self.serving.drop_predicted_misses and est_done > q.deadline
+                    and q.stage == w.role):
+                q.dropped = True
+                self.result.dropped += 1
+                self.result.violations += 1
+                continue
+            batch.append(q)
+        if not batch:
+            return
+        w.in_flight = batch
+        w.batch_started = self.now
+        dur = self._exec_latency(w, len(batch))
+        w.busy_until = self.now + dur
+        self.push(w.busy_until, self.BATCH_DONE, w.wid)
+
+    def _confidences(self, n: int) -> np.ndarray:
+        if self.confidence_fn is not None:
+            return self.confidence_fn(n)
+        return self.profile.sample(self.rng, n)
+
+    def _on_batch_done(self, wid: int):
+        w = self.workers[wid]
+        if not w.alive:
+            return
+        batch, w.in_flight = w.in_flight, []
+        if not batch:
+            return
+        if w.role == LIGHT:
+            confs = self._confidences(len(batch))
+            fresh = []
+            for q, c in zip(batch, confs):
+                if q.done_at is not None or q.dropped:
+                    continue       # hedged duplicate finished elsewhere
+                q.confidence = float(c)
+                if c < self.threshold:
+                    q.stage = HEAVY
+                    q.deferred = True
+                    if not self._route(q, HEAVY):
+                        # no heavy capacity: return light output (quality hit)
+                        q.deferred = False
+                        self._complete(q)
+                    fresh.append(c)
+                else:
+                    self._complete(q)
+                    fresh.append(c)
+            if fresh:
+                self.profile.update(fresh)     # online f(t) refresh
+        else:
+            for q in batch:
+                if q.done_at is None and not q.dropped:
+                    self._complete(q)
+        self._maybe_start(w)
+
+    def _complete(self, q: Query):
+        q.done_at = self.now
+        self.result.completed += 1
+        self.result.latencies.append(self.now - q.arrival)
+        if self.now > q.deadline:
+            self.result.violations += 1
+        if q.deferred:
+            self.result.deferred += 1
+        self._recent_defer.append((self.now, 1.0 if q.deferred else 0.0))
+        self._window_done += 1
+
+    # ------------------------------------------------------------------
+    def _telemetry(self) -> Telemetry:
+        horizon = self.now - self.serving.control_period_s
+        while self._arrivals_window and self._arrivals_window[0] < horizon:
+            self._arrivals_window.popleft()
+        qps = len(self._arrivals_window) / max(self.serving.control_period_s,
+                                               1e-9)
+        ql = sum(len(w.queue) for w in self._live(LIGHT))
+        qh = sum(len(w.queue) for w in self._live(HEAVY))
+        lam_h = qps * self.profile.f(self.threshold)
+        return Telemetry(demand_qps=qps, queue_light=ql, queue_heavy=qh,
+                         arrival_light_qps=qps, arrival_heavy_qps=lam_h,
+                         live_workers=len([w for w in self.workers.values()
+                                           if w.alive
+                                           and w.wid < self._active_S]))
+
+    def _apply_plan_now(self, first=False):
+        if self.sim.fixed_plan is not None:
+            plan = self.sim.fixed_plan
+        else:
+            tel = self._telemetry() if not first else Telemetry(
+                demand_qps=1.0, live_workers=self._active_S)
+            plan = self.rm.plan(tel)
+        self.result.solve_ms.append(plan.solve_ms)
+        self.threshold = plan.threshold
+        self.result.threshold_timeline.append((self.now, plan.threshold))
+        live = [w for w in self.workers.values()
+                if w.alive and w.wid < self._active_S]
+        want = [LIGHT] * plan.x1 + [HEAVY] * plan.x2
+        want += [None] * max(len(live) - len(want), 0)
+        # stable assignment: keep matching roles to avoid reload churn
+        unassigned = []
+        remaining = list(want)
+        for w in live:
+            if w.role in remaining:
+                remaining.remove(w.role)
+            else:
+                unassigned.append(w)
+        for w, role in zip(unassigned, remaining):
+            if w.role is not None and role is not None and w.role != role:
+                w.loading_until = self.now + self.sim.model_load_s
+                # re-route queued work for the old role
+                for q in list(w.queue):
+                    w.queue.remove(q)
+                    self._route(q, q.stage)
+            w.role = role
+        for w in live:
+            w.batch_size = plan.b1 if w.role == LIGHT else plan.b2
+            self._maybe_start(w)
+
+    def _on_control(self):
+        self._check_heartbeats()       # failure detection (heartbeat timeout)
+        if self.now > 0:
+            self._apply_plan_now()
+        self._record_quality()
+        if self.sim.hedging:
+            self._hedge_stragglers()
+        self.push(self.now + self.serving.control_period_s, self.CONTROL)
+
+    def _record_quality(self):
+        horizon = self.now - self.sim.quality_window_s
+        while self._recent_defer and self._recent_defer[0][0] < horizon:
+            self._recent_defer.popleft()
+        if self._recent_defer:
+            p = float(np.mean([d for _, d in self._recent_defer]))
+            fid = self.quality.fid(p, self.sim.router)
+            self.result.fid_timeline.append((self.now, fid))
+        done_total = max(self.result.completed + self.result.dropped, 1)
+        self.result.violation_timeline.append(
+            (self.now, self.result.violations / max(done_total, 1)))
+
+    def _hedge_stragglers(self):
+        """Straggler mitigation: if a batch runs far past its expected
+        latency, re-dispatch its queries to the least-loaded peer."""
+        for w in list(self.workers.values()):
+            if not w.alive or not w.in_flight or w.role is None:
+                continue
+            prof = (self.cascade.light_profile if w.role == LIGHT
+                    else self.cascade.heavy_profile)
+            expect = prof.exec_latency(len(w.in_flight))
+            if (self.now - w.batch_started) > 2.5 * expect:
+                for q in w.in_flight:
+                    if not q.hedged and q.done_at is None:
+                        q.hedged = True
+                        self.result.hedged += 1
+                        self._route(q, w.role)   # duplicate dispatch
+
+    # ------------------------------------------------------------------
+    def _on_fail(self, wid: int, repair_s: float):
+        w = self.workers[wid]
+        w.alive = False
+        self.push(self.now + repair_s, self.RECOVER, wid)
+
+    def _detect_and_requeue(self, w: Worker):
+        lost = list(w.queue) + list(w.in_flight)
+        w.queue.clear()
+        w.in_flight = []
+        for q in lost:
+            if q.done_at is None and not q.dropped:
+                self.result.requeued_on_failure += 1
+                if not self._route(q, q.stage):
+                    q.dropped = True
+                    self.result.dropped += 1
+                    self.result.violations += 1
+
+    def _on_recover(self, wid: int):
+        w = self.workers[wid]
+        w.alive = True
+        w.role = None
+        w.loading_until = self.now + self.sim.model_load_s
+
+    def _on_scale(self, new_s: int):
+        self._active_S = new_s
+
+    # failure detection happens on control ticks via heartbeat timeout
+    def _check_heartbeats(self):
+        for w in self.workers.values():
+            if not w.alive and (w.queue or w.in_flight):
+                self._detect_and_requeue(w)

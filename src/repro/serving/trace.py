@@ -1,0 +1,70 @@
+"""Workload traces: static (Poisson), Azure-Functions-like diurnal traces,
+and shape-preserving scaling (paper §4.1: "scale the trace using
+shape-preserving transformations to match the capacity of our system").
+
+A trace is a per-second QPS array; arrivals are drawn as an inhomogeneous
+Poisson process from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    qps: np.ndarray                 # per-second demand
+    name: str = "trace"
+
+    @property
+    def duration_s(self) -> float:
+        return float(len(self.qps))
+
+    def scale(self, min_qps: float, max_qps: float) -> "Trace":
+        """Shape-preserving affine rescale into [min_qps, max_qps]."""
+        lo, hi = float(self.qps.min()), float(self.qps.max())
+        if hi - lo < 1e-9:
+            return Trace(np.full_like(self.qps, max_qps),
+                         f"{self.name}_{min_qps}to{max_qps}qps")
+        scaled = min_qps + (self.qps - lo) * (max_qps - min_qps) / (hi - lo)
+        return Trace(scaled, f"{self.name}_{min_qps}to{max_qps}qps")
+
+    def arrivals(self, rng: np.random.Generator) -> np.ndarray:
+        """Arrival timestamps over the trace (inhomogeneous Poisson)."""
+        times: List[float] = []
+        for sec, rate in enumerate(self.qps):
+            n = rng.poisson(rate)
+            times.extend(sec + rng.random(n))
+        return np.sort(np.asarray(times))
+
+
+def static_trace(qps: float, duration_s: int = 360,
+                 name: Optional[str] = None) -> Trace:
+    return Trace(np.full(duration_s, float(qps)), name or f"static_{qps}qps")
+
+
+def azure_like_trace(duration_s: int = 360, seed: int = 0,
+                     burst_prob: float = 0.02) -> Trace:
+    """Azure-Functions-shaped trace: a diurnal backbone compressed into the
+    experiment window plus heavy-tailed invocation bursts (Shahrad et al.
+    2020 report strong diurnality + bursts)."""
+    rng = np.random.default_rng(seed)
+    t = np.arange(duration_s)
+    base = 0.55 + 0.45 * np.sin(2 * np.pi * (t / duration_s) - np.pi / 2)
+    wobble = 0.08 * np.sin(2 * np.pi * t / 47.0 + rng.random() * 6.28)
+    bursts = np.zeros(duration_s)
+    for s in np.where(rng.random(duration_s) < burst_prob)[0]:
+        width = rng.integers(3, 12)
+        amp = rng.pareto(2.5) * 0.4
+        bursts[s:s + width] += amp
+    qps = np.clip(base + wobble + bursts, 0.02, None)
+    return Trace(qps, f"azure_like_s{seed}")
+
+
+def load_trace_file(path: str) -> Trace:
+    """Paper-artifact format: one QPS value per line
+    (trace_{A}to{B}qps.txt)."""
+    vals = np.loadtxt(path).ravel()
+    return Trace(vals, path.rsplit("/", 1)[-1].split(".")[0])

@@ -1,0 +1,103 @@
+"""Atomic pytree checkpoints: msgpack + zstd, keep-N rotation, resume.
+
+Layout: <dir>/step_<n>.ckpt (+ .meta.json); writes go to a temp file then
+``os.replace`` (atomic on POSIX) so a crash mid-save never corrupts the
+latest checkpoint — restart picks up the newest complete one.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+_MAGIC = b"REPROCKPT1"
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    return {b"dtype": str(arr.dtype).encode(),
+            b"shape": list(arr.shape),
+            b"data": arr.tobytes()}
+
+
+def _unpack_leaf(d):
+    dtype = np.dtype(d[b"dtype"].decode())
+    arr = np.frombuffer(d[b"data"], dtype=dtype).reshape(d[b"shape"])
+    return jnp.asarray(arr)
+
+
+def save(path: str, tree: Any, step: int, extra: Optional[dict] = None,
+         keep: int = 3) -> str:
+    """Save ``tree`` at <path>/step_<step>.ckpt; rotate old checkpoints."""
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = msgpack.packb({
+        b"leaves": [_pack_leaf(l) for l in leaves],
+        b"extra": json.dumps(extra or {}).encode(),
+        b"step": step,
+    })
+    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    final = os.path.join(path, f"step_{step}.ckpt")
+    fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(_MAGIC)
+            f.write(comp)
+        os.replace(tmp, final)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    _rotate(path, keep)
+    return final
+
+
+def _rotate(path: str, keep: int):
+    ckpts = sorted_steps(path)
+    for step, f in ckpts[:-keep] if keep > 0 else []:
+        os.unlink(os.path.join(path, f))
+
+
+def sorted_steps(path: str):
+    out = []
+    for f in os.listdir(path):
+        m = re.fullmatch(r"step_(\d+)\.ckpt", f)
+        if m:
+            out.append((int(m.group(1)), f))
+    return sorted(out)
+
+
+def latest_step(path: str) -> Optional[int]:
+    steps = sorted_steps(path)
+    return steps[-1][0] if steps else None
+
+
+def load(path: str, tree_like: Any, step: Optional[int] = None
+         ) -> Tuple[Any, int, dict]:
+    """Restore into the structure of ``tree_like``. step=None → newest."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    fname = os.path.join(path, f"step_{step}.ckpt")
+    with open(fname, "rb") as f:
+        magic = f.read(len(_MAGIC))
+        if magic != _MAGIC:
+            raise ValueError(f"{fname}: bad magic")
+        payload = zstandard.ZstdDecompressor().decompress(f.read())
+    obj = msgpack.unpackb(payload)
+    leaves = [_unpack_leaf(d) for d in obj[b"leaves"]]
+    treedef = jax.tree_util.tree_structure(tree_like)
+    if treedef.num_leaves != len(leaves):
+        raise ValueError(f"checkpoint has {len(leaves)} leaves, expected "
+                         f"{treedef.num_leaves}")
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    extra = json.loads(obj[b"extra"].decode())
+    return tree, obj[b"step"], extra

@@ -1,0 +1,68 @@
+"""Gradient compression for the DP axis: top-k sparsification with error
+feedback (memory-compensated SGD), plus int8 quantization. Cuts all-reduce
+bytes by 10-100x on slow inter-pod links; the residual state keeps
+convergence (Stich et al.; standard large-scale trick, EXPERIMENTS.md §Perf
+discusses when the collective term justifies it).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import dequantize8, quantize8
+
+
+def compress_topk(g, frac: float = 0.01):
+    """Keep the top-``frac`` entries by magnitude. Returns (idx, vals,
+    shape) — the wire format (idx int32 + vals) is 2*frac of dense fp32."""
+    flat = g.reshape(-1)
+    k = max(int(frac * flat.size), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    return idx.astype(jnp.int32), vals, g.shape
+
+
+def decompress_topk(idx, vals, shape):
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), vals.dtype)
+    flat = flat.at[idx].set(vals)
+    return flat.reshape(shape)
+
+
+def compress_int8(g, block: int = 128):
+    return quantize8(g.astype(jnp.float32), block)
+
+
+def decompress_int8(q, scale, block: int = 128):
+    return dequantize8(q, scale, block)
+
+
+@dataclasses.dataclass
+class ErrorFeedbackState:
+    residual: Any
+
+    @classmethod
+    def init(cls, grads):
+        return cls(residual=jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def ef_compress_step(grads, state: ErrorFeedbackState, frac: float = 0.01
+                     ) -> Tuple[Any, ErrorFeedbackState]:
+    """Error-feedback top-k: compress (grad + residual); the un-transmitted
+    remainder becomes the next residual. Returns (transmitted_dense, state)
+    — in production the (idx, vals) pairs are what crosses the link."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        idx, vals, shape = compress_topk(corrected, frac)
+        sent = decompress_topk(idx, vals, shape)
+        return sent, corrected - sent
+
+    flat = jax.tree.map(one, grads, state.residual)
+    sent = jax.tree.map(lambda t: t[0], flat,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    resid = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return sent, ErrorFeedbackState(residual=resid)

@@ -1,0 +1,103 @@
+"""Loss + train-step construction (microbatched, donation-friendly)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.transformer import forward, mtp_logits
+from repro.training.optimizer import OptimizerConfig, make_adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptimizerConfig = dataclasses.field(default_factory=OptimizerConfig)
+    microbatches: int = 1
+    z_loss: float = 1e-4
+    mtp_weight: float = 0.3
+
+
+def cross_entropy(logits, labels, z_coef: float = 0.0):
+    """Mean CE over all tokens (fp32), with optional z-loss."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - ll)
+    if z_coef:
+        loss = loss + z_coef * jnp.mean(jnp.square(lse))
+    return loss
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    def loss_fn(params, batch):
+        want_mtp = bool(cfg.mtp_depth) and cfg.input_mode == "tokens"
+        out = forward(params, cfg, batch["inputs"],
+                      positions=batch.get("positions"),
+                      mode="train", return_hidden=want_mtp)
+        if want_mtp:
+            logits, _, aux, hidden = out
+        else:
+            logits, _, aux = out
+        loss = cross_entropy(logits, batch["labels"], tcfg.z_loss)
+        metrics = {"ce": loss, "aux": aux}
+        if want_mtp:
+            # predict t_{i+2} from h_i and emb(t_{i+1}); reuse labels as the
+            # shifted stream (final position masked by truncation)
+            nt = batch["labels"]
+            lg2, aux2 = mtp_logits(params, cfg, hidden[:, :-1], nt[:, :-1])
+            l2 = cross_entropy(lg2, nt[:, 1:], 0.0)
+            loss = loss + tcfg.mtp_weight * l2
+            aux = aux + aux2
+            metrics["mtp_ce"] = l2
+        total = loss + aux
+        metrics["loss"] = total
+        return total, metrics
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns (init_fn(params)->opt_state, step_fn(params,opt,batch))."""
+    opt_cfg = dataclasses.replace(
+        tcfg.opt, eight_bit_moments=tcfg.opt.eight_bit_moments
+        or cfg.opt_8bit_moments)
+    opt_init, opt_update = make_adamw(opt_cfg)
+    loss_fn = make_loss_fn(cfg, tcfg)
+    k = tcfg.microbatches
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def step(params, opt_state, batch):
+        if k == 1:
+            (_, metrics), grads = grads_of(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, = carry
+                (_, m), g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc,), m
+            def split_leaf(path, x):
+                name = str(getattr(path[-1], "key", ""))
+                if name == "positions" and x.ndim == 3:
+                    # M-RoPE positions are (P, B, S): batch is axis 1
+                    P, B, S = x.shape
+                    return x.reshape(P, k, B // k, S).transpose(1, 0, 2, 3)
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+            split = jax.tree_util.tree_map_with_path(split_leaf, batch)
+            # accumulate in the grad's own dtype (bf16 weights under the
+            # 8-bit-moment memory regime, fp32 otherwise / for fp32 params)
+            acc_dtype = (lambda p: p.dtype) if opt_cfg.eight_bit_moments \
+                else (lambda p: jnp.float32)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype(p)), params)
+            (gsum,), ms = jax.lax.scan(micro, (zero,), split)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            metrics = jax.tree.map(lambda x: jnp.mean(x), ms)
+        new_params, new_opt, om = opt_update(grads, opt_state, params)
+        metrics.update(om)
+        return new_params, new_opt, metrics
+
+    return opt_init, step

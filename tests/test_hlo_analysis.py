@@ -1,0 +1,81 @@
+"""HLO-parser tests: collective bytes, loop weighting, dot FLOPs, traffic
+proxy — on synthetic HLO text with known ground truth."""
+import numpy as np
+
+from repro.analysis.hlo import analyze_hlo, collective_bytes, shape_bytes
+
+HLO = """
+HloModule test
+
+%cond.1 (arg: (s32[], f32[8,16])) -> pred[] {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %k = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%body.1 (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %arg = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[16,16]{1,0} parameter(1)
+  %y = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%y), replica_groups={}, to_apply=%add.1
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %out = (s32[], f32[8,16]) tuple(%ip, %ar)
+}
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16]{1,0} parameter(0)
+  %init = (s32[], f32[8,16]) tuple(%c0, %p0)
+  %ag = f32[32,16]{1,0} all-gather(%p0), dimensions={0}
+  %loop = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %res = f32[8,16]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert shape_bytes("bf16[2,3]") == 12
+    assert shape_bytes("(s32[], f32[4]{0})") == 4 + 16
+    assert shape_bytes("pred[]") == 1
+
+
+def test_while_trip_count_weighting():
+    res = analyze_hlo(HLO)
+    coll = res["collectives"]
+    # all-reduce inside the 5-trip loop: operand f32[8,16]=512B, x5
+    assert coll["all-reduce"]["count"] == 5
+    assert coll["all-reduce"]["operand_bytes"] == 5 * 512
+    # all-gather at entry: counted once, operand 512B, result 2048B
+    assert coll["all-gather"]["count"] == 1
+    assert coll["all-gather"]["operand_bytes"] == 512
+    assert coll["all-gather"]["result_bytes"] == 32 * 16 * 4
+
+
+def test_dot_flops_weighted():
+    res = analyze_hlo(HLO)
+    # dot: (8,16)x(16,16): 2*8*16*16 = 4096 flops, x5 loop trips
+    assert res["dot_flops"] == 5 * 2 * 8 * 16 * 16
+
+
+def test_collective_bytes_wrapper():
+    assert collective_bytes(HLO)["all-reduce"]["count"] == 5
+
+
+def test_roofline_model_flops():
+    from repro.analysis.roofline import model_flops
+    from repro.configs import get_config
+    from repro.models.transformer import count_params
+    n = count_params(get_config("smollm-135m"), active_only=True,
+                     include_embedding=False)
+    assert model_flops("smollm-135m", "train_4k") == 6.0 * n * 256 * 4096
+    assert model_flops("smollm-135m", "decode_32k") == 2.0 * n * 128

@@ -1,0 +1,111 @@
+"""Distribution-layer tests: pipeline parallelism, collective-matmul
+overlap, reduce-scatter, sharding-rule fallbacks. Multi-device cases run in
+a subprocess with forced host devices (the main process is pinned to 1)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import make_rules, param_pspec
+
+
+def _run_subprocess(code: str):
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    import os
+    env["HOME"] = os.environ.get("HOME", "/root")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       cwd="/root/repo", timeout=300)
+    assert r.returncode == 0, r.stderr[-3000:]
+    return r.stdout
+
+
+def test_pipeline_matches_sequential():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.parallel.pipeline import run_pipeline
+        mesh = jax.make_mesh((4,), ("stage",))
+        key = jax.random.PRNGKey(0)
+        W = jax.random.normal(key, (4, 8, 8)) * 0.3     # one matrix/stage
+        def stage_fn(w, x):
+            return jnp.tanh(x @ w)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (6, 2, 8))
+        got = run_pipeline(stage_fn, W, xs, mesh=mesh, axis="stage")
+        want = xs
+        for i in range(4):
+            want = jnp.tanh(want @ W[i])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+        print("PIPELINE_OK")
+        """)
+    assert "PIPELINE_OK" in out
+
+
+def test_allgather_matmul_matches_dense():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.parallel.collectives import allgather_matmul
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        mesh = jax.make_mesh((4,), ("fsdp",))
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 16))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        ws = jax.device_put(w, NamedSharding(mesh, P("fsdp", None)))
+        got = allgather_matmul(x, ws, mesh=mesh, axis="fsdp")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w),
+                                   atol=1e-4, rtol=1e-4)
+        print("AGMM_OK")
+        """)
+    assert "AGMM_OK" in out
+
+
+def test_reduce_scatter_grads():
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.parallel.collectives import reduce_scatter_grads
+        mesh = jax.make_mesh((4,), ("data",))
+        g = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+        out = reduce_scatter_grads(g, mesh=mesh, axis="data")
+        # replicated input -> mean equals input; output sharded on dim 0
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(g["w"]), atol=1e-6)
+        print("RS_OK")
+        """)
+    assert "RS_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (single process)
+# ---------------------------------------------------------------------------
+def test_param_pspec_conventions():
+    rules = make_rules(data_axes=("data",), fsdp=True)
+    assert param_pspec("x/embed/embedding", (50304, 768), rules) \
+        == P("model", "data")
+    assert param_pspec("x/attn/wq", (768, 12, 64), rules) \
+        == P("data", "model", None)
+    assert param_pspec("x/ffn/e_wi", (8, 768, 2048), rules)[0] == "model"
+    assert param_pspec("x/ln1/scale", (768,), rules) == P(None)
+
+
+def test_serve_rules_full_ep():
+    rules = make_rules(data_axes=("data",), serve=True)
+    assert rules["experts"] == ("data", "model")
+    assert rules["embed"] is None          # no FSDP gathering on decode
+    assert rules["cache_seq"] == "model"
+
+
+def test_named_safe_suffix_fallback():
+    """16 experts on a 256-chip mesh fall back to the model axis; the data
+    axis is then free for the expert-FFN dim (conflict resolution)."""
+    import jax
+    from repro.launch.steps import named_safe
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # trivially divisible case sanity (axis sizes 1 divide everything but
+    # prod>1 guard replicates) — structural check only
+    sh = named_safe(mesh, P(("data", "model"), None, ("data",)),
+                    jax.ShapeDtypeStruct((16, 7168, 2048), "float32"))
+    assert sh.spec == P(None, None, None)

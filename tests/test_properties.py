@@ -1,0 +1,140 @@
+"""Hypothesis property tests on system invariants (deliverable c)."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bnb import MILP, solve_milp
+from repro.core.confidence import DeferralProfile
+from repro.core.milp import solve_allocation
+from repro.core.quality import QualityModel, frechet_distance
+from repro.serving.profiles import default_serving
+from repro.serving.trace import Trace
+from repro.training.optimizer import dequantize8, quantize8
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# DeferralProfile: f is a CDF; inverse is its right-continuous inverse
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(0, 1), min_size=1, max_size=200),
+       st.floats(0, 1), st.floats(0, 1))
+@settings(max_examples=60, deadline=None)
+def test_profile_cdf_properties(scores, t1, t2):
+    p = DeferralProfile(scores)
+    assert 0.0 <= p.f(t1) <= 1.0
+    if t1 <= t2:
+        assert p.f(t1) <= p.f(t2)
+    assert p.f(0.0) == 0.0
+    assert p.f(1.0 + 1e-9) == 1.0
+
+
+@given(st.lists(st.floats(0.01, 0.99), min_size=5, max_size=100),
+       st.floats(0, 1))
+@settings(max_examples=60, deadline=None)
+def test_profile_inverse_consistent(scores, frac):
+    p = DeferralProfile(scores)
+    t = p.inverse(frac)
+    assert p.f(t) <= frac + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# MILP: feasible plans always satisfy the constraints
+# ---------------------------------------------------------------------------
+@given(st.floats(0.5, 40.0), st.integers(2, 48),
+       st.lists(st.floats(0.05, 0.95), min_size=20, max_size=50))
+@settings(max_examples=40, deadline=None)
+def test_allocation_invariants(demand, workers, scores):
+    serving = default_serving("sdturbo", num_workers=workers)
+    profile = DeferralProfile(scores)
+    plan = solve_allocation(serving.cascade, serving, profile, demand)
+    assert plan.x1 >= 0 and plan.x2 >= 0
+    assert plan.x1 + plan.x2 <= workers
+    assert 0.0 <= plan.threshold <= 1.0
+    if plan.feasible:
+        lam = serving.overprovision * demand
+        cap1 = plan.x1 * serving.cascade.light_profile.throughput(plan.b1)
+        assert cap1 * serving.rho_light >= lam * 0.999
+        assert plan.expected_latency <= serving.cascade.slo_s + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Quality: Fréchet distance axioms; quality-model anchors
+# ---------------------------------------------------------------------------
+@given(st.integers(2, 6), st.integers(20, 60), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_frechet_identity_and_positivity(dim, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, dim))
+    mu, cov = a.mean(0), np.cov(a, rowvar=False)
+    d_self = frechet_distance(mu, cov, mu, cov)
+    assert abs(d_self) < 1e-6
+    b = a + rng.normal(1.0, 0.1)
+    mu2, cov2 = b.mean(0), np.cov(b, rowvar=False)
+    assert frechet_distance(mu, cov, mu2, cov2) > 0
+
+
+@given(st.floats(0, 1))
+@settings(max_examples=50, deadline=None)
+def test_quality_model_bounds(p):
+    qm = QualityModel(fid_all_light=22.6, fid_all_heavy=18.55,
+                      fid_best_mix=17.9, best_mix_p=0.65)
+    fid_disc = qm.fid(p, "discriminator")
+    fid_rand = qm.fid(p, "random")
+    fid_clip = qm.fid(p, "clipscore")
+    assert fid_disc <= fid_rand + 1e-9       # skill >= 0 helps
+    assert fid_clip >= fid_rand - 1e-9       # paper: metrics < random
+    assert qm.fid(0.0, "random") == 22.6
+    assert qm.fid(1.0, "random") == 18.55
+
+
+# ---------------------------------------------------------------------------
+# Trace scaling is shape-preserving
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(0.1, 100), min_size=3, max_size=200),
+       st.floats(1, 5), st.floats(6, 50))
+@settings(max_examples=50, deadline=None)
+def test_trace_scale_preserves_shape(vals, lo, hi):
+    t = Trace(np.asarray(vals))
+    s = t.scale(lo, hi)
+    assert s.qps.min() >= lo - 1e-6 and s.qps.max() <= hi + 1e-6
+    if t.qps.max() - t.qps.min() > 1e-9:
+        # order statistics preserved (monotone transform)
+        assert (np.argsort(s.qps) == np.argsort(t.qps)).all()
+
+
+# ---------------------------------------------------------------------------
+# 8-bit moment quantization error bound
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 4), st.integers(1, 512), st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_quantize8_roundtrip_bound(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+    q, s = quantize8(x, 128)
+    back = dequantize8(q, s, 128)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    # error bounded by half a quantization step per block
+    bound = np.asarray(jnp.repeat(s, repeats=max(1, x.shape[-1] // s.shape[-1]),
+                                  axis=-1))[..., :cols] * 0.5 + 1e-7
+    assert (err <= bound + 1e-6).all()
+
+
+# ---------------------------------------------------------------------------
+# B&B: integer solutions respect constraints
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 20), st.integers(1, 20), st.integers(1, 30))
+@settings(max_examples=40, deadline=None)
+def test_bnb_feasible_integral(a, b, cap):
+    p = MILP(c=np.array([-1.0, -2.0]),
+             A_ub=np.array([[float(a), float(b)]]),
+             b_ub=np.array([float(cap)]), integer=[0, 1],
+             upper=np.array([50.0, 50.0]))
+    sol = solve_milp(p)
+    assert sol.status == "optimal"
+    x, y = sol.x
+    assert a * x + b * y <= cap + 1e-6
+    assert abs(x - round(x)) < 1e-6 and abs(y - round(y)) < 1e-6
+    # optimality: beats the LP-rounding heuristic
+    assert sol.objective <= -2.0 * math.floor(cap / b) + 1e-6
