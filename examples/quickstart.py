@@ -37,11 +37,12 @@ disc_params, disc_cfg, hist = train_discriminator(
     kd, steps=80, batch_size=16, image_size=16, lr=3e-3, log_every=40)
 print("  final acc:", hist[-1]["acc"])
 
-# 3. Run a batch of queries through the cascade.
-cascade = DiffusionCascade(light_cfg, light_params, heavy_cfg, heavy_params,
+# 3. Run a batch of queries through the cascade (stages, cheapest first).
+cascade = DiffusionCascade([(light_cfg, light_params),
+                            (heavy_cfg, heavy_params)],
                            disc_cfg, disc_params)
 prompts = jnp.zeros((8, 4), jnp.int32)
-result = cascade.run_batch(key, prompts, threshold=0.5)
+result = cascade.run_batch(key, prompts, thresholds=0.5)
 print(f"confidences: {np.round(result.confidences, 3)}")
 print(f"deferred to heavy: {int(result.deferred.sum())}/8")
 
@@ -49,6 +50,6 @@ print(f"deferred to heavy: {int(result.deferred.sum())}/8")
 serving = default_serving("sdturbo", num_workers=16)
 profile = DeferralProfile(result.confidences.tolist() * 50)
 plan = solve_allocation(serving.cascade, serving, profile, demand_qps=12.0)
-print(f"plan: x1={plan.x1} light + x2={plan.x2} heavy workers, "
-      f"batches=({plan.b1},{plan.b2}), threshold={plan.threshold:.3f}, "
+print(f"plan: workers={plan.workers}, batches={plan.batches}, "
+      f"thresholds={tuple(round(t, 3) for t in plan.thresholds)}, "
       f"solved in {plan.solve_ms:.2f} ms")

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import DiffusionConfig
+from repro.config.base import DiffusionConfig, as_cascade_spec
 from repro.core.cascade import DiffusionCascade
 from repro.models.unet import init_unet
 from repro.serving.baselines import make_profile
@@ -32,23 +32,24 @@ heavy_cfg = DiffusionConfig(name="toy-sd", image_size=16, in_channels=3,
 kl, kh, kd = jax.random.split(key, 3)
 disc_params, disc_cfg, _ = train_discriminator(kd, steps=40, batch_size=16,
                                                image_size=16, lr=3e-3)
-cascade = DiffusionCascade(light_cfg, init_unet(kl, light_cfg),
-                           heavy_cfg, init_unet(kh, heavy_cfg),
+cascade = DiffusionCascade([(light_cfg, init_unet(kl, light_cfg)),
+                            (heavy_cfg, init_unet(kh, heavy_cfg))],
                            disc_cfg, disc_params)
 
 serving = default_serving("sdturbo", num_workers=8)
 runtime = ClusterRuntime(cascade, serving)
 print("measuring on-device execution profiles ...")
 prof = runtime.measure_profile(batches=(1, 2))
-print({k: (round(v.base_s, 4), round(v.marginal_s, 4))
-       for k, v in prof.items()})
+print([(round(p.base_s, 4), round(p.marginal_s, 4)) for p in prof])
 
-# feed measured profiles into the controller and serve a trace
-c = dataclasses.replace(serving.cascade, light_profile=prof["light"],
-                        heavy_profile=prof["heavy"],
-                        slo_s=max(10 * prof["heavy"].base_s, 1.0))
-serving = dataclasses.replace(serving, cascade=c)
-cap = serving.num_workers / prof["light"].base_s * 0.25
+# feed measured per-tier profiles into the controller and serve a trace
+spec = as_cascade_spec(serving.cascade)
+tiers = tuple(dataclasses.replace(t, profile=prof[i])
+              for i, t in enumerate(spec.tiers))
+spec = dataclasses.replace(spec, tiers=tiers,
+                           slo_s=max(10 * prof[-1].base_s, 1.0))
+serving = dataclasses.replace(serving, cascade=spec)
+cap = serving.num_workers / prof[0].base_s * 0.25
 trace = azure_like_trace(90, seed=2).scale(max(cap / 8, 0.5), max(cap, 1.0))
 sim = Simulator(serving, make_profile(serving, 0),
                 SimConfig(seed=0, router="discriminator"),

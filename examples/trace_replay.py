@@ -50,7 +50,7 @@ resume(sim2, end_t=120.0)
 snapshot(sim2, snap)
 sim3 = Simulator(serving, make_profile(serving, 0), SimConfig(seed=7))
 restore(sim3, snap)
-final = resume(sim3, end_t=trace.duration_s + 20)
+final = resume(sim3, end_t=trace.duration_s + 20, final=True)
 print(f"\nsnapshot@120s -> restored run completed {final.completed} "
       f"queries, violations {final.violation_ratio:.3f} "
       "(deterministic continuation)")

@@ -1,9 +1,13 @@
 """Config system: frozen dataclasses + registry.
 
 Every assigned architecture is expressed as a ``ModelConfig``; the paper's
-diffusion models as ``DiffusionConfig``; serving-time topology as
-``CascadeConfig``/``ServingConfig``. Configs are pure data — nothing here
-touches jax device state.
+diffusion models as ``DiffusionConfig``; serving-time topology as an
+ordered ``CascadeSpec`` of ``TierSpec`` tiers inside a ``ServingConfig``.
+A cascade is *data*, not code: any number of tiers, each with its own
+latency profile, batch choices, and discriminator cost. ``CascadeConfig``
+remains as a two-tier convenience front-end that converts via
+``as_cascade_spec``. Configs are pure data — nothing here touches jax
+device state.
 """
 from __future__ import annotations
 
@@ -177,7 +181,101 @@ class LatencyProfile:
 
 
 @dataclass(frozen=True)
+class TierSpec:
+    """One tier of a model cascade.
+
+    ``disc_latency_s`` is the discriminator run on *this tier's outputs*
+    (ignored on the final tier — nothing defers past it). ``batch_choices``
+    empty means "use ``ServingConfig.batch_choices``"; ``rho`` ``None``
+    means "use the ServingConfig utilization caps" (``rho_light`` for tier
+    0, ``rho_heavy`` for deeper tiers).
+    """
+    model: str                        # model name in the repository
+    profile: LatencyProfile = field(
+        default_factory=lambda: LatencyProfile(0.10, 0.01))
+    batch_choices: Tuple[int, ...] = ()
+    disc_latency_s: float = 0.010     # EfficientNet on A100 (paper §4.4)
+    rho: Optional[float] = None       # utilization cap (queue stability)
+
+
+@dataclass(frozen=True)
+class CascadeSpec:
+    """An ordered N-tier cascade: tier 0 (cheapest) sees every query; a
+    per-boundary confidence threshold defers low-confidence queries from
+    tier i to tier i+1. N-1 boundaries for N tiers.
+
+    Quality anchors generalize the paper's two-tier FID statistics:
+    ``fid_per_tier[i]`` is the FID when *all* queries stop at tier i;
+    ``easy_fractions[i]`` the fraction of queries the boundary-i
+    discriminator scores as "easy" (kept at tier i).
+    """
+    name: str
+    tiers: Tuple[TierSpec, ...]
+    discriminator: str = "efficientnet_s"
+    slo_s: float = 5.0
+    # FID* calibration anchors (paper-reported statistics; see DESIGN.md §7)
+    # — empty means "use the sdturbo paper anchors for first/last tier",
+    # so cascades of any depth construct without quality calibration
+    fid_per_tier: Tuple[float, ...] = ()
+    fid_best_mix: float = 17.9
+    best_mix_defer_frac: float = 0.65
+    easy_fractions: Tuple[float, ...] = (0.30,)
+
+    def __post_init__(self):
+        if len(self.tiers) < 2:
+            raise ValueError(f"{self.name}: a cascade needs >= 2 tiers")
+        if len(self.fid_per_tier) not in (0, len(self.tiers)):
+            raise ValueError(f"{self.name}: fid_per_tier must have one "
+                             f"entry per tier")
+
+    # ---------------- structure ----------------
+    @property
+    def num_tiers(self) -> int:
+        return len(self.tiers)
+
+    @property
+    def num_boundaries(self) -> int:
+        return len(self.tiers) - 1
+
+    def tier_batch_choices(self, i: int,
+                           default: Tuple[int, ...]) -> Tuple[int, ...]:
+        return self.tiers[i].batch_choices or default
+
+    def easy_fraction_at(self, boundary: int) -> float:
+        if not self.easy_fractions:
+            return 0.30
+        return self.easy_fractions[min(boundary,
+                                       len(self.easy_fractions) - 1)]
+
+    # ------- two-tier accessors (first/last tier; legacy call sites) -------
+    @property
+    def light_profile(self) -> LatencyProfile:
+        return self.tiers[0].profile
+
+    @property
+    def heavy_profile(self) -> LatencyProfile:
+        return self.tiers[-1].profile
+
+    @property
+    def disc_latency_s(self) -> float:
+        return self.tiers[0].disc_latency_s
+
+    @property
+    def easy_fraction(self) -> float:
+        return self.easy_fraction_at(0)
+
+    @property
+    def fid_all_light(self) -> float:
+        return self.fid_per_tier[0] if self.fid_per_tier else 22.6
+
+    @property
+    def fid_all_heavy(self) -> float:
+        return self.fid_per_tier[-1] if self.fid_per_tier else 18.55
+
+
+@dataclass(frozen=True)
 class CascadeConfig:
+    """Legacy two-tier cascade front-end; convert with ``as_cascade_spec``."""
     name: str
     light: str                        # model name in the repository
     heavy: str
@@ -193,10 +291,41 @@ class CascadeConfig:
     best_mix_defer_frac: float = 0.65
     easy_fraction: float = 0.30       # 20-40% of queries are "easy"
 
+    def as_spec(self) -> CascadeSpec:
+        return CascadeSpec(
+            name=self.name,
+            tiers=(TierSpec(model=self.light, profile=self.light_profile,
+                            disc_latency_s=self.disc_latency_s),
+                   TierSpec(model=self.heavy, profile=self.heavy_profile,
+                            disc_latency_s=0.0)),
+            discriminator=self.discriminator, slo_s=self.slo_s,
+            fid_per_tier=(self.fid_all_light, self.fid_all_heavy),
+            fid_best_mix=self.fid_best_mix,
+            best_mix_defer_frac=self.best_mix_defer_frac,
+            easy_fractions=(self.easy_fraction,))
+
+
+def as_cascade_spec(cascade) -> CascadeSpec:
+    """Normalize a ``CascadeSpec`` | ``CascadeConfig`` to a spec."""
+    if isinstance(cascade, CascadeSpec):
+        return cascade
+    if isinstance(cascade, CascadeConfig):
+        return cascade.as_spec()
+    raise TypeError(f"not a cascade: {type(cascade).__name__}")
+
+
+def tier_rho(spec: CascadeSpec, serving: "ServingConfig", i: int) -> float:
+    """Utilization cap for tier i: per-tier override, else the ServingConfig
+    caps (tier 0 -> rho_light, deeper tiers -> rho_heavy)."""
+    rho = spec.tiers[i].rho
+    if rho is not None:
+        return rho
+    return serving.rho_light if i == 0 else serving.rho_heavy
+
 
 @dataclass(frozen=True)
 class ServingConfig:
-    cascade: CascadeConfig
+    cascade: "CascadeSpec | CascadeConfig"
     num_workers: int = 16
     batch_choices: Tuple[int, ...] = (1, 2, 4, 8, 16)
     control_period_s: float = 2.0

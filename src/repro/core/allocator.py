@@ -1,18 +1,18 @@
 """ResourceManager — the controller's brain (paper §3.3).
 
-Wraps the MILP solver with: EWMA demand estimation, Little's-law queueing
-inputs from live telemetry, elastic worker counts (failures / scale events),
-and the ablation modes evaluated in §4.5 (static threshold, AIMD batching,
-Proteus queuing heuristic).
+Wraps the N-tier cascade solver with: EWMA demand estimation, Little's-law
+queueing inputs from live per-tier telemetry, elastic worker counts
+(failures / scale events), and the ablation modes evaluated in §4.5
+(static thresholds, AIMD batching, Proteus queuing heuristic).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence
 
-from repro.config.base import CascadeConfig, ServingConfig
-from repro.core.confidence import DeferralProfile
-from repro.core.milp import AllocationPlan, Telemetry, solve_allocation
+from repro.config.base import ServingConfig, as_cascade_spec
+from repro.core.confidence import DeferralProfile, as_boundary_profiles
+from repro.core.milp import AllocationPlan, Telemetry, solve_cascade
 
 
 @dataclasses.dataclass
@@ -25,18 +25,25 @@ class AllocatorOptions:
 
 
 class ResourceManager:
-    def __init__(self, cascade: CascadeConfig, serving: ServingConfig,
-                 profile: DeferralProfile,
+    def __init__(self, cascade, serving: ServingConfig,
+                 profiles: "DeferralProfile | Sequence[DeferralProfile]",
                  options: Optional[AllocatorOptions] = None):
-        self.cascade = cascade
+        self.spec = as_cascade_spec(cascade)
+        self.cascade = self.spec            # legacy alias
         self.serving = serving
-        self.profile = profile
+        self.profiles = as_boundary_profiles(profiles,
+                                             self.spec.num_boundaries)
         self.options = options or AllocatorOptions()
         self._demand_ewma: Optional[float] = None
-        self._aimd_b1 = max(serving.batch_choices)
-        self._aimd_b2 = max(serving.batch_choices)
+        self._aimd_batches: List[int] = [
+            max(self.spec.tier_batch_choices(i, serving.batch_choices))
+            for i in range(self.spec.num_tiers)]
         self.solve_times_ms: List[float] = []
         self.last_plan: Optional[AllocationPlan] = None
+
+    @property
+    def profile(self) -> DeferralProfile:
+        return self.profiles[0]
 
     # ------------------------------------------------------------------
     def estimate_demand(self, observed_qps: float) -> float:
@@ -49,13 +56,15 @@ class ResourceManager:
 
     def observe_slo_timeout(self):
         """AIMD ablation signal: multiplicative decrease on timeout."""
-        self._aimd_b1 = max(1, int(self._aimd_b1 * self.options.aimd_decrease))
-        self._aimd_b2 = max(1, int(self._aimd_b2 * self.options.aimd_decrease))
+        self._aimd_batches = [max(1, int(b * self.options.aimd_decrease))
+                              for b in self._aimd_batches]
 
     def observe_ok_tick(self):
-        ch = self.serving.batch_choices
-        self._aimd_b1 = min(max(ch), self._aimd_b1 + self.options.aimd_increase)
-        self._aimd_b2 = min(max(ch), self._aimd_b2 + self.options.aimd_increase)
+        self._aimd_batches = [
+            min(max(self.spec.tier_batch_choices(i,
+                                                 self.serving.batch_choices)),
+                b + self.options.aimd_increase)
+            for i, b in enumerate(self._aimd_batches)]
 
     # ------------------------------------------------------------------
     def plan(self, telemetry: Telemetry) -> AllocationPlan:
@@ -63,26 +72,25 @@ class ResourceManager:
         opts = self.options
         kw = dict(
             num_workers=telemetry.live_workers or self.serving.num_workers,
-            queue_light=telemetry.queue_light,
-            queue_heavy=telemetry.queue_heavy,
-            arrival_light=telemetry.arrival_light_qps,
-            arrival_heavy=telemetry.arrival_heavy_qps,
+            queues=telemetry.queues,
+            arrivals=telemetry.arrivals,
         )
         if opts.mode == "static_threshold":
-            plan = solve_allocation(self.cascade, self.serving, self.profile,
-                                    demand, fixed_threshold=opts.static_threshold,
-                                    **kw)
+            plan = solve_cascade(
+                self.spec, self.serving, self.profiles, demand,
+                fixed_thresholds=(opts.static_threshold,)
+                * self.spec.num_boundaries, **kw)
         elif opts.mode == "aimd_batching":
-            plan = solve_allocation(self.cascade, self.serving, self.profile,
-                                    demand,
-                                    fixed_batches=(self._aimd_b1,
-                                                   self._aimd_b2), **kw)
+            plan = solve_cascade(self.spec, self.serving, self.profiles,
+                                 demand,
+                                 fixed_batches=tuple(self._aimd_batches),
+                                 **kw)
         elif opts.mode == "no_queuing_model":
-            plan = solve_allocation(self.cascade, self.serving, self.profile,
-                                    demand, queuing_model="proteus_2x", **kw)
+            plan = solve_cascade(self.spec, self.serving, self.profiles,
+                                 demand, queuing_model="proteus_2x", **kw)
         else:
-            plan = solve_allocation(self.cascade, self.serving, self.profile,
-                                    demand, **kw)
+            plan = solve_cascade(self.spec, self.serving, self.profiles,
+                                 demand, **kw)
         self.solve_times_ms.append(plan.solve_ms)
         self.last_plan = plan
         return plan

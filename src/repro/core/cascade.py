@@ -1,91 +1,188 @@
-"""Model-cascade abstraction (the paper's core object).
+"""Model-cascade abstraction (the paper's core object), generalized to N
+stages.
 
-A cascade = (light model, heavy model, discriminator). ``run_batch``
-executes the real pipeline: light generation → discriminator confidence →
-threshold → heavy generation for deferred queries. The same interface
-drives diffusion cascades (the paper) and LM cascades (§5 extension, used
-for the assigned LM architectures).
+A cascade = an ordered list of (config, params) model stages plus a
+discriminator. ``run_batch`` executes the real pipeline: stage-0
+generation → discriminator confidence → threshold → next-stage generation
+for deferred queries, repeated down the cascade. The same interface drives
+diffusion cascades (the paper) and LM cascades (§5 extension, used for the
+assigned LM architectures).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config.base import CascadeConfig, DiffusionConfig
+from repro.config.base import DiffusionConfig
 from repro.models import diffusion as diff
 from repro.models.efficientnet import (DiscriminatorConfig,
                                        apply_discriminator)
+
+Stage = Tuple[DiffusionConfig, object]        # (config, params)
 
 
 @dataclasses.dataclass
 class CascadeResult:
     outputs: np.ndarray            # final images / tokens per query
-    confidences: np.ndarray        # discriminator scores of light outputs
-    deferred: np.ndarray           # bool mask: sent to heavy
-    light_outputs: np.ndarray
+    confidences: np.ndarray        # stage-0 discriminator scores
+    deferred: np.ndarray           # bool mask: sent past stage 0
+    light_outputs: np.ndarray      # stage-0 generations
+    stage_index: Optional[np.ndarray] = None   # final stage per query
+    boundary_confidences: Optional[List[np.ndarray]] = None
+
+
+def _normalize_thresholds(thresholds: Union[float, Sequence[float]],
+                          num_boundaries: int) -> Tuple[float, ...]:
+    if isinstance(thresholds, (int, float)):
+        return (float(thresholds),) * num_boundaries
+    ts = tuple(float(t) for t in thresholds)
+    if len(ts) != num_boundaries:
+        raise ValueError(f"need {num_boundaries} thresholds, got {len(ts)}")
+    return ts
 
 
 class DiffusionCascade:
-    """Real-execution diffusion cascade (toy scale on CPU, full on TPU)."""
+    """Real-execution diffusion cascade (toy scale on CPU, full on TPU).
 
-    def __init__(self, light_cfg: DiffusionConfig, light_params,
-                 heavy_cfg: DiffusionConfig, heavy_params,
+    ``stages`` is an ordered sequence of (DiffusionConfig, params) pairs,
+    cheapest first; queries defer stage i -> i+1 when the discriminator
+    scores stage i's output below ``thresholds[i]``.
+    """
+
+    def __init__(self, stages: Sequence[Stage],
                  disc_cfg: DiscriminatorConfig, disc_params,
                  latent_to_image: Optional[Callable] = None):
-        self.light_cfg, self.light_params = light_cfg, light_params
-        self.heavy_cfg, self.heavy_params = heavy_cfg, heavy_params
+        if isinstance(stages, DiffusionConfig):
+            raise TypeError(
+                "DiffusionCascade now takes an ordered list of "
+                "(config, params) stages; wrap the light/heavy pair as "
+                "[(light_cfg, light_params), (heavy_cfg, heavy_params)]")
+        self.stages: Tuple[Stage, ...] = tuple(stages)
+        if len(self.stages) < 2:
+            raise ValueError("a cascade needs >= 2 stages")
         self.disc_cfg, self.disc_params = disc_cfg, disc_params
         self.latent_to_image = latent_to_image or (lambda z: z)
-
-        self._light = jax.jit(
-            lambda p, k, toks: diff.ddim_sample(p, light_cfg, k, toks))
-        self._heavy = jax.jit(
-            lambda p, k, toks: diff.ddim_sample(p, heavy_cfg, k, toks))
+        self._samplers = [
+            jax.jit(lambda p, k, toks, cfg=cfg:
+                    diff.ddim_sample(p, cfg, k, toks))
+            for cfg, _ in self.stages]
         self._score = jax.jit(
             lambda p, imgs: jax.nn.softmax(
                 apply_discriminator(p, disc_cfg, imgs)[0], -1)[:, 1])
 
+    # ------- structure / legacy accessors -------
+    @property
+    def num_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def light_cfg(self) -> DiffusionConfig:
+        return self.stages[0][0]
+
+    @property
+    def light_params(self):
+        return self.stages[0][1]
+
+    @property
+    def heavy_cfg(self) -> DiffusionConfig:
+        return self.stages[-1][0]
+
+    @property
+    def heavy_params(self):
+        return self.stages[-1][1]
+
+    def stage_fns(self):
+        """(config, jitted_sampler, params) per stage (cluster mode uses
+        this to measure per-stage execution profiles)."""
+        return [(cfg, fn, params) for (cfg, params), fn in
+                zip(self.stages, self._samplers)]
+
     def confidence(self, images) -> np.ndarray:
         return np.asarray(self._score(self.disc_params, images))
 
-    def run_batch(self, key, prompt_tokens, threshold: float) -> CascadeResult:
-        kl, kh = jax.random.split(key)
-        light = self._light(self.light_params, kl, prompt_tokens)
-        imgs = self.latent_to_image(light)
-        conf = self.confidence(imgs)
-        deferred = conf < threshold
-        outputs = np.asarray(imgs)
-        if bool(deferred.any()):
-            heavy = self._heavy(self.heavy_params, kh, prompt_tokens)
-            heavy_imgs = np.asarray(self.latent_to_image(heavy))
-            outputs = np.where(deferred[:, None, None, None], heavy_imgs,
-                               outputs)
-        return CascadeResult(outputs=outputs, confidences=conf,
-                             deferred=np.asarray(deferred),
-                             light_outputs=np.asarray(imgs))
+    def run_batch(self, key, prompt_tokens,
+                  thresholds: Union[float, Sequence[float]]) -> CascadeResult:
+        """Execute the full cascade: a scalar threshold broadcasts to all
+        boundaries (legacy two-tier call sites pass one float)."""
+        n = self.num_stages
+        ths = _normalize_thresholds(thresholds, n - 1)
+        keys = jax.random.split(key, n)
+        first = self._samplers[0](self.stages[0][1], keys[0], prompt_tokens)
+        imgs0 = self.latent_to_image(first)
+        conf0 = self.confidence(imgs0)
+        outputs = np.asarray(imgs0)
+        light_outputs = np.asarray(imgs0)
+        stage_idx = np.zeros(len(conf0), dtype=np.int64)
+        boundary_confs: List[np.ndarray] = [conf0]
+        active = conf0 < ths[0]
+        for i in range(1, n):
+            if not bool(active.any()):
+                break
+            gen = self._samplers[i](self.stages[i][1], keys[i], prompt_tokens)
+            imgs = np.asarray(self.latent_to_image(gen))
+            outputs = np.where(active[:, None, None, None], imgs, outputs)
+            stage_idx = np.where(active, i, stage_idx)
+            if i < n - 1:
+                conf = self.confidence(jnp.asarray(imgs))
+                boundary_confs.append(np.asarray(conf))
+                active = active & (np.asarray(conf) < ths[i])
+            else:
+                active = np.zeros_like(active)
+        return CascadeResult(outputs=outputs, confidences=conf0,
+                             deferred=stage_idx > 0,
+                             light_outputs=light_outputs,
+                             stage_index=stage_idx,
+                             boundary_confidences=boundary_confs)
 
 
 class LMCascade:
-    """LM cascade (paper §5): light/heavy LM configs of the same family;
-    confidence = mean top-token probability of the light generation."""
+    """LM cascade (paper §5): an ordered list of same-family LM step
+    callables; confidence = mean top-token probability of each stage's
+    generation."""
 
-    def __init__(self, light_step: Callable, heavy_step: Callable):
-        """*_step(prompt_tokens) -> (tokens, logprobs) host callables."""
-        self.light_step = light_step
-        self.heavy_step = heavy_step
+    def __init__(self, *steps: Callable):
+        """Each step(prompt_tokens) -> (tokens, logprobs) host callable,
+        cheapest first."""
+        if len(steps) == 1 and isinstance(steps[0], (list, tuple)):
+            steps = tuple(steps[0])
+        if len(steps) < 2:
+            raise ValueError("an LM cascade needs >= 2 stages")
+        self.steps: Tuple[Callable, ...] = tuple(steps)
 
-    def run_batch(self, prompt_tokens, threshold: float) -> CascadeResult:
-        tokens, logprobs = self.light_step(prompt_tokens)
-        conf = np.exp(np.asarray(logprobs)).mean(axis=-1)
-        deferred = conf < threshold
+    @property
+    def light_step(self) -> Callable:
+        return self.steps[0]
+
+    @property
+    def heavy_step(self) -> Callable:
+        return self.steps[-1]
+
+    def run_batch(self, prompt_tokens,
+                  thresholds: Union[float, Sequence[float]]) -> CascadeResult:
+        n = len(self.steps)
+        ths = _normalize_thresholds(thresholds, n - 1)
+        tokens, logprobs = self.steps[0](prompt_tokens)
+        conf0 = np.exp(np.asarray(logprobs)).mean(axis=-1)
         outputs = np.asarray(tokens)
-        if bool(deferred.any()):
-            h_tokens, _ = self.heavy_step(prompt_tokens)
-            outputs = np.where(deferred[:, None], np.asarray(h_tokens),
-                               outputs)
-        return CascadeResult(outputs=outputs, confidences=conf,
-                             deferred=deferred, light_outputs=np.asarray(tokens))
+        light_outputs = np.asarray(tokens)
+        stage_idx = np.zeros(len(conf0), dtype=np.int64)
+        active = conf0 < ths[0]
+        for i in range(1, n):
+            if not bool(active.any()):
+                break
+            toks_i, logp_i = self.steps[i](prompt_tokens)
+            outputs = np.where(active[:, None], np.asarray(toks_i), outputs)
+            stage_idx = np.where(active, i, stage_idx)
+            if i < n - 1:
+                conf = np.exp(np.asarray(logp_i)).mean(axis=-1)
+                active = active & (conf < ths[i])
+            else:
+                active = np.zeros_like(active)
+        return CascadeResult(outputs=outputs, confidences=conf0,
+                             deferred=stage_idx > 0,
+                             light_outputs=light_outputs,
+                             stage_index=stage_idx)

@@ -1,14 +1,16 @@
 """Confidence scores and the deferral profile f(t).
 
 f(t) = fraction of queries whose discriminator confidence is below the
-threshold t — i.e. the fraction deferred to the heavy model. Initialized
-from offline profiling (a sample of confidence scores), updated online as
-the controller observes fresh scores (paper §3.3).
+threshold t — i.e. the fraction deferred across a cascade boundary to the
+next (more capable) tier. An N-tier cascade carries one profile per
+boundary (N-1 of them; see ``as_boundary_profiles``). Initialized from
+offline profiling (a sample of confidence scores), updated online as the
+controller observes fresh scores (paper §3.3).
 """
 from __future__ import annotations
 
 import bisect
-from typing import Iterable, List, Optional, Sequence
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,6 +50,23 @@ class DeferralProfile:
 
     def __len__(self):
         return len(self._scores)
+
+
+def as_boundary_profiles(profiles, num_boundaries: int
+                         ) -> Tuple[DeferralProfile, ...]:
+    """Normalize a single profile or a sequence to one profile per cascade
+    boundary. Missing deeper boundaries are filled with independent copies
+    of the last given profile (same score distribution, separate online
+    state — boundary updates must not alias)."""
+    if isinstance(profiles, DeferralProfile):
+        seq: List[DeferralProfile] = [profiles]
+    else:
+        seq = list(profiles)
+    if not seq:
+        raise ValueError("need at least one deferral profile")
+    while len(seq) < num_boundaries:
+        seq.append(DeferralProfile(list(seq[-1]._scores)))
+    return tuple(seq[:num_boundaries])
 
 
 def synthetic_confidence_scores(rng: np.random.Generator, n: int = 5000,

@@ -1,55 +1,106 @@
-"""The DiffServe resource-allocation MILP (paper §3.3) and its exact solver.
+"""The DiffServe resource-allocation MILP (paper §3.3), generalized from
+the paper's light/heavy pair to an N-tier cascade, with an exact solver.
 
-    max_{x1,x2,b1,b2,t}  t
-    s.t.  e1(b1) + q1 + e2(b2) + q2 + disc  <=  SLO          (latency, Eq.1)
-          x1 * T1(b1)  >=  λD                                 (Eq.2)
-          x2 * T2(b2)  >=  λD * f(t)                          (Eq.3)
-          x1 + x2      <=  S                                  (Eq.4)
+For an ordered cascade of tiers 0..N-1 (tier 0 sees every query, each
+boundary i defers a query-aware fraction f_i(t_i) of tier i's load to
+tier i+1):
 
-Decision space: b1,b2 from a small discrete set; x1,x2 integers; t in [0,1].
-Because f is monotone non-decreasing in t, the optimal t for fixed
-(b1, b2) is found exactly by inverting f at the residual heavy capacity —
-so full enumeration over (b1, b2) gives the global optimum. A generic
-branch-and-bound solver (core/bnb.py) cross-checks the integer parts
-(property-tested).
+    max_{x, b, t}  (t_0, t_1, ..., t_{N-2})        lexicographic
+    s.t.  sum_i e_i(b_i) + q_i + disc_i  <=  SLO          (latency, Eq.1)
+          x_0 * T_0(b_0)  >=  λD                          (Eq.2)
+          x_{i+1} * T_{i+1}(b_{i+1})  >=  λ_i * f_i(t_i)  (Eq.3, per tier)
+          sum_i x_i       <=  S                           (Eq.4)
+    with  λ_0 = λD,  λ_{i+1} = λ_i * f_i(t_i).
+
+Decision space: b_i from small discrete sets; x_i integers; t_i in [0,1].
+Because each f_i is monotone non-decreasing, the optimal thresholds for a
+fixed batch tuple close tier-by-tier: t_i is found exactly by inverting
+f_i at the residual downstream capacity, then tier i+1's worker count is
+the capacity ceiling for the deferred load. Full enumeration over batch
+tuples therefore gives the global optimum; the paper's two-tier solver is
+the N=2 special case (``two_tier_reference``, property-tested). A generic
+branch-and-bound solver (core/bnb.py) cross-checks the integer parts.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
-from repro.config.base import CascadeConfig, LatencyProfile, ServingConfig
+from repro.config.base import (CascadeConfig, CascadeSpec, ServingConfig,
+                               as_cascade_spec, tier_rho)
 from repro.core.confidence import DeferralProfile
 
 
 @dataclasses.dataclass(frozen=True)
 class AllocationPlan:
-    x1: int                   # workers hosting light + discriminator
-    x2: int                   # workers hosting heavy
-    b1: int
-    b2: int
-    threshold: float
+    """Per-tier allocation vectors: ``workers[i]`` workers run tier i with
+    batch size ``batches[i]``; ``thresholds[i]`` gates boundary i->i+1."""
+    workers: Tuple[int, ...]
+    batches: Tuple[int, ...]
+    thresholds: Tuple[float, ...]
     expected_latency: float
     feasible: bool
     solve_ms: float = 0.0
     objective: float = -1.0
 
     @property
+    def num_tiers(self) -> int:
+        return len(self.workers)
+
+    @property
     def total_workers(self) -> int:
-        return self.x1 + self.x2
+        return sum(self.workers)
+
+    # ------- two-tier accessors (legacy call sites / tests) -------
+    @property
+    def x1(self) -> int:
+        return self.workers[0]
+
+    @property
+    def x2(self) -> int:
+        return self.workers[1] if len(self.workers) > 1 else 0
+
+    @property
+    def b1(self) -> int:
+        return self.batches[0]
+
+    @property
+    def b2(self) -> int:
+        return self.batches[1] if len(self.batches) > 1 else self.batches[0]
+
+    @property
+    def threshold(self) -> float:
+        return self.thresholds[0] if self.thresholds else 1.0
 
 
 @dataclasses.dataclass
 class Telemetry:
-    """Controller inputs gathered from workers each tick."""
+    """Controller inputs gathered from workers each tick: per-tier queue
+    lengths and arrival-rate estimates (index = tier)."""
     demand_qps: float
-    queue_light: float = 0.0
-    queue_heavy: float = 0.0
-    arrival_light_qps: float = 0.0
-    arrival_heavy_qps: float = 0.0
+    queues: Tuple[float, ...] = ()
+    arrivals: Tuple[float, ...] = ()
     live_workers: int = 0
+
+    # ------- two-tier accessors -------
+    @property
+    def queue_light(self) -> float:
+        return self.queues[0] if self.queues else 0.0
+
+    @property
+    def queue_heavy(self) -> float:
+        return self.queues[1] if len(self.queues) > 1 else 0.0
+
+    @property
+    def arrival_light_qps(self) -> float:
+        return self.arrivals[0] if self.arrivals else 0.0
+
+    @property
+    def arrival_heavy_qps(self) -> float:
+        return self.arrivals[1] if len(self.arrivals) > 1 else 0.0
 
 
 def queuing_delay(queue_len: float, arrival_qps: float) -> float:
@@ -59,8 +110,166 @@ def queuing_delay(queue_len: float, arrival_qps: float) -> float:
     return queue_len / arrival_qps
 
 
+def _pad(vals: Optional[Sequence[float]], n: int) -> Tuple[float, ...]:
+    out = tuple(float(v) for v in (vals or ()))
+    return (out + (0.0,) * n)[:n]
+
+
+def solve_cascade(
+    cascade: "CascadeSpec | CascadeConfig",
+    serving: ServingConfig,
+    profiles: Sequence[DeferralProfile],
+    demand_qps: float,
+    *,
+    num_workers: Optional[int] = None,
+    queues: Optional[Sequence[float]] = None,
+    arrivals: Optional[Sequence[float]] = None,
+    queuing_model: str = "littles_law",   # | "proteus_2x" (ablation)
+    fixed_thresholds: Optional[Sequence[float]] = None,
+    fixed_batches: Optional[Sequence[int]] = None,
+) -> AllocationPlan:
+    """Exact N-tier solver: enumerate batch tuples, close the integer
+    worker counts and deferral thresholds tier-by-tier from residual
+    capacity (see module docstring)."""
+    t0 = time.perf_counter()
+    spec = as_cascade_spec(cascade)
+    if isinstance(profiles, DeferralProfile):
+        profiles = [profiles]
+    n = spec.num_tiers
+    if len(profiles) < spec.num_boundaries:
+        raise ValueError(f"{spec.name}: need {spec.num_boundaries} deferral "
+                         f"profiles, got {len(profiles)}")
+    S = num_workers if num_workers is not None else serving.num_workers
+    lam_D = serving.overprovision * max(demand_qps, 1e-9)
+    queues = _pad(queues, n)
+    arrivals = _pad(arrivals, n)
+    profs = [spec.tiers[i].profile for i in range(n)]
+    rhos = [tier_rho(spec, serving, i) for i in range(n)]
+    disc_total = sum(spec.tiers[i].disc_latency_s for i in range(n - 1))
+    drains = [q / max(spec.slo_s, 1e-9) for q in queues]
+
+    if fixed_thresholds is not None and \
+            len(fixed_thresholds) != spec.num_boundaries:
+        raise ValueError(f"{spec.name}: fixed_thresholds needs "
+                         f"{spec.num_boundaries} entries (one per "
+                         f"boundary), got {len(fixed_thresholds)}")
+    if fixed_batches is not None:
+        if len(fixed_batches) != n:
+            raise ValueError(f"{spec.name}: fixed_batches needs {n} "
+                             f"entries (one per tier), got "
+                             f"{len(fixed_batches)}")
+        batch_tuples = [tuple(fixed_batches)]
+    else:
+        batch_tuples = itertools.product(
+            *[spec.tier_batch_choices(i, serving.batch_choices)
+              for i in range(n)])
+
+    best: Optional[AllocationPlan] = None
+    for batches in batch_tuples:
+        if queuing_model == "littles_law":
+            qd = [queuing_delay(queues[0], max(arrivals[0], lam_D))]
+            qd += [queuing_delay(queues[i], arrivals[i]) if queues[i] else 0.0
+                   for i in range(1, n)]
+        else:                               # Proteus heuristic (ablation)
+            qd = [2 * profs[i].exec_latency(batches[i]) for i in range(n)]
+        latency = sum(profs[i].exec_latency(batches[i])
+                      for i in range(n)) + sum(qd) + disc_total
+        if latency > spec.slo_s:
+            continue
+        # utilization caps keep queues stable (ρ<1 — Little's law blows up
+        # at ρ=1); backlog drains within one SLO window
+        x0 = max(int(math.ceil(
+            (lam_D / rhos[0] + drains[0])
+            / profs[0].throughput(batches[0]))), 1)
+        if x0 > S:
+            continue
+        residual = S - x0
+        workers = [x0]
+        thresholds = []
+        lam = lam_D
+        ok = True
+        for b in range(spec.num_boundaries):
+            j = b + 1                        # tier fed by boundary b
+            eff_T = profs[j].throughput(batches[j]) * rhos[j]
+            drain = drains[j]
+            if fixed_thresholds is not None:
+                t = fixed_thresholds[b]
+                need = lam * profiles[b].f(t) + drain
+                x = int(math.ceil(need / eff_T)) if need > 0 else 0
+                if x > residual:
+                    ok = False
+                    break
+            else:
+                # largest t whose deferred load fits the residual capacity
+                cap_frac = max(residual * eff_T - drain, 0.0) / max(lam, 1e-12)
+                t = profiles[b].inverse(cap_frac)
+                x = int(math.ceil((lam * profiles[b].f(t) + drain) / eff_T)) \
+                    if profiles[b].f(t) > 0 or drain > 0 else 0
+                x = min(x, residual)
+            workers.append(x)
+            thresholds.append(t)
+            residual -= x
+            lam = lam * profiles[b].f(t)
+        if not ok:
+            continue
+        cand = AllocationPlan(workers=tuple(workers), batches=tuple(batches),
+                              thresholds=tuple(thresholds),
+                              expected_latency=latency, feasible=True,
+                              objective=thresholds[0])
+        if (best is None or cand.thresholds > best.thresholds
+                or (cand.thresholds == best.thresholds
+                    and cand.total_workers < best.total_workers)):
+            best = cand
+
+    ms = (time.perf_counter() - t0) * 1e3
+    if best is None:
+        # infeasible: degrade to all-tier-0 at max batch (SLO-pressure mode)
+        batches = tuple(max(spec.tier_batch_choices(i, serving.batch_choices))
+                        for i in range(n))
+        x0 = min(S, max(int(math.ceil(
+            lam_D / profs[0].throughput(batches[0]))), 1))
+        workers = (x0, max(S - x0, 0)) + (0,) * (n - 2)
+        return AllocationPlan(workers=workers, batches=batches,
+                              thresholds=(0.0,) * spec.num_boundaries,
+                              expected_latency=profs[0].exec_latency(
+                                  batches[0]),
+                              feasible=False, solve_ms=ms, objective=0.0)
+    return dataclasses.replace(best, solve_ms=ms)
+
+
 def solve_allocation(
-    cascade: CascadeConfig,
+    cascade: "CascadeSpec | CascadeConfig",
+    serving: ServingConfig,
+    profile: "DeferralProfile | Sequence[DeferralProfile]",
+    demand_qps: float,
+    *,
+    num_workers: Optional[int] = None,
+    queue_light: float = 0.0,
+    queue_heavy: float = 0.0,
+    arrival_light: float = 0.0,
+    arrival_heavy: float = 0.0,
+    queuing_model: str = "littles_law",
+    fixed_threshold: Optional[float] = None,
+    fixed_batches: Optional[Tuple[int, int]] = None,
+) -> AllocationPlan:
+    """Two-tier-shaped wrapper over ``solve_cascade`` (N=2 legacy entry
+    point; scalar telemetry kwargs map onto the first two tiers)."""
+    spec = as_cascade_spec(cascade)
+    profiles = ([profile] if isinstance(profile, DeferralProfile)
+                else list(profile))
+    fixed_ts = None
+    if fixed_threshold is not None:
+        fixed_ts = (fixed_threshold,) * spec.num_boundaries
+    return solve_cascade(
+        spec, serving, profiles, demand_qps, num_workers=num_workers,
+        queues=(queue_light, queue_heavy), arrivals=(arrival_light,
+                                                     arrival_heavy),
+        queuing_model=queuing_model, fixed_thresholds=fixed_ts,
+        fixed_batches=fixed_batches)
+
+
+def two_tier_reference(
+    cascade: "CascadeSpec | CascadeConfig",
     serving: ServingConfig,
     profile: DeferralProfile,
     demand_qps: float,
@@ -70,18 +279,21 @@ def solve_allocation(
     queue_heavy: float = 0.0,
     arrival_light: float = 0.0,
     arrival_heavy: float = 0.0,
-    queuing_model: str = "littles_law",   # | "proteus_2x" (ablation)
+    queuing_model: str = "littles_law",
     fixed_threshold: Optional[float] = None,
     fixed_batches: Optional[Tuple[int, int]] = None,
 ) -> AllocationPlan:
-    """Exact solver: enumerate (b1, b2), close the integer/threshold forms."""
+    """The paper's original two-tier closed-form solver, kept verbatim as
+    the N=2 reference implementation (property-tested against
+    ``solve_cascade``). Do not extend — extend ``solve_cascade``."""
     t0 = time.perf_counter()
+    spec = as_cascade_spec(cascade)
     S = num_workers if num_workers is not None else serving.num_workers
     lam_D = serving.overprovision * max(demand_qps, 1e-9)
-    e1 = cascade.light_profile.exec_latency
-    e2 = cascade.heavy_profile.exec_latency
-    T1 = cascade.light_profile.throughput
-    T2 = cascade.heavy_profile.throughput
+    e1 = spec.light_profile.exec_latency
+    e2 = spec.heavy_profile.exec_latency
+    T1 = spec.light_profile.throughput
+    T2 = spec.heavy_profile.throughput
 
     best: Optional[AllocationPlan] = None
     batch_pairs = ([fixed_batches] if fixed_batches else
@@ -93,15 +305,13 @@ def solve_allocation(
             q1 = queuing_delay(queue_light, max(arrival_light, lam_D))
             q2 = queuing_delay(queue_heavy, max(arrival_heavy, 1e-9)) \
                 if queue_heavy else 0.0
-        else:                               # Proteus heuristic (ablation)
+        else:
             q1, q2 = 2 * e1(b1), 2 * e2(b2)
-        latency = e1(b1) + q1 + e2(b2) + q2 + cascade.disc_latency_s
-        if latency > cascade.slo_s:
+        latency = e1(b1) + q1 + e2(b2) + q2 + spec.disc_latency_s
+        if latency > spec.slo_s:
             continue
-        # utilization caps keep queues stable (ρ<1 — Little's law blows up
-        # at ρ=1); backlog drains within one SLO window
-        drain1 = queue_light / max(cascade.slo_s, 1e-9)
-        drain2 = queue_heavy / max(cascade.slo_s, 1e-9)
+        drain1 = queue_light / max(spec.slo_s, 1e-9)
+        drain2 = queue_heavy / max(spec.slo_s, 1e-9)
         x1 = max(int(math.ceil(
             (lam_D / serving.rho_light + drain1) / T1(b1))), 1)
         if x1 > S:
@@ -115,15 +325,14 @@ def solve_allocation(
             if x2 > remaining:
                 continue
         else:
-            # largest t whose deferred load fits the residual capacity
             cap_frac = max(remaining * eff_T2 - drain2, 0.0) / lam_D
             t = profile.inverse(cap_frac)
             x2 = int(math.ceil((lam_D * profile.f(t) + drain2) / eff_T2)) \
                 if profile.f(t) > 0 or drain2 > 0 else 0
             x2 = min(x2, remaining)
-        cand = AllocationPlan(x1=x1, x2=x2, b1=b1, b2=b2, threshold=t,
-                              expected_latency=latency, feasible=True,
-                              objective=t)
+        cand = AllocationPlan(workers=(x1, x2), batches=(b1, b2),
+                              thresholds=(t,), expected_latency=latency,
+                              feasible=True, objective=t)
         if (best is None or cand.objective > best.objective
                 or (cand.objective == best.objective
                     and cand.total_workers < best.total_workers)):
@@ -131,18 +340,17 @@ def solve_allocation(
 
     ms = (time.perf_counter() - t0) * 1e3
     if best is None:
-        # infeasible: degrade to all-light at max batch (SLO-pressure mode)
         b1 = max(serving.batch_choices)
         x1 = min(S, max(int(math.ceil(lam_D / T1(b1))), 1))
-        return AllocationPlan(x1=x1, x2=max(S - x1, 0), b1=b1,
-                              b2=max(serving.batch_choices), threshold=0.0,
-                              expected_latency=e1(b1), feasible=False,
-                              solve_ms=ms, objective=0.0)
+        return AllocationPlan(workers=(x1, max(S - x1, 0)),
+                              batches=(b1, max(serving.batch_choices)),
+                              thresholds=(0.0,), expected_latency=e1(b1),
+                              feasible=False, solve_ms=ms, objective=0.0)
     return dataclasses.replace(best, solve_ms=ms)
 
 
 def solve_heterogeneous(
-    cascade: CascadeConfig,
+    cascade: "CascadeSpec | CascadeConfig",
     serving: ServingConfig,
     profile: DeferralProfile,
     demand_qps: float,
@@ -152,10 +360,11 @@ def solve_heterogeneous(
     """Heterogeneous-cluster extension (paper §5): worker classes c with
     (count_c, speed_c). Solved as a true MILP via core/bnb.py:
       max t  ≅  for t on a grid: feasibility ILP over x_{model,class}.
-    Returns the best feasible plan."""
+    Returns the best feasible plan (first/last tier of the cascade)."""
     from repro.core.bnb import MILP, solve_milp
     import numpy as np
 
+    spec = as_cascade_spec(cascade)
     names = sorted(classes)
     counts = [classes[c][0] for c in names]
     speeds = [classes[c][1] for c in names]
@@ -168,8 +377,8 @@ def solve_heterogeneous(
         n = len(names)
         b1 = max(serving.batch_choices)
         b2 = max(serving.batch_choices)
-        T1 = cascade.light_profile.throughput(b1)
-        T2 = cascade.heavy_profile.throughput(b2)
+        T1 = spec.light_profile.throughput(b1)
+        T2 = spec.heavy_profile.throughput(b2)
         c_obj = np.ones(2 * n)
         A, rhs = [], []
         # -sum(x1_c * T1 * speed_c) <= -lam_D

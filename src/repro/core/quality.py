@@ -4,11 +4,13 @@ FID* — exact Fréchet distance between feature distributions (discriminator
 penultimate features stand in for InceptionV3, which is unavailable offline;
 the math is the real thing).
 
-Simulator quality model — FID as a function of the deferral fraction p and
+Simulator quality model — FID as a function of the cascade mix p and
 router skill, calibrated to the paper's reported statistics:
-  * all-light / all-heavy FID anchors per cascade,
+  * first-tier / final-tier FID anchors per cascade,
   * non-monotone dip: best FID at a partial mix (paper Fig. 1a / §4.2),
   * router skill: discriminator > random > pickscore/clipscore (Fig. 1a).
+For a two-tier cascade p is the deferred fraction; for an N-tier cascade
+p is the mean normalized depth (final tier = 1) of served queries.
 """
 from __future__ import annotations
 
@@ -18,7 +20,6 @@ from typing import Optional
 
 import numpy as np
 
-from repro.config.base import CascadeConfig
 
 
 # ---------------------------------------------------------------------------
@@ -70,7 +71,8 @@ ROUTER_SKILL = {
 
 @dataclasses.dataclass(frozen=True)
 class QualityModel:
-    """FID(p; skill): p = fraction deferred to the heavy model."""
+    """FID(p; skill): p = cascade mix in [0, 1] — the deferred fraction for
+    a two-tier cascade, mean normalized tier depth for deeper ones."""
     fid_all_light: float
     fid_all_heavy: float
     fid_best_mix: float
@@ -96,7 +98,9 @@ class QualityModel:
         return linear - skill * dip_at_best * shape(p) / shape(self.best_mix_p)
 
     @classmethod
-    def from_cascade(cls, c: CascadeConfig) -> "QualityModel":
+    def from_cascade(cls, c) -> "QualityModel":
+        """Accepts a CascadeSpec or legacy CascadeConfig (both expose the
+        first/last-tier FID anchors)."""
         return cls(fid_all_light=c.fid_all_light,
                    fid_all_heavy=c.fid_all_heavy,
                    fid_best_mix=c.fid_best_mix,

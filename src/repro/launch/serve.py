@@ -1,12 +1,15 @@
 """End-to-end serving driver (the paper's kind of system).
 
-Runs the full DiffServe pipeline — controller + MILP + cascade + trace —
-either in simulator mode (paper-profile latencies; the paper's own headline
-results are simulator results) or with a real JAX-executed toy cascade
-whose latencies are measured on this machine and fed to the same MILP.
+Runs the full DiffServe pipeline — controller + cascade solver + N-tier
+cascade + trace — either in simulator mode (paper-profile latencies; the
+paper's own headline results are simulator results) or with a real
+JAX-executed toy cascade whose latencies are measured on this machine and
+fed to the same solver.
 
   PYTHONPATH=src python -m repro.launch.serve --cascade sdturbo \
       --baseline diffserve --workers 16 --trace-min 4 --trace-max 32
+  PYTHONPATH=src python -m repro.launch.serve --list-cascades
+  PYTHONPATH=src python -m repro.launch.serve --cascade sdxs3 --workers 24
 """
 from __future__ import annotations
 
@@ -17,13 +20,15 @@ import pathlib
 import numpy as np
 
 from repro.serving.baselines import BASELINES, run_baseline
-from repro.serving.profiles import CASCADES, default_serving
+from repro.serving.profiles import CASCADES, default_serving, list_cascades
 from repro.serving.trace import azure_like_trace, load_trace_file, static_trace
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cascade", default="sdturbo", choices=sorted(CASCADES))
+    ap.add_argument("--list-cascades", action="store_true",
+                    help="print the registered cascades and exit")
     ap.add_argument("--baseline", default="diffserve",
                     choices=list(BASELINES))
     ap.add_argument("--workers", type=int, default=16)
@@ -36,23 +41,37 @@ def main():
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
+    if args.list_cascades:
+        print(f"{'name':10s} {'tiers':40s} {'SLO':>6s}")
+        for name, chain, slo, _n in list_cascades():
+            print(f"{name:10s} {chain:40s} {slo:5.1f}s")
+        return
+
     if args.trace_file:
         trace = load_trace_file(args.trace_file)
-    elif args.static_qps:
+    elif args.static_qps is not None:
+        if args.static_qps < 0:
+            ap.error(f"--static-qps must be >= 0, got {args.static_qps}")
         trace = static_trace(args.static_qps, args.duration)
     else:
         trace = azure_like_trace(args.duration, seed=3).scale(
             args.trace_min, args.trace_max)
     serving = default_serving(args.cascade, num_workers=args.workers)
+    spec = serving.cascade
     r = run_baseline(args.baseline, trace, serving, seed=args.seed)
 
     report = {
-        "cascade": args.cascade, "baseline": args.baseline,
+        "cascade": args.cascade,
+        "tiers": [t.model for t in spec.tiers],
+        "baseline": args.baseline,
         "workers": args.workers, "trace": trace.name,
         "total_queries": r.total, "completed": r.completed,
         "dropped": r.dropped, "slo_violation_ratio": round(r.violation_ratio, 4),
         "mean_fid": round(r.mean_fid, 3),
         "defer_fraction": round(r.defer_fraction, 3),
+        "boundary_defer_fractions": [
+            round(f, 3) for f in r.boundary_defer_fractions()],
+        "completed_per_tier": list(r.completed_per_tier),
         "p50_latency_s": round(float(np.percentile(r.latencies, 50)), 3)
         if r.latencies else None,
         "p99_latency_s": round(float(np.percentile(r.latencies, 99)), 3)

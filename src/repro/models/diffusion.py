@@ -8,6 +8,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.config.base import DiffusionConfig
@@ -17,11 +18,18 @@ NUM_TRAIN_STEPS = 1000
 
 
 @functools.lru_cache()
-def _schedule(n: int = NUM_TRAIN_STEPS):
-    t = jnp.arange(n + 1, dtype=jnp.float32) / n
-    f = jnp.cos((t + 0.008) / 1.008 * jnp.pi / 2) ** 2
+def _schedule_np(n: int = NUM_TRAIN_STEPS) -> np.ndarray:
+    # the cache holds a concrete numpy array: caching a value computed with
+    # jnp ops inside a jit trace would leak a tracer and break every later
+    # trace that reuses the cache
+    t = np.arange(n + 1, dtype=np.float32) / n
+    f = np.cos((t + 0.008) / 1.008 * np.pi / 2) ** 2
     alphas_bar = f / f[0]
-    return jnp.clip(alphas_bar, 1e-5, 1.0)
+    return np.clip(alphas_bar, 1e-5, 1.0)
+
+
+def _schedule(n: int = NUM_TRAIN_STEPS):
+    return jnp.asarray(_schedule_np(n))
 
 
 def q_sample(x0, t, noise):

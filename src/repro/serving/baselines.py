@@ -1,24 +1,25 @@
-"""The paper's comparison systems (Table 1) as simulator configurations.
+"""The paper's comparison systems (Table 1) as simulator configurations,
+generalized to N-tier cascades.
 
-  Clipper-Light     static, query-agnostic, all-light
-  Clipper-Heavy     static, query-agnostic, all-heavy
+  Clipper-Light     static, query-agnostic, all tier-0
+  Clipper-Heavy     static, query-agnostic, all final-tier
   Proteus           dynamic allocation, RANDOM routing (query-agnostic)
   DiffServe-Static  query-aware cascade, provisioned for peak, fixed t
-  DiffServe         query-aware + dynamic MILP (this paper)
+  DiffServe         query-aware + dynamic cascade solver (this paper)
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.config.base import ServingConfig
+from repro.config.base import ServingConfig, as_cascade_spec
 from repro.core.allocator import AllocatorOptions
 from repro.core.confidence import (DeferralProfile,
                                    synthetic_confidence_scores)
-from repro.core.milp import AllocationPlan, solve_allocation
-from repro.serving.simulator import SimConfig, Simulator, SimResult, HEAVY
+from repro.core.milp import AllocationPlan, solve_cascade
+from repro.serving.simulator import HEAVY, SimConfig, Simulator, SimResult
 from repro.serving.trace import Trace
 
 BASELINES = ("clipper-light", "clipper-heavy", "proteus",
@@ -26,12 +27,22 @@ BASELINES = ("clipper-light", "clipper-heavy", "proteus",
 
 
 def make_profile(serving: ServingConfig, seed: int = 0,
-                 uniform: bool = False) -> DeferralProfile:
-    rng = np.random.default_rng(seed)
+                 uniform: bool = False, boundary: int = 0) -> DeferralProfile:
+    """One boundary's offline deferral profile (boundary 0 by default)."""
+    rng = np.random.default_rng(seed + 7919 * boundary)
     if uniform:                      # Proteus: random routing => f(t) = t
         return DeferralProfile(rng.random(5000))
+    spec = as_cascade_spec(serving.cascade)
     return DeferralProfile(synthetic_confidence_scores(
-        rng, 5000, serving.cascade.easy_fraction))
+        rng, 5000, spec.easy_fraction_at(boundary)))
+
+
+def make_profiles(serving: ServingConfig, seed: int = 0,
+                  uniform: bool = False) -> Tuple[DeferralProfile, ...]:
+    """One DeferralProfile per cascade boundary."""
+    spec = as_cascade_spec(serving.cascade)
+    return tuple(make_profile(serving, seed, uniform, b)
+                 for b in range(spec.num_boundaries))
 
 
 def run_baseline(name: str, trace: Trace, serving: ServingConfig,
@@ -40,55 +51,61 @@ def run_baseline(name: str, trace: Trace, serving: ServingConfig,
     name = name.lower()
     if overprovision is not None:
         serving = dataclasses.replace(serving, overprovision=overprovision)
+    spec = as_cascade_spec(serving.cascade)
+    n = spec.num_tiers
     peak = float(np.max(trace.qps))
     sim_kw = dict(seed=seed)
     sim_kw.update(sim_overrides or {})
     rng = np.random.default_rng(seed + 1)
 
     if name == "clipper-light":
-        profile = make_profile(serving, seed)
-        plan = solve_allocation(serving.cascade, serving, profile, peak,
-                                fixed_threshold=0.0,
-                                num_workers=serving.num_workers)
-        plan = dataclasses.replace(plan, x1=serving.num_workers, x2=0,
-                                   threshold=0.0)
-        sim = Simulator(serving, profile,
+        profiles = make_profiles(serving, seed)
+        plan = solve_cascade(spec, serving, profiles, peak,
+                             fixed_thresholds=(0.0,) * spec.num_boundaries,
+                             num_workers=serving.num_workers)
+        plan = dataclasses.replace(
+            plan, workers=(serving.num_workers,) + (0,) * (n - 1),
+            thresholds=(0.0,) * spec.num_boundaries)
+        sim = Simulator(serving, profiles,
                         SimConfig(router="random", fixed_plan=plan, **sim_kw))
     elif name == "clipper-heavy":
-        profile = make_profile(serving, seed)
-        c = serving.cascade
+        profiles = make_profiles(serving, seed)
         # largest batch whose execution latency still fits the SLO
-        feas = [b for b in serving.batch_choices
-                if c.heavy_profile.exec_latency(b) <= c.slo_s]
-        b2 = max(feas) if feas else min(serving.batch_choices)
-        plan = AllocationPlan(x1=0, x2=serving.num_workers, b1=1, b2=b2,
-                              threshold=1.0, expected_latency=
-                              c.heavy_profile.exec_latency(b2),
-                              feasible=True)
-        sim = Simulator(serving, profile,
+        final = spec.tiers[-1]
+        choices = spec.tier_batch_choices(n - 1, serving.batch_choices)
+        feas = [b for b in choices
+                if final.profile.exec_latency(b) <= spec.slo_s]
+        b_last = max(feas) if feas else min(choices)
+        batches = tuple(1 for _ in range(n - 1)) + (b_last,)
+        plan = AllocationPlan(
+            workers=(0,) * (n - 1) + (serving.num_workers,),
+            batches=batches, thresholds=(1.0,) * spec.num_boundaries,
+            expected_latency=final.profile.exec_latency(b_last),
+            feasible=True)
+        sim = Simulator(serving, profiles,
                         SimConfig(router="random", arrival_stage=HEAVY,
                                   fixed_plan=plan, **sim_kw))
     elif name == "proteus":
-        profile = make_profile(serving, seed, uniform=True)
-        sim = Simulator(serving, profile,
+        profiles = make_profiles(serving, seed, uniform=True)
+        sim = Simulator(serving, profiles,
                         SimConfig(router="random", **sim_kw),
-                        confidence_fn=lambda n: rng.random(n))
+                        confidence_fn=lambda n_, b_: rng.random(n_))
     elif name == "diffserve-static":
         # provisioned exactly for nominal peak (no burst margins, fixed
-        # threshold): good quality off-peak, but bursts above nominal peak
+        # thresholds): good quality off-peak, but bursts above nominal peak
         # produce violations it cannot react to (paper Fig. 5: up to 19%
         # at peak for the static variant)
-        profile = make_profile(serving, seed)
+        profiles = make_profiles(serving, seed)
         s_nomargin = dataclasses.replace(serving, rho_light=1.0,
                                          rho_heavy=1.0)
-        plan = solve_allocation(serving.cascade, s_nomargin, profile, peak,
-                                num_workers=serving.num_workers)
-        sim = Simulator(serving, profile,
+        plan = solve_cascade(spec, s_nomargin, profiles, peak,
+                             num_workers=serving.num_workers)
+        sim = Simulator(serving, profiles,
                         SimConfig(router="discriminator", fixed_plan=plan,
                                   **sim_kw))
     elif name == "diffserve":
-        profile = make_profile(serving, seed)
-        sim = Simulator(serving, profile,
+        profiles = make_profiles(serving, seed)
+        sim = Simulator(serving, profiles,
                         SimConfig(router="discriminator", **sim_kw))
     else:
         raise KeyError(f"unknown baseline {name!r}; known {BASELINES}")
@@ -99,8 +116,8 @@ def run_ablation(mode: str, trace: Trace, serving: ServingConfig,
                  *, seed: int = 0, **alloc_kw) -> SimResult:
     """Resource-allocation ablations (paper §4.5): static_threshold,
     aimd_batching, no_queuing_model."""
-    profile = make_profile(serving, seed)
-    sim = Simulator(serving, profile, SimConfig(router="discriminator",
-                                                seed=seed),
+    profiles = make_profiles(serving, seed)
+    sim = Simulator(serving, profiles, SimConfig(router="discriminator",
+                                                 seed=seed),
                     allocator_options=AllocatorOptions(mode=mode, **alloc_kw))
     return sim.run(trace)

@@ -4,28 +4,27 @@ On real hardware each worker is a ``worker_tp_size``-chip slice of the
 ``model`` axis; the allocator's plan maps onto slices of the pod. On this
 CPU container the same code runs with 1 device and toy models — the point
 is the interface and the measured-profile path (``measure_profile`` builds
-e(b) tables by timing the real jitted cascade, replacing the paper's
-offline A100 profiling).
+per-tier e(b) tables by timing the real jitted cascade stages, replacing
+the paper's offline A100 profiling).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.config.base import CascadeConfig, LatencyProfile, ServingConfig
+from repro.config.base import LatencyProfile, ServingConfig
 from repro.core.cascade import DiffusionCascade
 
 
 @dataclasses.dataclass
 class WorkerSlice:
-    """A TP slice of the pod assigned to one model variant."""
+    """A TP slice of the pod assigned to one cascade tier."""
     wid: int
-    role: Optional[str] = None
+    role: Optional[int] = None        # tier index; None while loading
     devices: tuple = ()
 
 
@@ -44,18 +43,16 @@ class ClusterRuntime:
             for i in range(serving.num_workers)]
 
     def measure_profile(self, batches=(1, 2, 4), prompt_len: int = 8,
-                        repeats: int = 2) -> Dict[str, LatencyProfile]:
-        """Time the real light/heavy samplers → LatencyProfile fits."""
-        out = {}
-        for name, fn, params in (
-                ("light", self.cascade._light, self.cascade.light_params),
-                ("heavy", self.cascade._heavy, self.cascade.heavy_params)):
+                        repeats: int = 2) -> List[LatencyProfile]:
+        """Time each real cascade stage → per-tier LatencyProfile fits
+        (tier order matches ``cascade.stages``)."""
+        out = []
+        for cfg, fn, params in self.cascade.stage_fns():
             ts = []
             for b in batches:
                 toks = jnp.zeros((b, prompt_len), jnp.int32)
                 key = jax.random.PRNGKey(0)
-                fn(params, key, toks)[0].block_until_ready() \
-                    if hasattr(fn(params, key, toks), "__getitem__") else None
+                fn(params, key, toks).block_until_ready()   # compile warmup
                 best = min(_time_call(fn, params, key, toks)
                            for _ in range(repeats))
                 ts.append((b, best))
@@ -64,11 +61,11 @@ class ClusterRuntime:
                 marg = max((ts[-1][1] - base) / (ts[-1][0] - 1), 1e-4)
             else:
                 marg = base * 0.5
-            out[name] = LatencyProfile(base_s=base, marginal_s=marg)
+            out.append(LatencyProfile(base_s=base, marginal_s=marg))
         return out
 
-    def serve_batch(self, key, prompt_tokens, threshold: float):
-        return self.cascade.run_batch(key, prompt_tokens, threshold)
+    def serve_batch(self, key, prompt_tokens, thresholds):
+        return self.cascade.run_batch(key, prompt_tokens, thresholds)
 
 
 def _time_call(fn, *args):

@@ -24,7 +24,7 @@ from repro.serving.simulator import Simulator
 def snapshot(sim: Simulator, path: str) -> None:
     state = {
         "now": sim.now,
-        "threshold": sim.threshold,
+        "thresholds": sim.thresholds,
         "workers": sim.workers,
         "events": sim._events,
         "eid_next": next(sim._eid),
@@ -33,7 +33,7 @@ def snapshot(sim: Simulator, path: str) -> None:
         "recent_defer": sim._recent_defer,
         "active_S": sim._active_S,
         "rng_state": sim.rng.bit_generator.state,
-        "profile_scores": list(sim.profile._scores),
+        "profile_scores": [list(p._scores) for p in sim.profiles],
         "rm_demand": sim.rm._demand_ewma,
     }
     d = os.path.dirname(os.path.abspath(path)) or "."
@@ -54,7 +54,7 @@ def restore(sim: Simulator, path: str) -> Simulator:
     with open(path, "rb") as f:
         state = pickle.load(f)
     sim.now = state["now"]
-    sim.threshold = state["threshold"]
+    sim.thresholds = tuple(state["thresholds"])
     sim.workers = state["workers"]
     sim._events = state["events"]
     sim._eid = itertools.count(state["eid_next"])
@@ -63,29 +63,21 @@ def restore(sim: Simulator, path: str) -> Simulator:
     sim._recent_defer = state["recent_defer"]
     sim._active_S = state["active_S"]
     sim.rng.bit_generator.state = state["rng_state"]
-    sim.profile._scores = state["profile_scores"]
+    for p, scores in zip(sim.profiles, state["profile_scores"]):
+        p._scores = scores
     sim.rm._demand_ewma = state["rm_demand"]
     return sim
 
 
-def resume(sim: Simulator, end_t: float):
-    """Continue a restored simulation until the event queue drains."""
-    import heapq
-    while sim._events and sim._events[0][0] <= end_t:
-        t, kind, _, payload = heapq.heappop(sim._events)
-        sim.now = t
-        if kind == sim.ARRIVAL:
-            sim._on_arrival(payload)
-        elif kind == sim.BATCH_DONE:
-            sim._on_batch_done(payload)
-        elif kind == sim.CONTROL:
-            sim._on_control()
-        elif kind == sim.FAIL:
-            sim._on_fail(*payload)
-        elif kind == sim.RECOVER:
-            sim._on_recover(payload)
-        elif kind == sim.SCALE:
-            sim._on_scale(payload)
+def resume(sim: Simulator, end_t: float, *, final: bool = False):
+    """Continue a restored simulation until the event queue drains.
+
+    ``final=True`` runs the end-of-run unfinished-query accounting (what
+    ``Simulator.run`` does); leave it off when snapshotting mid-run.
+    """
+    sim._run_until(end_t)
+    if final:
+        sim._drain_unfinished()
     return sim.result
 
 

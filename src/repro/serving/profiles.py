@@ -1,4 +1,4 @@
-"""Latency/throughput profiles and the paper's three cascades.
+"""Latency/throughput profiles and the cascade registry.
 
 Profiled numbers are the paper's A100-80GB measurements (§4.1):
   SD-Turbo  ~0.10 s/img (1 step)     SDXS ~0.05 s (1 step)
@@ -7,12 +7,17 @@ Profiled numbers are the paper's A100-80GB measurements (§4.1):
 Batch scaling: diffusion latency grows near-linearly in batch with a
 sub-linear startup term (profiled marginal costs below reproduce the
 paper's 4.6x SDXL-vs-Lightning gap at batch 16).
+
+The registry holds the paper's three two-tier cascades plus deeper
+N-tier pipelines (HADIS/Argus-style variant pools) — a cascade is just a
+``CascadeSpec``; register more by adding an entry here.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, List, Sequence, Tuple
 
-from repro.config.base import CascadeConfig, LatencyProfile, ServingConfig
+from repro.config.base import (CascadeSpec, LatencyProfile, ServingConfig,
+                               TierSpec)
 
 # model -> e(b) = base + marginal*(b-1)
 MODEL_PROFILES: Dict[str, LatencyProfile] = {
@@ -26,29 +31,60 @@ MODEL_PROFILES: Dict[str, LatencyProfile] = {
 DISCRIMINATOR_LATENCY_S = {"efficientnet_s": 0.010, "resnet34": 0.002,
                            "vit_b16": 0.005}
 
-CASCADES: Dict[str, CascadeConfig] = {
+
+def make_cascade(name: str, models: Sequence[str], *, slo_s: float,
+                 fid_per_tier: Sequence[float], fid_best_mix: float,
+                 best_mix_defer_frac: float,
+                 easy_fractions: Sequence[float],
+                 discriminator: str = "efficientnet_s") -> CascadeSpec:
+    """Build a CascadeSpec from registered model names (cheapest first)."""
+    disc_s = DISCRIMINATOR_LATENCY_S[discriminator]
+    tiers = tuple(
+        TierSpec(model=m, profile=MODEL_PROFILES[m],
+                 disc_latency_s=disc_s if i < len(models) - 1 else 0.0)
+        for i, m in enumerate(models))
+    return CascadeSpec(name=name, tiers=tiers, discriminator=discriminator,
+                       slo_s=slo_s, fid_per_tier=tuple(fid_per_tier),
+                       fid_best_mix=fid_best_mix,
+                       best_mix_defer_frac=best_mix_defer_frac,
+                       easy_fractions=tuple(easy_fractions))
+
+
+CASCADES: Dict[str, CascadeSpec] = {
     # Cascade 1: SD-Turbo -> SDv1.5, SLO 5 s, MS-COCO 512x512
-    "sdturbo": CascadeConfig(
-        name="sdturbo", light="sd-turbo", heavy="sdv1.5", slo_s=5.0,
-        light_profile=MODEL_PROFILES["sd-turbo"],
-        heavy_profile=MODEL_PROFILES["sdv1.5"],
-        fid_all_heavy=18.55, fid_all_light=22.6, fid_best_mix=17.9,
-        best_mix_defer_frac=0.65, easy_fraction=0.35),
+    "sdturbo": make_cascade(
+        "sdturbo", ("sd-turbo", "sdv1.5"), slo_s=5.0,
+        fid_per_tier=(22.6, 18.55), fid_best_mix=17.9,
+        best_mix_defer_frac=0.65, easy_fractions=(0.35,)),
     # Cascade 2: SDXS -> SDv1.5, SLO 5 s
-    "sdxs": CascadeConfig(
-        name="sdxs", light="sdxs", heavy="sdv1.5", slo_s=5.0,
-        light_profile=MODEL_PROFILES["sdxs"],
-        heavy_profile=MODEL_PROFILES["sdv1.5"],
-        fid_all_heavy=18.55, fid_all_light=24.1, fid_best_mix=18.1,
-        best_mix_defer_frac=0.70, easy_fraction=0.25),
+    "sdxs": make_cascade(
+        "sdxs", ("sdxs", "sdv1.5"), slo_s=5.0,
+        fid_per_tier=(24.1, 18.55), fid_best_mix=18.1,
+        best_mix_defer_frac=0.70, easy_fractions=(0.25,)),
     # Cascade 3: SDXL-Lightning -> SDXL, SLO 15 s, DiffusionDB 1024x1024
-    "sdxlltn": CascadeConfig(
-        name="sdxlltn", light="sdxl-lightning", heavy="sdxl", slo_s=15.0,
-        light_profile=MODEL_PROFILES["sdxl-lightning"],
-        heavy_profile=MODEL_PROFILES["sdxl"],
-        fid_all_heavy=21.0, fid_all_light=27.3, fid_best_mix=20.3,
-        best_mix_defer_frac=0.60, easy_fraction=0.30),
+    "sdxlltn": make_cascade(
+        "sdxlltn", ("sdxl-lightning", "sdxl"), slo_s=15.0,
+        fid_per_tier=(27.3, 21.0), fid_best_mix=20.3,
+        best_mix_defer_frac=0.60, easy_fractions=(0.30,)),
+    # 3-tier: SDXS -> SD-Turbo -> SDv1.5, SLO 5 s (512x512 variant pool)
+    "sdxs3": make_cascade(
+        "sdxs3", ("sdxs", "sd-turbo", "sdv1.5"), slo_s=5.0,
+        fid_per_tier=(24.1, 22.6, 18.55), fid_best_mix=17.9,
+        best_mix_defer_frac=0.65, easy_fractions=(0.25, 0.35)),
+    # 3-tier: SDXS -> SDXL-Lightning -> SDXL, SLO 15 s (1024x1024 pool)
+    "sdxl3": make_cascade(
+        "sdxl3", ("sdxs", "sdxl-lightning", "sdxl"), slo_s=15.0,
+        fid_per_tier=(28.4, 27.3, 21.0), fid_best_mix=20.3,
+        best_mix_defer_frac=0.60, easy_fractions=(0.20, 0.30)),
 }
+
+
+def list_cascades() -> List[Tuple[str, str, float, int]]:
+    """(name, 'tier0 -> tier1 -> ...', slo_s, num_tiers) per registered
+    cascade, for CLIs and docs."""
+    return [(name, " -> ".join(t.model for t in c.tiers), c.slo_s,
+             c.num_tiers)
+            for name, c in sorted(CASCADES.items())]
 
 
 def default_serving(cascade: str = "sdturbo", num_workers: int = 16,

@@ -1,33 +1,38 @@
 """Discrete-event simulator for DiffServe (paper §4.1: the paper's headline
 results come from its simulator; the testbed validated it to within 0.56 %
-FID / 1.1 % SLO violations).
+FID / 1.1 % SLO violations), generalized to N-tier cascades.
 
-Entities: queries, workers (role = light|heavy, local queue, batched
+Entities: queries, workers (role = tier index, local queue, batched
 execution with profiled latencies + straggler jitter), a load balancer
 (least-loaded routing + hedged re-dispatch), and a controller (EWMA demand,
-MILP re-planning, failure detection via heartbeats, elastic worker counts).
+cascade-solver re-planning, failure detection via heartbeats, elastic
+worker counts). A query enters at tier 0 (the cheapest model); after each
+non-final tier a discriminator confidence below that boundary's threshold
+defers it one tier deeper.
 
-Confidence scores come from the calibrated DeferralProfile (sim mode) or a
-real cascade (cluster mode via serving/cluster.py).
+Confidence scores come from the calibrated per-boundary DeferralProfiles
+(sim mode) or a real cascade (cluster mode via serving/cluster.py).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import inspect
 import itertools
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.config.base import CascadeConfig, ServingConfig
+from repro.config.base import ServingConfig, as_cascade_spec
 from repro.core.allocator import AllocatorOptions, ResourceManager
-from repro.core.confidence import DeferralProfile
+from repro.core.confidence import DeferralProfile, as_boundary_profiles
 from repro.core.milp import Telemetry
 from repro.core.quality import QualityModel
 from repro.serving.trace import Trace
 
-LIGHT, HEAVY = "light", "heavy"
+# Tier-index aliases: tier 0 is the lightest model, -1 the final (heaviest).
+LIGHT, HEAVY = 0, -1
 
 
 @dataclasses.dataclass
@@ -35,7 +40,7 @@ class Query:
     qid: int
     arrival: float
     deadline: float
-    stage: str = LIGHT            # current stage
+    stage: int = 0                # current tier index
     confidence: Optional[float] = None
     enqueued_at: float = 0.0
     done_at: Optional[float] = None
@@ -47,7 +52,8 @@ class Query:
 @dataclasses.dataclass
 class Worker:
     wid: int
-    role: Optional[str] = None    # None while (re)loading a model
+    role: Optional[int] = None    # tier index; None while (re)loading
+    batch_role: Optional[int] = None   # tier the in-flight batch started as
     batch_size: int = 1
     queue: deque = dataclasses.field(default_factory=deque)
     busy_until: float = 0.0
@@ -70,7 +76,7 @@ class SimConfig:
     #   (t_fail, worker_id, repair_duration_s)
     hedging: bool = True
     scale_events: Tuple[Tuple[float, int], ...] = ()   # (t, new_S) elastic
-    arrival_stage: str = LIGHT        # Clipper-Heavy sends straight to heavy
+    arrival_stage: int = LIGHT        # Clipper-Heavy sends straight to -1
     fixed_plan: Optional[object] = None   # static baselines: never re-plan
 
 
@@ -81,10 +87,15 @@ class SimResult:
     violations: int = 0
     total: int = 0
     deferred: int = 0
+    completed_per_tier: List[int] = dataclasses.field(default_factory=list)
+    tier_processed: List[int] = dataclasses.field(default_factory=list)
+    deferred_per_boundary: List[int] = dataclasses.field(default_factory=list)
     fid_timeline: List[Tuple[float, float]] = dataclasses.field(
         default_factory=list)
     threshold_timeline: List[Tuple[float, float]] = dataclasses.field(
         default_factory=list)
+    thresholds_timeline: List[Tuple[float, Tuple[float, ...]]] = \
+        dataclasses.field(default_factory=list)
     violation_timeline: List[Tuple[float, float]] = dataclasses.field(
         default_factory=list)
     latencies: List[float] = dataclasses.field(default_factory=list)
@@ -100,41 +111,75 @@ class SimResult:
     def defer_fraction(self) -> float:
         return self.deferred / max(self.completed, 1)
 
+    def boundary_defer_fractions(self) -> List[float]:
+        """Fraction of queries processed at tier i that were deferred
+        across boundary i (one entry per boundary)."""
+        return [d / max(p, 1) for d, p in
+                zip(self.deferred_per_boundary, self.tier_processed)]
+
     @property
     def mean_fid(self) -> float:
         vals = [f for _, f in self.fid_timeline]
         return float(np.mean(vals)) if vals else float("nan")
 
 
+def _per_boundary_fn(fn: Optional[Callable]) -> Optional[Callable]:
+    """Wrap a confidence callable so it is always called as f(n, boundary);
+    a legacy single-argument f(n) is applied to every boundary."""
+    if fn is None:
+        return None
+    try:
+        nargs = len(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):
+        nargs = 1
+    if nargs >= 2:
+        return fn
+    return lambda n, boundary: fn(n)
+
+
 class Simulator:
     ARRIVAL, BATCH_DONE, CONTROL, FAIL, RECOVER, SCALE = range(6)
 
-    def __init__(self, serving: ServingConfig, profile: DeferralProfile,
-                 sim: Optional[SimConfig] = None,
+    def __init__(self, serving: ServingConfig, profile, sim:
+                 Optional[SimConfig] = None,
                  allocator_options: Optional[AllocatorOptions] = None,
-                 confidence_fn: Optional[Callable[[int], np.ndarray]] = None,
+                 confidence_fn: Optional[Callable] = None,
                  quality_model: Optional[QualityModel] = None):
         self.serving = serving
-        self.cascade = serving.cascade
+        self.spec = as_cascade_spec(serving.cascade)
+        self.cascade = self.spec            # legacy alias
+        self.num_tiers = self.spec.num_tiers
         self.sim = sim or SimConfig()
         self.rng = np.random.default_rng(self.sim.seed)
-        self.profile = profile
-        self.rm = ResourceManager(self.cascade, serving, profile,
+        self.profiles = as_boundary_profiles(profile,
+                                             self.spec.num_boundaries)
+        self.rm = ResourceManager(self.spec, serving, self.profiles,
                                   allocator_options)
-        self.confidence_fn = confidence_fn
-        self.quality = quality_model or QualityModel.from_cascade(self.cascade)
+        self.confidence_fn = _per_boundary_fn(confidence_fn)
+        self.quality = quality_model or QualityModel.from_cascade(self.spec)
 
         self.workers: Dict[int, Worker] = {
             i: Worker(wid=i) for i in range(serving.num_workers)}
-        self.threshold = 0.8
+        self.thresholds: Tuple[float, ...] = (0.8,) * self.spec.num_boundaries
         self.now = 0.0
         self._events: List[Tuple[float, int, int, object]] = []
         self._eid = itertools.count()
-        self.result = SimResult()
+        self.result = SimResult(
+            completed_per_tier=[0] * self.num_tiers,
+            tier_processed=[0] * self.num_tiers,
+            deferred_per_boundary=[0] * self.spec.num_boundaries)
         self._arrivals_window: deque = deque()
         self._recent_defer: deque = deque()
         self._window_done = 0
         self._active_S = serving.num_workers
+
+    @property
+    def profile(self) -> DeferralProfile:
+        return self.profiles[0]
+
+    @property
+    def threshold(self) -> float:
+        return self.thresholds[0] if self.thresholds else 1.0
 
     # ------------------------------------------------------------------
     def push(self, t, kind, payload=None):
@@ -146,49 +191,72 @@ class Simulator:
         for i, t in enumerate(arrivals):
             self.push(float(t), self.ARRIVAL,
                       Query(qid=i, arrival=float(t),
-                            deadline=float(t) + self.cascade.slo_s))
+                            deadline=float(t) + self.spec.slo_s))
         self.push(0.0, self.CONTROL)
         for (tf, wid, dur) in self.sim.failure_times:
             self.push(tf, self.FAIL, (wid, dur))
         for (ts, new_s) in self.sim.scale_events:
             self.push(ts, self.SCALE, new_s)
-        end_t = trace.duration_s + 4 * self.cascade.slo_s
+        end_t = trace.duration_s + 4 * self.spec.slo_s
 
         # initial plan
         self._apply_plan_now(first=True)
 
+        self._run_until(end_t)
+        self._drain_unfinished()
+        return self.result
+
+    def _run_until(self, end_t: float):
+        """Pump the event queue up to ``end_t`` (also used by
+        serving.faults.resume after a snapshot restore)."""
         while self._events and self._events[0][0] <= end_t:
             t, kind, _, payload = heapq.heappop(self._events)
             self.now = t
-            if kind == self.ARRIVAL:
-                self._on_arrival(payload)
-            elif kind == self.BATCH_DONE:
-                self._on_batch_done(payload)
-            elif kind == self.CONTROL:
-                self._on_control()
-            elif kind == self.FAIL:
-                self._on_fail(*payload)
-            elif kind == self.RECOVER:
-                self._on_recover(payload)
-            elif kind == self.SCALE:
-                self._on_scale(payload)
-        return self.result
+            self._dispatch(kind, payload)
+
+    def _dispatch(self, kind: int, payload):
+        if kind == self.ARRIVAL:
+            self._on_arrival(payload)
+        elif kind == self.BATCH_DONE:
+            self._on_batch_done(payload)
+        elif kind == self.CONTROL:
+            self._on_control()
+        elif kind == self.FAIL:
+            self._on_fail(*payload)
+        elif kind == self.RECOVER:
+            self._on_recover(payload)
+        elif kind == self.SCALE:
+            self._on_scale(payload)
+
+    def _drain_unfinished(self):
+        """End-of-run accounting: queries still queued or in flight when
+        the simulation horizon closes count as dropped SLO violations, so
+        completed + dropped == total always holds (conservation)."""
+        seen = set()
+        for w in self.workers.values():
+            for q in list(w.queue) + list(w.in_flight):
+                if (id(q) not in seen and q.done_at is None
+                        and not q.dropped):
+                    seen.add(id(q))
+                    q.dropped = True
+                    self.result.dropped += 1
+                    self.result.violations += 1
 
     # ------------------------------------------------------------------
-    def _live(self, role=None):
+    def _live(self, role: Optional[int] = None):
         ws = [w for w in self.workers.values()
               if w.alive and w.wid < self._active_S
               and self.now >= w.loading_until]
-        if role:
+        if role is not None:
             ws = [w for w in ws if w.role == role]
         return ws
 
-    def _route(self, q: Query, role: str) -> bool:
-        ws = self._live(role)
+    def _route(self, q: Query, tier: int) -> bool:
+        ws = self._live(tier)
         if not ws:
-            # no live worker of that role: park on a loading one if any
+            # no live worker of that tier: park on a loading one if any
             ws = [w for w in self.workers.values()
-                  if w.alive and w.wid < self._active_S and w.role == role]
+                  if w.alive and w.wid < self._active_S and w.role == tier]
         if not ws:
             return False
         w = min(ws, key=lambda w: len(w.queue) + len(w.in_flight))
@@ -199,8 +267,8 @@ class Simulator:
 
     def _on_arrival(self, q: Query):
         self._arrivals_window.append(q.arrival)
-        q.stage = self.sim.arrival_stage
-        if q.stage == HEAVY:
+        q.stage = self.sim.arrival_stage % self.num_tiers
+        if q.stage > 0:
             q.deferred = True
         if not self._route(q, q.stage):
             q.dropped = True
@@ -208,11 +276,10 @@ class Simulator:
             self.result.violations += 1
 
     def _exec_latency(self, w: Worker, n: int) -> float:
-        prof = (self.cascade.light_profile if w.role == LIGHT
-                else self.cascade.heavy_profile)
-        base = prof.exec_latency(n)
-        if w.role == LIGHT:
-            base += self.cascade.disc_latency_s
+        tier = self.spec.tiers[w.role]
+        base = tier.profile.exec_latency(n)
+        if w.role < self.num_tiers - 1:
+            base += tier.disc_latency_s
         jit = float(self.rng.lognormal(0.0, self.sim.straggler_sigma))
         if self.rng.random() < self.sim.straggler_prob:
             jit *= float(self.rng.uniform(3.0, 8.0))
@@ -239,15 +306,16 @@ class Simulator:
         if not batch:
             return
         w.in_flight = batch
+        w.batch_role = w.role
         w.batch_started = self.now
         dur = self._exec_latency(w, len(batch))
         w.busy_until = self.now + dur
         self.push(w.busy_until, self.BATCH_DONE, w.wid)
 
-    def _confidences(self, n: int) -> np.ndarray:
+    def _confidences(self, n: int, boundary: int) -> np.ndarray:
         if self.confidence_fn is not None:
-            return self.confidence_fn(n)
-        return self.profile.sample(self.rng, n)
+            return self.confidence_fn(n, boundary)
+        return self.profiles[boundary].sample(self.rng, n)
 
     def _on_batch_done(self, wid: int):
         w = self.workers[wid]
@@ -256,41 +324,54 @@ class Simulator:
         batch, w.in_flight = w.in_flight, []
         if not batch:
             return
-        if w.role == LIGHT:
-            confs = self._confidences(len(batch))
+        # score against the tier the batch *started* as: a control-tick
+        # role reassignment mid-flight must not shift the batch to another
+        # boundary's profile/threshold (or skip a tier entirely)
+        tier = w.batch_role if w.batch_role is not None else w.role
+        if tier is not None and tier < self.num_tiers - 1:
+            boundary = tier
+            confs = self._confidences(len(batch), boundary)
             fresh = []
             for q, c in zip(batch, confs):
                 if q.done_at is not None or q.dropped:
                     continue       # hedged duplicate finished elsewhere
                 q.confidence = float(c)
-                if c < self.threshold:
-                    q.stage = HEAVY
+                self.result.tier_processed[tier] += 1
+                if c < self.thresholds[boundary]:
+                    q.stage = tier + 1
                     q.deferred = True
-                    if not self._route(q, HEAVY):
-                        # no heavy capacity: return light output (quality hit)
-                        q.deferred = False
+                    self.result.deferred_per_boundary[boundary] += 1
+                    if not self._route(q, q.stage):
+                        # no deeper capacity: return this tier's output
+                        # (quality hit)
+                        q.stage = tier
+                        q.deferred = tier > 0
+                        self.result.deferred_per_boundary[boundary] -= 1
                         self._complete(q)
                     fresh.append(c)
                 else:
                     self._complete(q)
                     fresh.append(c)
             if fresh:
-                self.profile.update(fresh)     # online f(t) refresh
+                self.profiles[boundary].update(fresh)  # online f(t) refresh
         else:
             for q in batch:
                 if q.done_at is None and not q.dropped:
+                    self.result.tier_processed[q.stage] += 1
                     self._complete(q)
         self._maybe_start(w)
 
     def _complete(self, q: Query):
         q.done_at = self.now
         self.result.completed += 1
+        self.result.completed_per_tier[q.stage] += 1
         self.result.latencies.append(self.now - q.arrival)
         if self.now > q.deadline:
             self.result.violations += 1
         if q.deferred:
             self.result.deferred += 1
-        self._recent_defer.append((self.now, 1.0 if q.deferred else 0.0))
+        depth = q.stage / max(self.num_tiers - 1, 1)
+        self._recent_defer.append((self.now, depth))
         self._window_done += 1
 
     # ------------------------------------------------------------------
@@ -300,11 +381,14 @@ class Simulator:
             self._arrivals_window.popleft()
         qps = len(self._arrivals_window) / max(self.serving.control_period_s,
                                                1e-9)
-        ql = sum(len(w.queue) for w in self._live(LIGHT))
-        qh = sum(len(w.queue) for w in self._live(HEAVY))
-        lam_h = qps * self.profile.f(self.threshold)
-        return Telemetry(demand_qps=qps, queue_light=ql, queue_heavy=qh,
-                         arrival_light_qps=qps, arrival_heavy_qps=lam_h,
+        queues = tuple(float(sum(len(w.queue) for w in self._live(i)))
+                       for i in range(self.num_tiers))
+        arrivals = [qps]
+        for b in range(self.spec.num_boundaries):
+            arrivals.append(arrivals[-1]
+                            * self.profiles[b].f(self.thresholds[b]))
+        return Telemetry(demand_qps=qps, queues=queues,
+                         arrivals=tuple(arrivals),
                          live_workers=len([w for w in self.workers.values()
                                            if w.alive
                                            and w.wid < self._active_S]))
@@ -317,11 +401,13 @@ class Simulator:
                 demand_qps=1.0, live_workers=self._active_S)
             plan = self.rm.plan(tel)
         self.result.solve_ms.append(plan.solve_ms)
-        self.threshold = plan.threshold
-        self.result.threshold_timeline.append((self.now, plan.threshold))
+        self.thresholds = tuple(plan.thresholds)
+        self.result.threshold_timeline.append((self.now, self.threshold))
+        self.result.thresholds_timeline.append((self.now, self.thresholds))
         live = [w for w in self.workers.values()
                 if w.alive and w.wid < self._active_S]
-        want = [LIGHT] * plan.x1 + [HEAVY] * plan.x2
+        want: List[Optional[int]] = [
+            i for i, n in enumerate(plan.workers) for _ in range(n)]
         want += [None] * max(len(live) - len(want), 0)
         # stable assignment: keep matching roles to avoid reload churn
         unassigned = []
@@ -340,7 +426,8 @@ class Simulator:
                     self._route(q, q.stage)
             w.role = role
         for w in live:
-            w.batch_size = plan.b1 if w.role == LIGHT else plan.b2
+            if w.role is not None:
+                w.batch_size = plan.batches[w.role]
             self._maybe_start(w)
 
     def _on_control(self):
@@ -357,6 +444,8 @@ class Simulator:
         while self._recent_defer and self._recent_defer[0][0] < horizon:
             self._recent_defer.popleft()
         if self._recent_defer:
+            # p = mean normalized cascade depth of recent completions
+            # (== the deferred fraction for a two-tier cascade)
             p = float(np.mean([d for _, d in self._recent_defer]))
             fid = self.quality.fid(p, self.sim.router)
             self.result.fid_timeline.append((self.now, fid))
@@ -368,17 +457,19 @@ class Simulator:
         """Straggler mitigation: if a batch runs far past its expected
         latency, re-dispatch its queries to the least-loaded peer."""
         for w in list(self.workers.values()):
-            if not w.alive or not w.in_flight or w.role is None:
+            if not w.alive or not w.in_flight:
                 continue
-            prof = (self.cascade.light_profile if w.role == LIGHT
-                    else self.cascade.heavy_profile)
+            role = w.batch_role if w.batch_role is not None else w.role
+            if role is None:
+                continue
+            prof = self.spec.tiers[role].profile
             expect = prof.exec_latency(len(w.in_flight))
             if (self.now - w.batch_started) > 2.5 * expect:
                 for q in w.in_flight:
                     if not q.hedged and q.done_at is None:
                         q.hedged = True
                         self.result.hedged += 1
-                        self._route(q, w.role)   # duplicate dispatch
+                        self._route(q, q.stage)  # duplicate dispatch
 
     # ------------------------------------------------------------------
     def _on_fail(self, wid: int, repair_s: float):

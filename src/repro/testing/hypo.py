@@ -1,0 +1,87 @@
+"""Property-testing front-end: real ``hypothesis`` when installed, else a
+minimal deterministic fallback with the same decorator surface.
+
+The fallback implements just the subset this repo's property tests use —
+``given``, ``settings(max_examples=..., deadline=...)`` and the
+``st.floats`` / ``st.integers`` / ``st.lists`` strategies — drawing each
+test's examples from a per-test seeded RNG (seed = CRC32 of the test
+name), so failures reproduce across runs. It does not shrink
+counterexamples; install ``hypothesis`` for the real engine.
+
+    from repro.testing.hypo import given, settings, st
+"""
+from __future__ import annotations
+
+import zlib
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            lo, hi = float(min_value), float(max_value)
+
+            def draw(rng):
+                r = rng.random()
+                if r < 0.05:          # exercise the endpoints occasionally
+                    return lo
+                if r < 0.10:
+                    return hi
+                return lo + rng.random() * (hi - lo)
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value=0, max_value=100, **_kw):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.example_from(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 50, deadline=None, **_kw):
+        def dec(fn):
+            fn._fallback_max_examples = max_examples
+            return fn
+        return dec
+
+    def given(*strategies):
+        def dec(fn):
+            def wrapper():
+                n = getattr(fn, "_fallback_max_examples", 50)
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__name__.encode()))
+                for _ in range(n):
+                    args = [s.example_from(rng) for s in strategies]
+                    try:
+                        fn(*args)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (fallback engine): "
+                            f"{fn.__name__}{tuple(args)!r}") from e
+            # no functools.wraps: pytest must see the zero-arg signature,
+            # not the strategy parameters (it would treat them as fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return dec

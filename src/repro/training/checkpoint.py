@@ -1,8 +1,14 @@
-"""Atomic pytree checkpoints: msgpack + zstd, keep-N rotation, resume.
+"""Atomic pytree checkpoints: msgpack + zstd (or zlib), keep-N rotation,
+resume.
 
 Layout: <dir>/step_<n>.ckpt (+ .meta.json); writes go to a temp file then
 ``os.replace`` (atomic on POSIX) so a crash mid-save never corrupts the
 latest checkpoint — restart picks up the newest complete one.
+
+``zstandard`` is an optional dependency: when absent, saves compress with
+stdlib ``zlib`` instead. A one-byte codec tag after the magic records which
+codec wrote the file, so either build reads both formats (zstd files still
+need zstandard installed to load).
 """
 from __future__ import annotations
 
@@ -10,15 +16,44 @@ import json
 import os
 import re
 import tempfile
+import zlib
 from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:                       # optional: fall back to zlib
+    zstandard = None
 
 _MAGIC = b"REPROCKPT1"
+_CODEC_ZSTD = b"Z"
+_CODEC_ZLIB = b"L"
+
+
+def _compress(payload: bytes) -> Tuple[bytes, bytes]:
+    if zstandard is not None:
+        return _CODEC_ZSTD, zstandard.ZstdCompressor(level=3).compress(payload)
+    return _CODEC_ZLIB, zlib.compress(payload, 6)
+
+
+def _decompress(codec: bytes, blob: bytes) -> bytes:
+    if codec == _CODEC_ZLIB:
+        return zlib.decompress(blob)
+    if codec == _CODEC_ZSTD:
+        if zstandard is None:
+            raise ImportError(
+                "checkpoint was written with zstd; install zstandard to "
+                "load it (pip install zstandard)")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    # pre-codec-tag files: the byte belongs to a zstd frame (0x28 B5 2F FD)
+    if zstandard is None:
+        raise ImportError(
+            "legacy zstd checkpoint; install zstandard to load it")
+    return zstandard.ZstdDecompressor().decompress(codec + blob)
 
 
 def _pack_leaf(x):
@@ -44,12 +79,13 @@ def save(path: str, tree: Any, step: int, extra: Optional[dict] = None,
         b"extra": json.dumps(extra or {}).encode(),
         b"step": step,
     })
-    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    codec, comp = _compress(payload)
     final = os.path.join(path, f"step_{step}.ckpt")
     fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
             f.write(_MAGIC)
+            f.write(codec)
             f.write(comp)
         os.replace(tmp, final)
     finally:
@@ -91,7 +127,8 @@ def load(path: str, tree_like: Any, step: Optional[int] = None
         magic = f.read(len(_MAGIC))
         if magic != _MAGIC:
             raise ValueError(f"{fname}: bad magic")
-        payload = zstandard.ZstdDecompressor().decompress(f.read())
+        codec = f.read(1)
+        payload = _decompress(codec, f.read())
     obj = msgpack.unpackb(payload)
     leaves = [_unpack_leaf(d) for d in obj[b"leaves"]]
     treedef = jax.tree_util.tree_structure(tree_like)

@@ -1,0 +1,207 @@
+"""N-tier cascade API tests: the tier-recursive solver reduces exactly to
+the paper's two-tier solver at N=2 (property-tested), and 3-tier cascades
+run end-to-end through the simulator with conserved query accounting."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.config.base import (CascadeSpec, LatencyProfile, TierSpec,
+                               as_cascade_spec)
+from repro.core.confidence import (DeferralProfile, as_boundary_profiles,
+                                   synthetic_confidence_scores)
+from repro.core.milp import solve_allocation, solve_cascade, two_tier_reference
+from repro.serving.baselines import (BASELINES, make_profiles, run_baseline)
+from repro.serving.profiles import CASCADES, default_serving, list_cascades
+from repro.serving.trace import azure_like_trace, static_trace
+from repro.testing.hypo import given, settings, st
+
+
+def _profiles(serving, scores):
+    spec = as_cascade_spec(serving.cascade)
+    return as_boundary_profiles(DeferralProfile(scores),
+                                spec.num_boundaries)
+
+
+# ---------------------------------------------------------------------------
+# N=2 equivalence: the N-tier solver reproduces the legacy two-tier plans
+# ---------------------------------------------------------------------------
+@given(st.floats(0.5, 40.0), st.integers(2, 48),
+       st.lists(st.floats(0.05, 0.95), min_size=20, max_size=50),
+       st.floats(0.0, 40.0), st.floats(0.0, 40.0),
+       st.floats(0.0, 30.0), st.floats(0.0, 10.0))
+@settings(max_examples=40, deadline=None)
+def test_ntier_solver_matches_legacy_at_two_tiers(
+        demand, workers, scores, queue_light, queue_heavy,
+        arrival_light, arrival_heavy):
+    serving = default_serving("sdturbo", num_workers=workers)
+    profile = DeferralProfile(scores)
+    kw = dict(num_workers=workers, queue_light=queue_light,
+              queue_heavy=queue_heavy, arrival_light=arrival_light,
+              arrival_heavy=arrival_heavy)
+    new = solve_allocation(serving.cascade, serving, profile, demand, **kw)
+    ref = two_tier_reference(serving.cascade, serving, profile, demand, **kw)
+    assert new.workers == ref.workers
+    assert new.batches == ref.batches
+    assert new.thresholds == ref.thresholds
+    assert new.feasible == ref.feasible
+    assert abs(new.expected_latency - ref.expected_latency) < 1e-12
+
+
+@given(st.floats(0.5, 30.0),
+       st.lists(st.floats(0.05, 0.95), min_size=20, max_size=40),
+       st.floats(0.1, 0.9))
+@settings(max_examples=25, deadline=None)
+def test_ntier_matches_legacy_fixed_threshold_and_batches(
+        demand, scores, fixed_t):
+    serving = default_serving("sdturbo", num_workers=24)
+    profile = DeferralProfile(scores)
+    for kw in (dict(fixed_threshold=fixed_t), dict(fixed_batches=(2, 4)),
+               dict(queuing_model="proteus_2x")):
+        new = solve_allocation(serving.cascade, serving, profile, demand,
+                               **kw)
+        ref = two_tier_reference(serving.cascade, serving, profile, demand,
+                                 **kw)
+        assert new.workers == ref.workers and new.batches == ref.batches
+        assert new.thresholds == ref.thresholds
+        assert new.feasible == ref.feasible
+
+
+# ---------------------------------------------------------------------------
+# 3-tier solver sanity
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def profiles3():
+    serving = default_serving("sdxs3", num_workers=24)
+    rng = np.random.default_rng(0)
+    return serving, _profiles(serving, synthetic_confidence_scores(rng, 2000))
+
+
+def test_three_tier_plan_constraints(profiles3):
+    serving, profiles = profiles3
+    spec = as_cascade_spec(serving.cascade)
+    for demand in (2.0, 8.0, 16.0):
+        plan = solve_cascade(spec, serving, profiles, demand,
+                             num_workers=serving.num_workers)
+        assert plan.num_tiers == 3
+        assert len(plan.thresholds) == 2
+        assert all(0.0 <= t <= 1.0 for t in plan.thresholds)
+        assert plan.total_workers <= serving.num_workers
+        if plan.feasible:
+            lam = serving.overprovision * demand
+            cap0 = plan.workers[0] * spec.tiers[0].profile.throughput(
+                plan.batches[0]) * serving.rho_light
+            assert cap0 >= lam * 0.999
+            # per-tier capacity covers the deferred flow
+            for b in range(2):
+                lam = lam * profiles[b].f(plan.thresholds[b])
+                cap = plan.workers[b + 1] * spec.tiers[b + 1] \
+                    .profile.throughput(plan.batches[b + 1]) \
+                    * serving.rho_heavy
+                assert cap >= lam * 0.999
+
+
+def test_three_tier_threshold_monotone_in_capacity(profiles3):
+    """More workers -> the first boundary can defer at least as much."""
+    serving, profiles = profiles3
+    fs = []
+    for S in (6, 12, 24, 48):
+        plan = solve_cascade(serving.cascade, serving, profiles, 8.0,
+                             num_workers=S)
+        fs.append(profiles[0].f(plan.thresholds[0]))
+    assert all(b >= a - 1e-9 for a, b in zip(fs, fs[1:])), fs
+
+
+# ---------------------------------------------------------------------------
+# 3-tier simulator end-to-end
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cascade", ["sdxs3", "sdxl3"])
+def test_three_tier_simulator_smoke(cascade):
+    serving = default_serving(cascade, num_workers=24)
+    trace = azure_like_trace(120, seed=3).scale(3, 16)
+    r = run_baseline("diffserve", trace, serving, seed=0)
+    # conservation: every query is accounted for
+    assert r.completed + r.dropped == r.total
+    assert r.completed > 0.5 * r.total
+    # per-tier telemetry is present and consistent
+    assert len(r.completed_per_tier) == 3
+    assert sum(r.completed_per_tier) == r.completed
+    fracs = r.boundary_defer_fractions()
+    assert len(fracs) == 2
+    assert all(0.0 <= f <= 1.0 for f in fracs)
+    # thresholds stay in range on every control tick
+    for _, ts in r.thresholds_timeline:
+        assert len(ts) == 2
+        assert all(0.0 <= t <= 1.0 for t in ts)
+
+
+def test_two_tier_conservation():
+    serving = default_serving("sdturbo", num_workers=16)
+    trace = static_trace(10.0, 90)
+    r = run_baseline("diffserve", trace, serving, seed=0)
+    assert r.completed + r.dropped == r.total
+
+
+def test_all_baselines_run_on_three_tier():
+    serving = default_serving("sdxs3", num_workers=24)
+    trace = static_trace(6.0, 60)
+    for b in BASELINES:
+        r = run_baseline(b, trace, serving, seed=0)
+        assert r.completed + r.dropped == r.total, b
+        assert r.completed > 0, b
+
+
+def test_clipper_heavy_uses_final_tier():
+    serving = default_serving("sdxs3", num_workers=24)
+    trace = static_trace(2.0, 60)
+    r = run_baseline("clipper-heavy", trace, serving, seed=0)
+    assert r.completed_per_tier[0] == 0
+    assert r.completed_per_tier[1] == 0
+    assert r.completed_per_tier[2] == r.completed
+
+
+# ---------------------------------------------------------------------------
+# Registry / config surface
+# ---------------------------------------------------------------------------
+def test_registry_has_paper_and_deep_cascades():
+    assert {"sdturbo", "sdxs", "sdxlltn"} <= set(CASCADES)
+    deep = [n for n, c in CASCADES.items() if c.num_tiers >= 3]
+    assert len(deep) >= 2
+    rows = list_cascades()
+    assert any(n == "sdxs3" and nt == 3 for n, _, _, nt in rows)
+
+
+def test_cascade_spec_validation():
+    t = TierSpec(model="m", profile=LatencyProfile(0.1, 0.01))
+    with pytest.raises(ValueError):
+        CascadeSpec(name="bad", tiers=(t,))
+    with pytest.raises(ValueError):
+        CascadeSpec(name="bad", tiers=(t, t), fid_per_tier=(1.0, 2.0, 3.0))
+    # any depth constructs without quality anchors (paper-default fallback)
+    deep = CascadeSpec(name="deep", tiers=(t, t, t, t))
+    assert deep.fid_all_light > deep.fid_all_heavy
+
+
+def test_fixed_vectors_length_validated(profiles3):
+    serving, profiles = profiles3
+    with pytest.raises(ValueError, match="fixed_batches"):
+        solve_cascade(serving.cascade, serving, profiles, 10.0,
+                      fixed_batches=(2, 4))
+    with pytest.raises(ValueError, match="fixed_thresholds"):
+        solve_cascade(serving.cascade, serving, profiles, 10.0,
+                      fixed_thresholds=(0.5,))
+
+
+def test_boundary_profiles_do_not_alias():
+    p = DeferralProfile([0.1, 0.5, 0.9])
+    a, b = as_boundary_profiles(p, 2)
+    a.update([0.2, 0.3])
+    assert len(a) != len(b)
+
+
+def test_make_profiles_per_boundary():
+    serving = default_serving("sdxs3")
+    ps = make_profiles(serving, seed=0)
+    assert len(ps) == 2
+    # distinct easy fractions -> distinct distributions
+    assert ps[0].f(0.8) != ps[1].f(0.8)

@@ -1,8 +1,13 @@
-"""Hypothesis property tests on system invariants (deliverable c)."""
+"""Hypothesis property tests on system invariants (deliverable c).
+
+Uses real hypothesis when installed, else the deterministic fallback
+engine in ``repro.testing.hypo``.
+"""
 import math
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from repro.testing.hypo import given, settings, st
 
 from repro.core.bnb import MILP, solve_milp
 from repro.core.confidence import DeferralProfile

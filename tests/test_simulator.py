@@ -141,7 +141,8 @@ def test_snapshot_restore_deterministic(serving, tmp_path):
     profile_c = make_profile(serving, 0)
     sim_c = Simulator(serving, profile_c, SimConfig(seed=7))
     restore(sim_c, str(snap))
-    final = resume(sim_c, end_t=trace.duration_s + 4 * serving.cascade.slo_s)
+    final = resume(sim_c, end_t=trace.duration_s + 4 * serving.cascade.slo_s,
+                   final=True)
 
     assert final.completed == full.completed
     assert final.violations == full.violations
