@@ -2,9 +2,18 @@
 measured on THIS machine (replacing the paper's A100 profiling), then the
 full DiffServe control loop replays a bursty trace against those profiles.
 
+Builds one toy UNet per tier of the chosen cascade, so 3-tier registries
+(`sdxs3`, `sdxl3`) run the full tier-recursive pipeline. Heterogeneous
+clusters split the workers into speed classes; the allocator plans over
+``x[tier][class]`` and the report shows the per-class split.
+
   PYTHONPATH=src python examples/serve_cascade.py
+  PYTHONPATH=src python examples/serve_cascade.py \
+      --cascade sdxs3 --worker-classes a100:2:1.0,a10g:6:0.45
 """
+import argparse
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -13,50 +22,85 @@ import numpy as np
 from repro.config.base import DiffusionConfig, as_cascade_spec
 from repro.core.cascade import DiffusionCascade
 from repro.models.unet import init_unet
-from repro.serving.baselines import make_profile
+from repro.serving.baselines import make_profiles
 from repro.serving.cluster import ClusterRuntime
-from repro.serving.profiles import default_serving
+from repro.serving.profiles import (CASCADES, default_serving,
+                                    worker_classes_from_arg)
 from repro.serving.simulator import SimConfig, Simulator
 from repro.serving.trace import azure_like_trace
-from repro.training.discriminator import train_discriminator
 
-key = jax.random.PRNGKey(1)
-light_cfg = DiffusionConfig(name="toy-turbo", image_size=16, in_channels=3,
-                            base_channels=16, channel_mults=(1, 2),
-                            num_res_blocks=1, attn_resolutions=(),
-                            num_steps=1, text_dim=32)
-heavy_cfg = DiffusionConfig(name="toy-sd", image_size=16, in_channels=3,
-                            base_channels=24, channel_mults=(1, 2),
-                            num_res_blocks=2, attn_resolutions=(),
-                            num_steps=8, text_dim=32)
-kl, kh, kd = jax.random.split(key, 3)
-disc_params, disc_cfg, _ = train_discriminator(kd, steps=40, batch_size=16,
+ap = argparse.ArgumentParser()
+ap.add_argument("--cascade", default="sdturbo", choices=sorted(CASCADES))
+ap.add_argument("--workers", type=int, default=8)
+ap.add_argument("--worker-classes", default=None,
+                help="name:count[:speed],... e.g. a100:2:1.0,a10g:6:0.45 "
+                "(overrides --workers)")
+ap.add_argument("--duration", type=int, default=90)
+ap.add_argument("--seed", type=int, default=1)
+args = ap.parse_args()
+
+wcs = (worker_classes_from_arg(args.worker_classes)
+       if args.worker_classes else ())
+serving = default_serving(args.cascade, num_workers=args.workers,
+                          worker_classes=wcs)
+spec = as_cascade_spec(serving.cascade)
+n_tiers = spec.num_tiers
+
+key = jax.random.PRNGKey(args.seed)
+keys = jax.random.split(key, n_tiers + 1)
+stages = []
+for i in range(n_tiers):
+    # deeper tiers: wider UNet, more sampler steps (cheap -> heavy)
+    cfg = DiffusionConfig(
+        name=f"toy-tier{i}", image_size=16, in_channels=3,
+        base_channels=16 + 8 * i, channel_mults=(1, 2),
+        num_res_blocks=1 if i == 0 else 2, attn_resolutions=(),
+        num_steps=max(1, round(1 + 7 * i / max(n_tiers - 1, 1))),
+        text_dim=32)
+    stages.append((cfg, init_unet(keys[i], cfg)))
+
+from repro.training.discriminator import train_discriminator  # noqa: E402
+disc_params, disc_cfg, _ = train_discriminator(keys[-1], steps=40,
+                                               batch_size=16,
                                                image_size=16, lr=3e-3)
-cascade = DiffusionCascade([(light_cfg, init_unet(kl, light_cfg)),
-                            (heavy_cfg, init_unet(kh, heavy_cfg))],
-                           disc_cfg, disc_params)
+cascade = DiffusionCascade(stages, disc_cfg, disc_params)
 
-serving = default_serving("sdturbo", num_workers=8)
 runtime = ClusterRuntime(cascade, serving)
 print("measuring on-device execution profiles ...")
 prof = runtime.measure_profile(batches=(1, 2))
 print([(round(p.base_s, 4), round(p.marginal_s, 4)) for p in prof])
 
 # feed measured per-tier profiles into the controller and serve a trace
-spec = as_cascade_spec(serving.cascade)
 tiers = tuple(dataclasses.replace(t, profile=prof[i])
               for i, t in enumerate(spec.tiers))
 spec = dataclasses.replace(spec, tiers=tiers,
                            slo_s=max(10 * prof[-1].base_s, 1.0))
 serving = dataclasses.replace(serving, cascade=spec)
-cap = serving.num_workers / prof[0].base_s * 0.25
-trace = azure_like_trace(90, seed=2).scale(max(cap / 8, 0.5), max(cap, 1.0))
-sim = Simulator(serving, make_profile(serving, 0),
+# capacity in speed-weighted worker-equivalents (a10g:0.45 is not an a100)
+worker_eq = (sum(wc.count * wc.speed for wc in wcs) if wcs
+             else serving.num_workers)
+cap = worker_eq / prof[0].base_s * 0.25
+trace = azure_like_trace(args.duration, seed=2).scale(max(cap / 8, 0.5),
+                                                      max(cap, 1.0))
+sim = Simulator(serving, make_profiles(serving, 0),
                 SimConfig(seed=0, router="discriminator"),
                 confidence_fn=lambda n: np.asarray(cascade.confidence(
                     jnp.asarray(np.random.default_rng(0).normal(
                         size=(n, 16, 16, 3)).astype(np.float32)))))
 r = sim.run(trace)
-print(f"served {r.completed}/{r.total} queries | "
-      f"SLO violations {r.violation_ratio:.3f} | "
-      f"defer fraction {r.defer_fraction:.2f} | FID* {r.mean_fid:.2f}")
+
+report = {
+    "cascade": args.cascade,
+    "tiers": [t.model for t in spec.tiers],
+    "workers": serving.num_workers,
+    "served": r.completed, "total": r.total,
+    "slo_violation_ratio": round(r.violation_ratio, 3),
+    "defer_fraction": round(r.defer_fraction, 2),
+    "fid_star": round(r.mean_fid, 2),
+}
+if wcs:
+    report["worker_classes"] = {wc.name: {"count": wc.count,
+                                          "speed": wc.speed} for wc in wcs}
+    report["workers_by_class"] = r.workers_by_class
+    report["class_mean_batch_latency_s"] = r.class_latency_summary()
+print(json.dumps(report, indent=1))

@@ -188,7 +188,11 @@ class TierSpec:
     (ignored on the final tier — nothing defers past it). ``batch_choices``
     empty means "use ``ServingConfig.batch_choices``"; ``rho`` ``None``
     means "use the ServingConfig utilization caps" (``rho_light`` for tier
-    0, ``rho_heavy`` for deeper tiers).
+    0, ``rho_heavy`` for deeper tiers). ``slo_budget_s`` reserves a slice
+    of the cascade SLO for this tier: no plan may run the tier (exec +
+    its discriminator) slower than the budget on any worker class it is
+    assigned to. ``None`` means the solver splits the leftover SLO slack
+    across unbudgeted tiers proportionally to their reference latency.
     """
     model: str                        # model name in the repository
     profile: LatencyProfile = field(
@@ -196,6 +200,7 @@ class TierSpec:
     batch_choices: Tuple[int, ...] = ()
     disc_latency_s: float = 0.010     # EfficientNet on A100 (paper §4.4)
     rho: Optional[float] = None       # utilization cap (queue stability)
+    slo_budget_s: Optional[float] = None   # per-tier latency budget
 
 
 @dataclass(frozen=True)
@@ -227,6 +232,14 @@ class CascadeSpec:
         if len(self.fid_per_tier) not in (0, len(self.tiers)):
             raise ValueError(f"{self.name}: fid_per_tier must have one "
                              f"entry per tier")
+        budgets = [t.slo_budget_s for t in self.tiers
+                   if t.slo_budget_s is not None]
+        if any(b <= 0 for b in budgets):
+            raise ValueError(f"{self.name}: tier slo_budget_s must be > 0")
+        if sum(budgets) > self.slo_s + 1e-9:
+            raise ValueError(
+                f"{self.name}: per-tier SLO budgets sum to "
+                f"{sum(budgets):.3f}s > slo_s={self.slo_s:.3f}s")
 
     # ---------------- structure ----------------
     @property
@@ -324,6 +337,61 @@ def tier_rho(spec: CascadeSpec, serving: "ServingConfig", i: int) -> float:
 
 
 @dataclass(frozen=True)
+class WorkerClass:
+    """A homogeneous group of workers in a heterogeneous cluster.
+
+    ``speed`` is a throughput multiplier relative to the reference
+    hardware the latency profiles were measured on: a worker of speed
+    ``s`` runs every tier's batch in ``e(b) / s`` seconds and therefore
+    contributes ``s * T(b)`` throughput (paper §5: mixed GPU classes).
+    """
+    name: str
+    count: int
+    speed: float = 1.0
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("worker class name must be non-empty "
+                             "(\"\" is the homogeneous sentinel)")
+        if self.count < 1:
+            raise ValueError(f"worker class {self.name!r}: count must "
+                             f"be >= 1, got {self.count}")
+        if self.speed <= 0:
+            raise ValueError(f"worker class {self.name!r}: speed must "
+                             f"be > 0, got {self.speed}")
+
+
+def parse_worker_classes(text: str,
+                         speed_defaults: Optional[Mapping[str, float]] = None
+                         ) -> Tuple[WorkerClass, ...]:
+    """Parse a ``--worker-classes`` CLI value: ``name:count[:speed],...``
+    e.g. ``a100:4:1.0,a10g:12:0.45``. Omitted speeds resolve through
+    ``speed_defaults`` (else 1.0)."""
+    out = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        bits = part.split(":")
+        if len(bits) == 2:
+            name, count = bits
+            speed = (speed_defaults or {}).get(name, 1.0)
+        elif len(bits) == 3:
+            name, count, speed = bits
+        else:
+            raise ValueError(f"bad worker-class entry {part!r}; expected "
+                             f"name:count[:speed]")
+        out.append(WorkerClass(name=name, count=int(count),
+                               speed=float(speed)))
+    if not out:
+        raise ValueError(f"no worker classes in {text!r}")
+    names = [wc.name for wc in out]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate worker-class names in {text!r}")
+    return tuple(out)
+
+
+@dataclass(frozen=True)
 class ServingConfig:
     cascade: "CascadeSpec | CascadeConfig"
     num_workers: int = 16
@@ -338,6 +406,26 @@ class ServingConfig:
     worker_tp_size: int = 1           # chips per worker (TPU slice width)
     rho_light: float = 0.90           # utilization cap (queue stability)
     rho_heavy: float = 0.85
+    worker_classes: Tuple[WorkerClass, ...] = ()   # () => homogeneous
+
+    def __post_init__(self):
+        if not self.worker_classes:
+            return
+        names = [wc.name for wc in self.worker_classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate worker-class names: {names}")
+        total = sum(wc.count for wc in self.worker_classes)
+        if total != self.num_workers:
+            raise ValueError(
+                f"worker_classes counts sum to {total} but "
+                f"num_workers={self.num_workers}")
+
+    def class_table(self) -> "dict[str, Tuple[int, float]]":
+        """``{name: (count, speed)}`` for the solvers; a single unit-speed
+        'default' class when the cluster is homogeneous."""
+        if not self.worker_classes:
+            return {"default": (self.num_workers, 1.0)}
+        return {wc.name: (wc.count, wc.speed) for wc in self.worker_classes}
 
 
 def replace(cfg, **kw):

@@ -12,7 +12,8 @@ from typing import List, Optional, Sequence
 
 from repro.config.base import ServingConfig, as_cascade_spec
 from repro.core.confidence import DeferralProfile, as_boundary_profiles
-from repro.core.milp import AllocationPlan, Telemetry, solve_cascade
+from repro.core.milp import (AllocationPlan, Telemetry, solve_cascade,
+                             solve_heterogeneous_cascade)
 
 
 @dataclasses.dataclass
@@ -70,27 +71,52 @@ class ResourceManager:
     def plan(self, telemetry: Telemetry) -> AllocationPlan:
         demand = self.estimate_demand(telemetry.demand_qps)
         opts = self.options
-        kw = dict(
-            num_workers=telemetry.live_workers or self.serving.num_workers,
-            queues=telemetry.queues,
-            arrivals=telemetry.arrivals,
-        )
+        if self.serving.worker_classes:
+            solver = solve_heterogeneous_cascade
+            kw = dict(
+                classes=self._live_classes(telemetry),
+                queues=telemetry.queues,
+                arrivals=telemetry.arrivals,
+            )
+        else:
+            solver = solve_cascade
+            kw = dict(
+                num_workers=telemetry.live_workers
+                or self.serving.num_workers,
+                queues=telemetry.queues,
+                arrivals=telemetry.arrivals,
+            )
         if opts.mode == "static_threshold":
-            plan = solve_cascade(
+            plan = solver(
                 self.spec, self.serving, self.profiles, demand,
                 fixed_thresholds=(opts.static_threshold,)
                 * self.spec.num_boundaries, **kw)
         elif opts.mode == "aimd_batching":
-            plan = solve_cascade(self.spec, self.serving, self.profiles,
-                                 demand,
-                                 fixed_batches=tuple(self._aimd_batches),
-                                 **kw)
+            plan = solver(self.spec, self.serving, self.profiles,
+                          demand,
+                          fixed_batches=tuple(self._aimd_batches),
+                          **kw)
         elif opts.mode == "no_queuing_model":
-            plan = solve_cascade(self.spec, self.serving, self.profiles,
-                                 demand, queuing_model="proteus_2x", **kw)
+            plan = solver(self.spec, self.serving, self.profiles,
+                          demand, queuing_model="proteus_2x", **kw)
         else:
-            plan = solve_cascade(self.spec, self.serving, self.profiles,
-                                 demand, **kw)
+            plan = solver(self.spec, self.serving, self.profiles,
+                          demand, **kw)
         self.solve_times_ms.append(plan.solve_ms)
         self.last_plan = plan
         return plan
+
+    def _live_classes(self, telemetry: Telemetry) -> dict:
+        """Worker-class table shrunk to the classes' live counts (failure
+        detection / elastic scaling reduce a class's inventory). When the
+        census is populated, a class absent from it is fully dead and
+        must not be planned over; an empty census (first tick) means no
+        failures observed yet."""
+        live = dict(telemetry.live_by_class)
+        table = {}
+        for wc in self.serving.worker_classes:
+            count = live.get(wc.name, 0) if telemetry.live_by_class \
+                else wc.count
+            if count > 0:
+                table[wc.name] = (count, wc.speed)
+        return table or self.serving.class_table()

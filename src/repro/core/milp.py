@@ -27,7 +27,7 @@ import dataclasses
 import itertools
 import math
 import time
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.config.base import (CascadeConfig, CascadeSpec, ServingConfig,
                                as_cascade_spec, tier_rho)
@@ -37,7 +37,13 @@ from repro.core.confidence import DeferralProfile
 @dataclasses.dataclass(frozen=True)
 class AllocationPlan:
     """Per-tier allocation vectors: ``workers[i]`` workers run tier i with
-    batch size ``batches[i]``; ``thresholds[i]`` gates boundary i->i+1."""
+    batch size ``batches[i]``; ``thresholds[i]`` gates boundary i->i+1.
+
+    Heterogeneous plans additionally carry ``class_workers[i]``, the
+    per-worker-class split of ``workers[i]`` (name -> count; classes with
+    zero workers are omitted). ``class_workers`` is ``None`` for
+    homogeneous plans.
+    """
     workers: Tuple[int, ...]
     batches: Tuple[int, ...]
     thresholds: Tuple[float, ...]
@@ -45,6 +51,7 @@ class AllocationPlan:
     feasible: bool
     solve_ms: float = 0.0
     objective: float = -1.0
+    class_workers: Optional[Tuple[Mapping[str, int], ...]] = None
 
     @property
     def num_tiers(self) -> int:
@@ -84,6 +91,7 @@ class Telemetry:
     queues: Tuple[float, ...] = ()
     arrivals: Tuple[float, ...] = ()
     live_workers: int = 0
+    live_by_class: Tuple[Tuple[str, int], ...] = ()   # (class, alive count)
 
     # ------- two-tier accessors -------
     @property
@@ -145,7 +153,9 @@ def solve_cascade(
     arrivals = _pad(arrivals, n)
     profs = [spec.tiers[i].profile for i in range(n)]
     rhos = [tier_rho(spec, serving, i) for i in range(n)]
-    disc_total = sum(spec.tiers[i].disc_latency_s for i in range(n - 1))
+    discs = [spec.tiers[i].disc_latency_s if i < n - 1 else 0.0
+             for i in range(n)]
+    disc_total = sum(discs)
     drains = [q / max(spec.slo_s, 1e-9) for q in queues]
 
     if fixed_thresholds is not None and \
@@ -176,6 +186,10 @@ def solve_cascade(
                       for i in range(n)) + sum(qd) + disc_total
         if latency > spec.slo_s:
             continue
+        if any(spec.tiers[i].slo_budget_s is not None
+               and profs[i].exec_latency(batches[i]) + discs[i]
+               > spec.tiers[i].slo_budget_s + 1e-12 for i in range(n)):
+            continue                    # a tier blows its SLO budget
         # utilization caps keep queues stable (ρ<1 — Little's law blows up
         # at ρ=1); backlog drains within one SLO window
         x0 = max(int(math.ceil(
@@ -364,6 +378,9 @@ def solve_heterogeneous(
     from repro.core.bnb import MILP, solve_milp
     import numpy as np
 
+    if threshold_grid < 2:
+        raise ValueError(f"threshold_grid must be >= 2 points, got "
+                         f"{threshold_grid}")
     spec = as_cascade_spec(cascade)
     names = sorted(classes)
     counts = [classes[c][0] for c in names]
@@ -400,6 +417,344 @@ def solve_heterogeneous(
                     "x1": {names[i]: int(round(sol.x[i])) for i in range(n)},
                     "x2": {names[i]: int(round(sol.x[n + i]))
                            for i in range(n)},
-                    "objective": t}
+                    "objective": t, "feasible": True}
             break
-    return best or {"threshold": 0.0, "x1": {}, "x2": {}, "objective": 0.0}
+    # explicit infeasibility flag: callers must not mistake the empty
+    # fallback for a legitimate zero-threshold plan
+    return best or {"threshold": 0.0, "x1": {}, "x2": {}, "objective": 0.0,
+                    "feasible": False}
+
+
+# ---------------------------------------------------------------------------
+# N-tier heterogeneous allocation (paper §5 generalized)
+# ---------------------------------------------------------------------------
+def _normalize_classes(serving: ServingConfig,
+                       classes) -> "Dict[str, Tuple[int, float]]":
+    """Resolve the worker-class table: explicit arg > ServingConfig >
+    single unit-speed class. Mapping form is sorted by name for
+    determinism; WorkerClass tuples keep their declared order."""
+    if classes is None:
+        return serving.class_table()
+    if isinstance(classes, Mapping):
+        return {c: (int(classes[c][0]), float(classes[c][1]))
+                for c in sorted(classes)}
+    return {wc.name: (wc.count, wc.speed) for wc in classes}
+
+
+def _tier_budgets(spec: CascadeSpec, profs, discs, batches,
+                  qd_total: float) -> Optional[Sequence[float]]:
+    """Per-tier latency budgets for one batch tuple.
+
+    Explicitly budgeted tiers keep their ``slo_budget_s`` (a per-tier
+    cap, independent of the transient queuing delay — mirroring
+    ``solve_cascade``, which checks budgets and the queue-inclusive SLO
+    separately). When every tier is budgeted, CascadeSpec validation
+    (budgets sum <= slo) bounds the worst-case path and only the
+    reference-latency SLO check remains. Otherwise unbudgeted tiers
+    split the leftover slack proportionally to their reference latency,
+    with each budgeted tier consuming ``max(budget, reference)`` from
+    that slack so the derived caps can never push the worst-case path
+    past the SLO, even when a budget grants a tier more room than its
+    reference latency. ``None`` when no split exists. With a single
+    unit-speed class and no explicit budgets this reduces exactly to the
+    homogeneous check ``sum_i e_i(b_i) + disc + qd <= slo``."""
+    n = spec.num_tiers
+    ell = [profs[i].exec_latency(batches[i]) + discs[i] for i in range(n)]
+    fixed = [spec.tiers[i].slo_budget_s for i in range(n)]
+    unset = [i for i in range(n) if fixed[i] is None]
+    if not unset:
+        ok = spec.slo_s - qd_total - sum(ell) >= -1e-12
+        return fixed if ok else None
+    slack = spec.slo_s - qd_total - sum(max(fixed[i], ell[i])
+                                        for i in range(n)
+                                        if fixed[i] is not None)
+    if slack <= 0:
+        return None
+    scale = slack / sum(ell[i] for i in unset)
+    return [fixed[i] if fixed[i] is not None else ell[i] * scale
+            for i in range(n)]
+
+
+def _solve_assignment(coefs, reqs, counts, elig, *, maximize_tier=None,
+                      pinned=None):
+    """Class-assignment ILP over x[tier][class] (core/bnb.py).
+
+    ``coefs[i][c]``: capacity one class-c worker contributes to tier i;
+    ``reqs[i]``: required capacity (rows emitted only when > 0);
+    ``elig[i]``: eligible class indices (others pinned to 0);
+    ``pinned``: {tier: per-class counts} rows frozen to exact values
+    (drain-dominated tiers that soak up all spare capacity).
+    Minimizes total workers, or maximizes tier ``maximize_tier``'s
+    capacity. Returns the integer x matrix, or None when infeasible.
+    """
+    from repro.core.bnb import MILP, solve_milp
+    import numpy as np
+
+    nt, nc = len(coefs), len(counts)
+    nv = nt * nc
+    pinned = pinned or {}
+    A, rhs = [], []
+    for i in range(nt):
+        if i < len(reqs) and reqs[i] > 0 and i not in pinned:
+            row = [0.0] * nv
+            for c in range(nc):
+                row[i * nc + c] = -coefs[i][c]
+            A.append(row)
+            rhs.append(-reqs[i])
+    for c in range(nc):                      # class inventory
+        row = [0.0] * nv
+        for i in range(nt):
+            row[i * nc + c] = 1.0
+        A.append(row)
+        rhs.append(counts[c])
+    upper = np.zeros(nv)
+    lower = np.zeros(nv)
+    for i in range(nt):
+        for c in elig[i]:
+            upper[i * nc + c] = counts[c]
+    for i, row in pinned.items():
+        if i >= nt:
+            continue
+        for c in range(nc):
+            upper[i * nc + c] = row[c]
+            lower[i * nc + c] = row[c]
+    if maximize_tier is None:
+        c_obj = np.ones(nv)
+    else:
+        c_obj = np.zeros(nv)
+        for c in range(nc):
+            c_obj[maximize_tier * nc + c] = -coefs[maximize_tier][c]
+    sol = solve_milp(MILP(c=np.asarray(c_obj), A_ub=np.asarray(A, float),
+                          b_ub=np.asarray(rhs, float),
+                          integer=list(range(nv)), upper=upper,
+                          lower=lower))
+    if sol.status != "optimal":
+        return None
+    return [[int(round(sol.x[i * nc + c])) for c in range(nc)]
+            for i in range(nt)]
+
+
+def solve_heterogeneous_cascade(
+    cascade: "CascadeSpec | CascadeConfig",
+    serving: ServingConfig,
+    profiles: Sequence[DeferralProfile],
+    demand_qps: float,
+    *,
+    classes=None,
+    queues: Optional[Sequence[float]] = None,
+    arrivals: Optional[Sequence[float]] = None,
+    queuing_model: str = "littles_law",
+    fixed_thresholds: Optional[Sequence[float]] = None,
+    fixed_batches: Optional[Sequence[int]] = None,
+    threshold_grid: Optional[int] = None,
+) -> AllocationPlan:
+    """Exact N-tier heterogeneous solver (paper §5 generalized from the
+    hardwired light/heavy pair): an ILP over ``x[tier][class]`` with
+    per-class speed multipliers, per-tier batch search, and per-tier SLO
+    budgets.
+
+    For each batch tuple, boundaries close tier-by-tier exactly as in
+    ``solve_cascade``: maximize the next tier's deliverable capacity (a
+    small ILP over the class inventory, holding upstream requirements),
+    invert the deferral profile at that capacity, then fix the deferred
+    load and move one tier deeper. A final ILP minimizes total workers at
+    the chosen thresholds. With a single unit-speed class this reproduces
+    ``solve_cascade`` decision-for-decision (property-tested); at N=2 with
+    pinned batches and ``threshold_grid`` it reproduces the legacy
+    ``solve_heterogeneous`` grid solver (property-tested).
+
+    ``classes``: ``{name: (count, speed)}`` or WorkerClass tuple; default
+    is ``serving.worker_classes`` (or one unit-speed class). A class of
+    speed ``s`` runs every tier in ``e(b)/s`` and is eligible for a tier
+    only if that fits the tier's SLO budget.
+    """
+    t0 = time.perf_counter()
+    spec = as_cascade_spec(cascade)
+    if isinstance(profiles, DeferralProfile):
+        profiles = [profiles]
+    n = spec.num_tiers
+    if len(profiles) < spec.num_boundaries:
+        raise ValueError(f"{spec.name}: need {spec.num_boundaries} deferral "
+                         f"profiles, got {len(profiles)}")
+    table = _normalize_classes(serving, classes)
+    names = list(table)
+    counts = [table[c][0] for c in names]
+    speeds = [table[c][1] for c in names]
+    S = sum(counts)
+    lam_D = serving.overprovision * max(demand_qps, 1e-9)
+    queues = _pad(queues, n)
+    arrivals = _pad(arrivals, n)
+    profs = [spec.tiers[i].profile for i in range(n)]
+    rhos = [tier_rho(spec, serving, i) for i in range(n)]
+    discs = [spec.tiers[i].disc_latency_s if i < n - 1 else 0.0
+             for i in range(n)]
+    disc_total = sum(discs)
+    drains = [q / max(spec.slo_s, 1e-9) for q in queues]
+
+    if fixed_thresholds is not None and \
+            len(fixed_thresholds) != spec.num_boundaries:
+        raise ValueError(f"{spec.name}: fixed_thresholds needs "
+                         f"{spec.num_boundaries} entries (one per "
+                         f"boundary), got {len(fixed_thresholds)}")
+    if threshold_grid is not None and threshold_grid < 2:
+        raise ValueError(f"threshold_grid must be >= 2 points, got "
+                         f"{threshold_grid}")
+    if fixed_batches is not None:
+        if len(fixed_batches) != n:
+            raise ValueError(f"{spec.name}: fixed_batches needs {n} "
+                             f"entries (one per tier), got "
+                             f"{len(fixed_batches)}")
+        batch_tuples = [tuple(fixed_batches)]
+    else:
+        batch_tuples = itertools.product(
+            *[spec.tier_batch_choices(i, serving.batch_choices)
+              for i in range(n)])
+
+    best: Optional[AllocationPlan] = None
+    for batches in batch_tuples:
+        if queuing_model == "littles_law":
+            qd = [queuing_delay(queues[0], max(arrivals[0], lam_D))]
+            qd += [queuing_delay(queues[i], arrivals[i]) if queues[i] else 0.0
+                   for i in range(1, n)]
+        else:                               # Proteus heuristic (ablation)
+            qd = [2 * profs[i].exec_latency(batches[i]) for i in range(n)]
+        latency = sum(profs[i].exec_latency(batches[i])
+                      for i in range(n)) + sum(qd) + disc_total
+        budgets = _tier_budgets(spec, profs, discs, batches, sum(qd))
+        if budgets is None:
+            continue
+        # the discriminator runs on the worker too, so the whole tier
+        # latency scales with class speed (matches Simulator._exec_latency)
+        elig = [[c for c in range(len(names))
+                 if (profs[i].exec_latency(batches[i]) + discs[i])
+                 / speeds[c] <= budgets[i] + 1e-9]
+                for i in range(n)]
+        if not elig[0]:
+            continue
+        # capacity coefficients: tier 0 is constrained in raw-throughput
+        # units (lam/rho + drain, matching solve_cascade); deferred tiers
+        # in rho-derated units
+        coefs = [[profs[0].throughput(batches[0]) * s for s in speeds]]
+        coefs += [[profs[j].throughput(batches[j]) * rhos[j] * s
+                   for s in speeds] for j in range(1, n)]
+        reqs = [lam_D / rhos[0] + drains[0]]
+        thresholds = []
+        pinned: Dict[int, list] = {}
+        lam = lam_D
+        ok = True
+        for b in range(spec.num_boundaries):
+            j = b + 1
+            drain = drains[j]
+            if fixed_thresholds is not None:
+                t = fixed_thresholds[b]
+                need = lam * profiles[b].f(t) + drain
+                reqs.append(need if profiles[b].f(t) > 0 or drain > 0
+                            else 0.0)
+            else:
+                x = _solve_assignment(coefs[:j + 1], reqs, counts,
+                                      elig[:j + 1], maximize_tier=j,
+                                      pinned=pinned)
+                if x is None:           # upstream tiers unservable
+                    ok = False
+                    break
+                cap = sum(x[j][c] * coefs[j][c] for c in range(len(names)))
+                cap_frac = max(cap - drain, 0.0) / max(lam, 1e-12)
+                if threshold_grid:
+                    t = 0.0
+                    for k in range(threshold_grid - 1, -1, -1):
+                        tk = k / (threshold_grid - 1)
+                        if lam * profiles[b].f(tk) + drain <= cap + 1e-12:
+                            t = tk
+                            break
+                else:
+                    t = profiles[b].inverse(cap_frac)
+                need = lam * profiles[b].f(t) + drain
+                E = need if profiles[b].f(t) > 0 or drain > 0 else 0.0
+                if E > cap:
+                    # drain-dominated tier: the backlog outstrips all
+                    # spare capacity; throw every leftover worker at it
+                    # (mirrors solve_cascade's min(x, residual) clamp)
+                    pinned[j] = x[j]
+                    reqs.append(0.0)
+                else:
+                    reqs.append(E)
+            thresholds.append(t)
+            lam = lam * profiles[b].f(t)
+        if not ok:
+            continue
+        x = _solve_assignment(coefs, reqs, counts, elig, pinned=pinned)
+        if x is None:                   # fixed thresholds may not fit
+            continue
+        workers = tuple(sum(row) for row in x)
+        class_workers = tuple(
+            {names[c]: row[c] for c in range(len(names)) if row[c] > 0}
+            for row in x)
+        cand = AllocationPlan(workers=workers, batches=tuple(batches),
+                              thresholds=tuple(thresholds),
+                              expected_latency=latency, feasible=True,
+                              objective=thresholds[0],
+                              class_workers=class_workers)
+        if (best is None or cand.thresholds > best.thresholds
+                or (cand.thresholds == best.thresholds
+                    and cand.total_workers < best.total_workers)):
+            best = cand
+
+    ms = (time.perf_counter() - t0) * 1e3
+    if best is None:
+        # infeasible: degrade like solve_cascade — enough workers on tier 0
+        # for the raw demand at max batch, the rest on tier 1 (SLO-pressure
+        # mode), with the explicit feasible=False flag
+        batches = tuple(max(spec.tier_batch_choices(i, serving.batch_choices))
+                        for i in range(n))
+        x0 = min(S, max(int(math.ceil(
+            lam_D / profs[0].throughput(batches[0]))), 1))
+        workers = (x0, max(S - x0, 0)) + (0,) * (n - 2)
+        class_workers = [dict() for _ in range(n)]
+        left = x0
+        for c in sorted(names, key=lambda c: -table[c][1]):
+            take = min(table[c][0], left)   # fastest classes on tier 0 first
+            if take:
+                class_workers[0][c] = take
+            spill = table[c][0] - take
+            if spill and n > 1:
+                class_workers[1][c] = class_workers[1].get(c, 0) + spill
+            left -= take
+        return AllocationPlan(workers=workers, batches=batches,
+                              thresholds=(0.0,) * spec.num_boundaries,
+                              expected_latency=profs[0].exec_latency(
+                                  batches[0]),
+                              feasible=False, solve_ms=ms, objective=0.0,
+                              class_workers=tuple(class_workers))
+    return dataclasses.replace(best, solve_ms=ms)
+
+
+def plan_tier_latencies(cascade: "CascadeSpec | CascadeConfig",
+                        plan: AllocationPlan,
+                        classes=None,
+                        serving: Optional[ServingConfig] = None
+                        ) -> "list[Optional[float]]":
+    """Worst-case execution latency (exec + discriminator) per tier under
+    ``plan``: the slowest worker class actually assigned to each tier.
+    ``None`` for tiers with no workers. Unit speeds when the plan carries
+    no class split."""
+    spec = as_cascade_spec(cascade)
+    table = None
+    if classes is not None or (serving is not None
+                               and serving.worker_classes):
+        # serving is only consulted when classes is None, in which case
+        # the condition guarantees it is present
+        table = _normalize_classes(serving, classes)
+    out: "list[Optional[float]]" = []
+    for i in range(spec.num_tiers):
+        disc = spec.tiers[i].disc_latency_s if i < spec.num_tiers - 1 else 0.0
+        base = spec.tiers[i].profile.exec_latency(plan.batches[i]) + disc
+        if plan.class_workers is not None and table is not None:
+            assigned = [table[c][1] for c, k in plan.class_workers[i].items()
+                        if k > 0 and c in table]
+            if not assigned:
+                out.append(None if plan.workers[i] == 0 else base)
+                continue
+            out.append(base / min(assigned))
+        else:
+            out.append(base if plan.workers[i] > 0 else None)
+    return out

@@ -20,7 +20,8 @@ import pathlib
 import numpy as np
 
 from repro.serving.baselines import BASELINES, run_baseline
-from repro.serving.profiles import CASCADES, default_serving, list_cascades
+from repro.serving.profiles import (CASCADES, default_serving, list_cascades,
+                                    worker_classes_from_arg)
 from repro.serving.trace import azure_like_trace, load_trace_file, static_trace
 
 
@@ -32,6 +33,10 @@ def main():
     ap.add_argument("--baseline", default="diffserve",
                     choices=list(BASELINES))
     ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--worker-classes", default=None,
+                    help="heterogeneous cluster as name:count[:speed],... "
+                    "e.g. a100:4:1.0,a10g:12:0.45 (speed defaults from "
+                    "the GPU class table; overrides --workers)")
     ap.add_argument("--duration", type=int, default=360)
     ap.add_argument("--trace-min", type=float, default=4.0)
     ap.add_argument("--trace-max", type=float, default=32.0)
@@ -56,7 +61,10 @@ def main():
     else:
         trace = azure_like_trace(args.duration, seed=3).scale(
             args.trace_min, args.trace_max)
-    serving = default_serving(args.cascade, num_workers=args.workers)
+    wcs = (worker_classes_from_arg(args.worker_classes)
+           if args.worker_classes else ())
+    serving = default_serving(args.cascade, num_workers=args.workers,
+                              worker_classes=wcs)
     spec = serving.cascade
     r = run_baseline(args.baseline, trace, serving, seed=args.seed)
 
@@ -64,7 +72,7 @@ def main():
         "cascade": args.cascade,
         "tiers": [t.model for t in spec.tiers],
         "baseline": args.baseline,
-        "workers": args.workers, "trace": trace.name,
+        "workers": serving.num_workers, "trace": trace.name,
         "total_queries": r.total, "completed": r.completed,
         "dropped": r.dropped, "slo_violation_ratio": round(r.violation_ratio, 4),
         "mean_fid": round(r.mean_fid, 3),
@@ -82,6 +90,11 @@ def main():
         "threshold_timeline": r.threshold_timeline[:: max(
             len(r.threshold_timeline) // 50, 1)],
     }
+    if wcs:
+        report["worker_classes"] = {
+            wc.name: {"count": wc.count, "speed": wc.speed} for wc in wcs}
+        report["workers_by_class"] = r.workers_by_class
+        report["class_mean_batch_latency_s"] = r.class_latency_summary()
     print(json.dumps(report, indent=1))
     if args.out:
         pathlib.Path(args.out).write_text(json.dumps(report, indent=1))

@@ -18,7 +18,8 @@ from repro.config.base import ServingConfig, as_cascade_spec
 from repro.core.allocator import AllocatorOptions
 from repro.core.confidence import (DeferralProfile,
                                    synthetic_confidence_scores)
-from repro.core.milp import AllocationPlan, solve_cascade
+from repro.core.milp import (AllocationPlan, solve_cascade,
+                             solve_heterogeneous_cascade)
 from repro.serving.simulator import HEAVY, SimConfig, Simulator, SimResult
 from repro.serving.trace import Trace
 
@@ -57,6 +58,15 @@ def run_baseline(name: str, trace: Trace, serving: ServingConfig,
     sim_kw = dict(seed=seed)
     sim_kw.update(sim_overrides or {})
     rng = np.random.default_rng(seed + 1)
+    het = bool(serving.worker_classes)
+
+    def _all_to(tier: int) -> Tuple[dict, ...]:
+        """Class split sending every worker class to one tier (static
+        query-agnostic baselines on a heterogeneous cluster)."""
+        split = [dict() for _ in range(n)]
+        for wc in serving.worker_classes:
+            split[tier][wc.name] = wc.count
+        return tuple(split)
 
     if name == "clipper-light":
         profiles = make_profiles(serving, seed)
@@ -65,23 +75,28 @@ def run_baseline(name: str, trace: Trace, serving: ServingConfig,
                              num_workers=serving.num_workers)
         plan = dataclasses.replace(
             plan, workers=(serving.num_workers,) + (0,) * (n - 1),
-            thresholds=(0.0,) * spec.num_boundaries)
+            thresholds=(0.0,) * spec.num_boundaries,
+            class_workers=_all_to(0) if het else None)
         sim = Simulator(serving, profiles,
                         SimConfig(router="random", fixed_plan=plan, **sim_kw))
     elif name == "clipper-heavy":
         profiles = make_profiles(serving, seed)
-        # largest batch whose execution latency still fits the SLO
+        # largest batch whose execution latency still fits the SLO (on the
+        # slowest class present, so heterogeneous runs stay comparable)
         final = spec.tiers[-1]
+        slowest = min((wc.speed for wc in serving.worker_classes),
+                      default=1.0)
         choices = spec.tier_batch_choices(n - 1, serving.batch_choices)
         feas = [b for b in choices
-                if final.profile.exec_latency(b) <= spec.slo_s]
+                if final.profile.exec_latency(b) / slowest <= spec.slo_s]
         b_last = max(feas) if feas else min(choices)
         batches = tuple(1 for _ in range(n - 1)) + (b_last,)
         plan = AllocationPlan(
             workers=(0,) * (n - 1) + (serving.num_workers,),
             batches=batches, thresholds=(1.0,) * spec.num_boundaries,
             expected_latency=final.profile.exec_latency(b_last),
-            feasible=True)
+            feasible=True,
+            class_workers=_all_to(n - 1) if het else None)
         sim = Simulator(serving, profiles,
                         SimConfig(router="random", arrival_stage=HEAVY,
                                   fixed_plan=plan, **sim_kw))
@@ -98,8 +113,12 @@ def run_baseline(name: str, trace: Trace, serving: ServingConfig,
         profiles = make_profiles(serving, seed)
         s_nomargin = dataclasses.replace(serving, rho_light=1.0,
                                          rho_heavy=1.0)
-        plan = solve_cascade(spec, s_nomargin, profiles, peak,
-                             num_workers=serving.num_workers)
+        if het:
+            plan = solve_heterogeneous_cascade(spec, s_nomargin, profiles,
+                                               peak)
+        else:
+            plan = solve_cascade(spec, s_nomargin, profiles, peak,
+                                 num_workers=serving.num_workers)
         sim = Simulator(serving, profiles,
                         SimConfig(router="discriminator", fixed_plan=plan,
                                   **sim_kw))

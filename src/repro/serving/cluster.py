@@ -26,6 +26,8 @@ class WorkerSlice:
     wid: int
     role: Optional[int] = None        # tier index; None while loading
     devices: tuple = ()
+    class_name: str = ""              # hardware class ("" = homogeneous)
+    speed: float = 1.0                # throughput multiplier vs reference
 
 
 class ClusterRuntime:
@@ -36,10 +38,17 @@ class ClusterRuntime:
         self.serving = serving
         n = len(jax.devices())
         tp = max(serving.worker_tp_size, 1)
+        # heterogeneous clusters: wid order follows the declared class
+        # order, matching the simulator's worker numbering
+        class_of = []
+        for wc in serving.worker_classes:
+            class_of += [(wc.name, wc.speed)] * wc.count
+        class_of += [("", 1.0)] * (serving.num_workers - len(class_of))
         self.slices: List[WorkerSlice] = [
             WorkerSlice(wid=i,
                         devices=tuple(jax.devices()[(i * tp) % n:
-                                                    (i * tp) % n + tp]))
+                                                    (i * tp) % n + tp]),
+                        class_name=class_of[i][0], speed=class_of[i][1])
             for i in range(serving.num_workers)]
 
     def measure_profile(self, batches=(1, 2, 4), prompt_len: int = 8,

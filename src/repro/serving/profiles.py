@@ -17,7 +17,7 @@ from __future__ import annotations
 from typing import Dict, List, Sequence, Tuple
 
 from repro.config.base import (CascadeSpec, LatencyProfile, ServingConfig,
-                               TierSpec)
+                               TierSpec, WorkerClass, parse_worker_classes)
 
 # model -> e(b) = base + marginal*(b-1)
 MODEL_PROFILES: Dict[str, LatencyProfile] = {
@@ -30,6 +30,21 @@ MODEL_PROFILES: Dict[str, LatencyProfile] = {
 
 DISCRIMINATOR_LATENCY_S = {"efficientnet_s": 0.010, "resnet34": 0.002,
                            "vit_b16": 0.005}
+
+# Diffusion-workload throughput multipliers vs the A100-80GB the
+# MODEL_PROFILES were measured on (paper §5's heterogeneous clusters).
+# Used as speed defaults for `--worker-classes a100:4,a10g:12` syntax;
+# an explicit third field (`a10g:12:0.5`) always wins.
+GPU_CLASS_SPEEDS: Dict[str, float] = {
+    "h100": 1.60, "a100": 1.00, "l40s": 0.60, "v100": 0.55,
+    "a10g": 0.45, "t4": 0.25,
+}
+
+
+def worker_classes_from_arg(text: str) -> Tuple[WorkerClass, ...]:
+    """Parse a ``--worker-classes`` CLI value with the GPU speed table as
+    defaults for omitted speeds."""
+    return parse_worker_classes(text, speed_defaults=GPU_CLASS_SPEEDS)
 
 
 def make_cascade(name: str, models: Sequence[str], *, slo_s: float,
@@ -89,5 +104,10 @@ def list_cascades() -> List[Tuple[str, str, float, int]]:
 
 def default_serving(cascade: str = "sdturbo", num_workers: int = 16,
                     **kw) -> ServingConfig:
+    """ServingConfig for a registered cascade. When ``worker_classes`` is
+    given, ``num_workers`` is derived from the class counts."""
+    wcs = kw.get("worker_classes") or ()
+    if wcs:
+        num_workers = sum(wc.count for wc in wcs)
     return ServingConfig(cascade=CASCADES[cascade],
                          num_workers=num_workers, **kw)

@@ -62,6 +62,8 @@ class Worker:
     in_flight: List[Query] = dataclasses.field(default_factory=list)
     batch_started: float = 0.0
     last_heartbeat: float = 0.0
+    speed: float = 1.0            # hardware-class throughput multiplier
+    wclass: str = ""              # worker-class name ("" = homogeneous)
 
 
 @dataclasses.dataclass
@@ -102,6 +104,12 @@ class SimResult:
     solve_ms: List[float] = dataclasses.field(default_factory=list)
     hedged: int = 0
     requeued_on_failure: int = 0
+    # live per-class worker census: declared counts until run() ends,
+    # then the end-of-run alive counts (failures/scaling show up here)
+    workers_by_class: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # per worker class: (batch size, wall-clock batch latency) samples
+    class_batch_latencies: Dict[str, List[Tuple[int, float]]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def violation_ratio(self) -> float:
@@ -121,6 +129,12 @@ class SimResult:
     def mean_fid(self) -> float:
         vals = [f for _, f in self.fid_timeline]
         return float(np.mean(vals)) if vals else float("nan")
+
+    def class_latency_summary(self) -> Dict[str, float]:
+        """Mean wall-clock batch latency per worker class (for reports)."""
+        return {cls: round(float(np.mean([d for _, d in v])), 4)
+                for cls, v in sorted(self.class_batch_latencies.items())
+                if v}
 
 
 def _per_boundary_fn(fn: Optional[Callable]) -> Optional[Callable]:
@@ -158,8 +172,17 @@ class Simulator:
         self.confidence_fn = _per_boundary_fn(confidence_fn)
         self.quality = quality_model or QualityModel.from_cascade(self.spec)
 
-        self.workers: Dict[int, Worker] = {
-            i: Worker(wid=i) for i in range(serving.num_workers)}
+        self.workers: Dict[int, Worker] = {}
+        if serving.worker_classes:
+            wid = 0
+            for wc in serving.worker_classes:
+                for _ in range(wc.count):
+                    self.workers[wid] = Worker(wid=wid, speed=wc.speed,
+                                               wclass=wc.name)
+                    wid += 1
+        else:
+            self.workers = {i: Worker(wid=i)
+                            for i in range(serving.num_workers)}
         self.thresholds: Tuple[float, ...] = (0.8,) * self.spec.num_boundaries
         self.now = 0.0
         self._events: List[Tuple[float, int, int, object]] = []
@@ -167,7 +190,9 @@ class Simulator:
         self.result = SimResult(
             completed_per_tier=[0] * self.num_tiers,
             tier_processed=[0] * self.num_tiers,
-            deferred_per_boundary=[0] * self.spec.num_boundaries)
+            deferred_per_boundary=[0] * self.spec.num_boundaries,
+            workers_by_class={wc.name: wc.count
+                              for wc in serving.worker_classes})
         self._arrivals_window: deque = deque()
         self._recent_defer: deque = deque()
         self._window_done = 0
@@ -204,6 +229,12 @@ class Simulator:
 
         self._run_until(end_t)
         self._drain_unfinished()
+        if self.serving.worker_classes:
+            census = {wc.name: 0 for wc in self.serving.worker_classes}
+            for w in self.workers.values():
+                if w.alive and w.wid < self._active_S and w.wclass:
+                    census[w.wclass] = census.get(w.wclass, 0) + 1
+            self.result.workers_by_class = census
         return self.result
 
     def _run_until(self, end_t: float):
@@ -259,7 +290,10 @@ class Simulator:
                   if w.alive and w.wid < self._active_S and w.role == tier]
         if not ws:
             return False
-        w = min(ws, key=lambda w: len(w.queue) + len(w.in_flight))
+        # least expected drain time: a slow-class worker's queue takes
+        # proportionally longer to clear
+        w = min(ws, key=lambda w: (len(w.queue) + len(w.in_flight))
+                / max(w.speed, 1e-9))
         q.enqueued_at = self.now
         w.queue.append(q)
         self._maybe_start(w)
@@ -280,6 +314,7 @@ class Simulator:
         base = tier.profile.exec_latency(n)
         if w.role < self.num_tiers - 1:
             base += tier.disc_latency_s
+        base /= max(w.speed, 1e-9)        # hardware-class multiplier
         jit = float(self.rng.lognormal(0.0, self.sim.straggler_sigma))
         if self.rng.random() < self.sim.straggler_prob:
             jit *= float(self.rng.uniform(3.0, 8.0))
@@ -324,6 +359,10 @@ class Simulator:
         batch, w.in_flight = w.in_flight, []
         if not batch:
             return
+        if w.wclass:
+            self.result.class_batch_latencies.setdefault(
+                w.wclass, []).append((len(batch),
+                                      self.now - w.batch_started))
         # score against the tier the batch *started* as: a control-tick
         # role reassignment mid-flight must not shift the batch to another
         # boundary's profile/threshold (or skip a tier entirely)
@@ -387,11 +426,16 @@ class Simulator:
         for b in range(self.spec.num_boundaries):
             arrivals.append(arrivals[-1]
                             * self.profiles[b].f(self.thresholds[b]))
+        live = [w for w in self.workers.values()
+                if w.alive and w.wid < self._active_S]
+        by_class: Dict[str, int] = {}
+        for w in live:
+            if w.wclass:
+                by_class[w.wclass] = by_class.get(w.wclass, 0) + 1
         return Telemetry(demand_qps=qps, queues=queues,
                          arrivals=tuple(arrivals),
-                         live_workers=len([w for w in self.workers.values()
-                                           if w.alive
-                                           and w.wid < self._active_S]))
+                         live_workers=len(live),
+                         live_by_class=tuple(sorted(by_class.items())))
 
     def _apply_plan_now(self, first=False):
         if self.sim.fixed_plan is not None:
@@ -406,10 +450,32 @@ class Simulator:
         self.result.thresholds_timeline.append((self.now, self.thresholds))
         live = [w for w in self.workers.values()
                 if w.alive and w.wid < self._active_S]
-        want: List[Optional[int]] = [
-            i for i, n in enumerate(plan.workers) for _ in range(n)]
-        want += [None] * max(len(live) - len(want), 0)
-        # stable assignment: keep matching roles to avoid reload churn
+        class_workers = getattr(plan, "class_workers", None)
+        if class_workers is not None and self.serving.worker_classes:
+            # heterogeneous plan: each worker class gets its own per-tier
+            # role quota so slow hardware lands on the tiers the solver
+            # picked for it
+            for wc in self.serving.worker_classes:
+                live_c = [w for w in live if w.wclass == wc.name]
+                want_c: List[Optional[int]] = [
+                    i for i, alloc in enumerate(class_workers)
+                    for _ in range(alloc.get(wc.name, 0))]
+                self._assign_roles(live_c, want_c)
+        else:
+            want: List[Optional[int]] = [
+                i for i, n in enumerate(plan.workers) for _ in range(n)]
+            self._assign_roles(live, want)
+        for w in live:
+            if w.role is not None:
+                w.batch_size = plan.batches[w.role]
+            self._maybe_start(w)
+
+    def _assign_roles(self, live: List[Worker],
+                      want: List[Optional[int]]):
+        """Stable role assignment: keep matching roles to avoid reload
+        churn; reassigned workers pay the model-load delay and their
+        queued work is re-routed."""
+        want = list(want) + [None] * max(len(live) - len(want), 0)
         unassigned = []
         remaining = list(want)
         for w in live:
@@ -425,10 +491,6 @@ class Simulator:
                     w.queue.remove(q)
                     self._route(q, q.stage)
             w.role = role
-        for w in live:
-            if w.role is not None:
-                w.batch_size = plan.batches[w.role]
-            self._maybe_start(w)
 
     def _on_control(self):
         self._check_heartbeats()       # failure detection (heartbeat timeout)
@@ -463,7 +525,7 @@ class Simulator:
             if role is None:
                 continue
             prof = self.spec.tiers[role].profile
-            expect = prof.exec_latency(len(w.in_flight))
+            expect = prof.exec_latency(len(w.in_flight)) / max(w.speed, 1e-9)
             if (self.now - w.batch_started) > 2.5 * expect:
                 for q in w.in_flight:
                     if not q.hedged and q.done_at is None:

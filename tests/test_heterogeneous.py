@@ -1,0 +1,506 @@
+"""Heterogeneous N-tier allocation tests.
+
+Anchors ``solve_heterogeneous_cascade`` three ways:
+  * brute force — exhaustive over class assignments, per-tier batches and
+    the full empirical-CDF threshold grid on small N=3 instances;
+  * the legacy two-tier grid solver ``solve_heterogeneous`` at N=2
+    (property-tested);
+  * the homogeneous ``solve_cascade`` with a single unit-speed class
+    (property-tested, decision-for-decision).
+Plus per-tier SLO-budget guarantees and heterogeneous simulator runs
+(fault injection, per-class latency telemetry).
+"""
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.config.base import (CascadeSpec, LatencyProfile, ServingConfig,
+                               TierSpec, WorkerClass, as_cascade_spec,
+                               parse_worker_classes, tier_rho)
+from repro.core.confidence import DeferralProfile, as_boundary_profiles
+from repro.core.milp import (AllocationPlan, plan_tier_latencies,
+                             solve_cascade, solve_heterogeneous,
+                             solve_heterogeneous_cascade)
+from repro.serving.baselines import BASELINES, make_profiles, run_baseline
+from repro.serving.profiles import CASCADES, default_serving
+from repro.serving.simulator import SimConfig, Simulator
+from repro.serving.trace import static_trace
+from repro.testing.hypo import given, settings, st
+
+
+def tiny3(slo: float = 6.0, budgets=(None, None, None)) -> CascadeSpec:
+    """A small 3-tier cascade with controlled latencies."""
+    return CascadeSpec(
+        name="tiny3",
+        tiers=(TierSpec("t0", LatencyProfile(0.08, 0.02),
+                        disc_latency_s=0.01, slo_budget_s=budgets[0]),
+               TierSpec("t1", LatencyProfile(0.30, 0.08),
+                        disc_latency_s=0.01, slo_budget_s=budgets[1]),
+               TierSpec("t2", LatencyProfile(0.90, 0.35),
+                        disc_latency_s=0.0, slo_budget_s=budgets[2])),
+        slo_s=slo)
+
+
+def small_profiles(seed: int = 0, n: int = 12):
+    """Two boundary profiles with few unique scores, so brute force can
+    sweep the *entire* threshold space (every CDF step) exactly."""
+    rng = np.random.default_rng(seed)
+    return [DeferralProfile(rng.uniform(0.03, 0.97, size=n)),
+            DeferralProfile(rng.uniform(0.03, 0.97, size=n))]
+
+
+# ---------------------------------------------------------------------------
+# Brute force (independent reference implementation)
+# ---------------------------------------------------------------------------
+def _assignments(count: int, n_tiers: int):
+    """All ways to place `count` identical workers on n_tiers (idle ok)."""
+    return [a for a in itertools.product(range(count + 1), repeat=n_tiers)
+            if sum(a) <= count]
+
+
+def _budgets_for(spec, batches, qd_total=0.0):
+    """The per-tier budget rule, restated independently: explicit budgets
+    kept as pure per-tier caps (an all-budgeted cascade needs only the
+    reference-path check); otherwise budgeted tiers consume
+    max(budget, reference) from the slack shared by unbudgeted tiers."""
+    n = spec.num_tiers
+    discs = [spec.tiers[i].disc_latency_s if i < n - 1 else 0.0
+             for i in range(n)]
+    ell = [spec.tiers[i].profile.exec_latency(batches[i]) + discs[i]
+           for i in range(n)]
+    fixed = [spec.tiers[i].slo_budget_s for i in range(n)]
+    unset = [i for i in range(n) if fixed[i] is None]
+    if not unset:
+        return fixed if spec.slo_s - qd_total - sum(ell) >= -1e-12 else None
+    slack = spec.slo_s - qd_total - sum(max(fixed[i], ell[i])
+                                        for i in range(n)
+                                        if fixed[i] is not None)
+    if slack <= 0:
+        return None
+    scale = slack / sum(ell[i] for i in unset)
+    return [fixed[i] if fixed[i] is not None else ell[i] * scale
+            for i in range(n)]
+
+
+def brute_force_hetero(spec, serving, profiles, demand, classes):
+    """Exhaustive ground truth: every class assignment x[tier][class],
+    every batch tuple, every empirical-CDF threshold step. Returns
+    (per-boundary deferred fractions, total workers) of the lexicographic
+    optimum, or None when infeasible."""
+    names = sorted(classes)
+    counts = [classes[c][0] for c in names]
+    speeds = [classes[c][1] for c in names]
+    n = spec.num_tiers
+    lam_D = serving.overprovision * demand
+    rhos = [tier_rho(spec, serving, i) for i in range(n)]
+    discs = [spec.tiers[i].disc_latency_s if i < n - 1 else 0.0
+             for i in range(n)]
+    cands = [sorted(set(p._scores)) + [1.0] for p in profiles]
+    best = None
+    for batches in itertools.product(
+            *[spec.tier_batch_choices(i, serving.batch_choices)
+              for i in range(n)]):
+        budgets = _budgets_for(spec, batches)
+        if budgets is None:
+            continue
+        elig = [[(spec.tiers[i].profile.exec_latency(batches[i]) + discs[i])
+                 / speeds[c] <= budgets[i] + 1e-9
+                 for c in range(len(names))] for i in range(n)]
+        T = [spec.tiers[i].profile.throughput(batches[i]) for i in range(n)]
+        for assign in itertools.product(
+                *[_assignments(counts[c], n) for c in range(len(names))]):
+            # assign[c][i] workers of class c on tier i
+            if any(assign[c][i] > 0 and not elig[i][c]
+                   for c in range(len(names)) for i in range(n)):
+                continue
+            cap = [sum(assign[c][i] * speeds[c] * T[i]
+                       for c in range(len(names))) for i in range(n)]
+            if cap[0] < lam_D / rhos[0] - 1e-9:
+                continue
+            total = sum(sum(a) for a in assign)
+            lam = lam_D
+            fs = []
+            for b in range(n - 1):
+                f_best = 0.0
+                for t in cands[b]:
+                    f = profiles[b].f(t)
+                    if lam * f <= cap[b + 1] * rhos[b + 1] + 1e-9:
+                        f_best = max(f_best, f)
+                fs.append(f_best)
+                lam = lam * f_best
+            key = (tuple(fs), -total)
+            if best is None or key > best:
+                best = key
+    return None if best is None else (best[0], -best[1])
+
+
+HET_INSTANCES = [
+    # (demand, classes, budgets, slo)
+    (3.0, {"fast": (2, 1.0), "slow": (3, 0.5)}, (None, None, None), 6.0),
+    (6.0, {"fast": (3, 1.0), "slow": (2, 0.6)}, (None, None, None), 6.0),
+    (2.0, {"fast": (2, 1.0), "slow": (3, 0.5)}, (0.5, 1.2, 2.0), 6.0),
+    (4.0, {"fast": (2, 1.3), "slow": (2, 0.4)}, (None, 1.0, None), 4.0),
+]
+
+
+@pytest.mark.parametrize("demand,classes,budgets,slo", HET_INSTANCES)
+def test_solver_matches_brute_force_n3(demand, classes, budgets, slo):
+    spec = tiny3(slo=slo, budgets=budgets)
+    serving = ServingConfig(cascade=spec, num_workers=16,
+                            batch_choices=(1, 2))
+    profiles = small_profiles()
+    plan = solve_heterogeneous_cascade(spec, serving, profiles, demand,
+                                       classes=classes)
+    bf = brute_force_hetero(spec, serving, profiles, demand, classes)
+    if bf is None:
+        assert not plan.feasible
+        return
+    assert plan.feasible
+    fs = tuple(profiles[b].f(plan.thresholds[b]) for b in range(2))
+    assert fs == bf[0], (fs, bf, plan)
+    assert plan.total_workers == bf[1], (plan, bf)
+
+
+def test_brute_force_detects_infeasible():
+    spec = tiny3()
+    serving = ServingConfig(cascade=spec, num_workers=16,
+                            batch_choices=(1, 2))
+    profiles = small_profiles()
+    classes = {"slow": (1, 0.3)}
+    plan = solve_heterogeneous_cascade(spec, serving, profiles, 50.0,
+                                       classes=classes)
+    assert not plan.feasible
+    assert brute_force_hetero(spec, serving, profiles, 50.0, classes) is None
+    # the degraded fallback still points every class at tier 0
+    assert plan.class_workers[0] == {"slow": 1}
+    assert plan.thresholds == (0.0, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Property tests (repro.testing.hypo)
+# ---------------------------------------------------------------------------
+@given(st.floats(0.5, 25.0), st.integers(1, 8), st.integers(0, 8),
+       st.floats(0.25, 1.2), st.floats(0.25, 1.2),
+       st.lists(st.floats(0.05, 0.95), min_size=15, max_size=40))
+@settings(max_examples=20, deadline=None)
+def test_n2_hetero_matches_legacy(demand, c1, c2, s1, s2, scores):
+    """At N=2 with pinned batches and the legacy 41-point grid, the
+    N-tier heterogeneous solver reproduces `solve_heterogeneous`: same
+    threshold, same minimal worker total, same feasibility."""
+    spec = dataclasses.replace(CASCADES["sdturbo"], slo_s=100.0)
+    serving = ServingConfig(cascade=spec, num_workers=16,
+                            rho_light=1.0, rho_heavy=1.0)
+    profile = DeferralProfile(scores)
+    classes = {"a": (c1, s1)}
+    if c2:
+        classes["b"] = (c2, s2)
+    legacy = solve_heterogeneous(spec, serving, profile, demand, classes,
+                                 threshold_grid=41)
+    bmax = max(serving.batch_choices)
+    plan = solve_heterogeneous_cascade(
+        spec, serving, [profile], demand, classes=classes,
+        fixed_batches=(bmax, bmax), threshold_grid=41)
+    assert plan.feasible == legacy["feasible"]
+    if plan.feasible:
+        assert abs(plan.thresholds[0] - legacy["threshold"]) < 1e-12
+        assert plan.total_workers == (sum(legacy["x1"].values())
+                                      + sum(legacy["x2"].values()))
+
+
+@given(st.floats(0.5, 30.0), st.integers(2, 32),
+       st.lists(st.floats(0.05, 0.95), min_size=15, max_size=40),
+       st.floats(0.0, 20.0), st.floats(0.0, 20.0),
+       st.floats(0.0, 25.0), st.floats(0.0, 8.0))
+@settings(max_examples=15, deadline=None)
+def test_single_class_matches_homogeneous(demand, S, scores, q0, q1,
+                                          a0, a1):
+    """One unit-speed class == the homogeneous exact solver,
+    decision-for-decision (workers, batches, thresholds, latency)."""
+    serving = default_serving("sdturbo", num_workers=S,
+                              batch_choices=(1, 4, 16))
+    profile = DeferralProfile(scores)
+    kw = dict(queues=(q0, q1), arrivals=(a0, a1))
+    ref = solve_cascade(serving.cascade, serving, [profile], demand,
+                        num_workers=S, **kw)
+    plan = solve_heterogeneous_cascade(serving.cascade, serving, [profile],
+                                       demand, classes={"gpu": (S, 1.0)},
+                                       **kw)
+    assert plan.workers == ref.workers
+    assert plan.batches == ref.batches
+    assert plan.thresholds == ref.thresholds
+    assert plan.feasible == ref.feasible
+    assert abs(plan.expected_latency - ref.expected_latency) < 1e-12
+
+
+def test_single_class_matches_homogeneous_three_tier():
+    serving = default_serving("sdxs3", num_workers=24,
+                              batch_choices=(1, 4, 16))
+    profiles = as_boundary_profiles(small_profiles()[0], 2)
+    for demand in (2.0, 8.0, 16.0, 40.0):
+        ref = solve_cascade(serving.cascade, serving, profiles, demand,
+                            num_workers=24)
+        plan = solve_heterogeneous_cascade(serving.cascade, serving,
+                                           profiles, demand,
+                                           classes={"gpu": (24, 1.0)})
+        assert plan.workers == ref.workers, demand
+        assert plan.batches == ref.batches and \
+            plan.thresholds == ref.thresholds
+        assert plan.feasible == ref.feasible
+
+
+@given(st.floats(1.0, 12.0), st.floats(0.3, 1.0),
+       st.integers(1, 4), st.integers(1, 6),
+       st.lists(st.floats(0.05, 0.95), min_size=10, max_size=25))
+@settings(max_examples=15, deadline=None)
+def test_tier_budgets_never_exceeded(demand, slow_speed, c_fast, c_slow,
+                                     scores):
+    """Every tier a feasible plan assigns workers to runs within its SLO
+    budget on its slowest assigned class, and the worst-case path fits
+    the cascade SLO."""
+    budgets = (0.6, 1.8, 3.4)          # sums to 5.8 <= slo 6.0
+    spec = tiny3(slo=6.0, budgets=budgets)
+    serving = ServingConfig(cascade=spec, num_workers=16,
+                            batch_choices=(1, 2, 4))
+    profiles = as_boundary_profiles(DeferralProfile(scores), 2)
+    classes = {"fast": (c_fast, 1.0), "slow": (c_slow, slow_speed)}
+    plan = solve_heterogeneous_cascade(spec, serving, profiles, demand,
+                                       classes=classes)
+    if not plan.feasible:
+        return
+    lats = plan_tier_latencies(spec, plan, classes=classes)
+    for i, lat in enumerate(lats):
+        if lat is not None and plan.workers[i] > 0:
+            assert lat <= budgets[i] + 1e-9, (i, lat, budgets[i], plan)
+    assert sum(lat for lat in lats if lat is not None) \
+        <= spec.slo_s + 1e-9
+
+
+def test_single_class_budgeted_with_backlog_matches_homogeneous():
+    """Explicit budgets are per-tier caps, not SLO reservations: a
+    backlog (queuing delay) must not turn a budgeted cascade infeasible
+    where solve_cascade still finds a plan."""
+    spec = tiny3(slo=6.0, budgets=(1.0, 2.0, 3.0))   # budgets sum == SLO
+    serving = ServingConfig(cascade=spec, num_workers=16,
+                            batch_choices=(1, 2, 4))
+    profiles = as_boundary_profiles(small_profiles()[0], 2)
+    for queues in ((3.0, 1.0, 0.0), (0.0, 0.0, 0.0), (5.0, 2.0, 1.0)):
+        ref = solve_cascade(spec, serving, profiles, 4.0, num_workers=16,
+                            queues=queues, arrivals=(4.0, 2.0, 1.0))
+        plan = solve_heterogeneous_cascade(
+            spec, serving, profiles, 4.0, classes={"gpu": (16, 1.0)},
+            queues=queues, arrivals=(4.0, 2.0, 1.0))
+        assert plan.feasible == ref.feasible, queues
+        assert plan.workers == ref.workers, queues
+        assert plan.batches == ref.batches
+        assert plan.thresholds == ref.thresholds
+
+
+def test_budget_grant_cannot_blow_the_slo():
+    """A generous explicit budget on one tier must shrink the slack the
+    unbudgeted tiers share — otherwise a slow class eligible everywhere
+    could push the worst-case path past the cascade SLO."""
+    prof = LatencyProfile(0.1, 0.0)
+    spec = CascadeSpec(
+        name="grant3",
+        tiers=(TierSpec("t0", LatencyProfile(0.19, 0.0),
+                        disc_latency_s=0.01),
+               TierSpec("t1", prof, disc_latency_s=0.0, slo_budget_s=1.0),
+               TierSpec("t2", LatencyProfile(0.2, 0.0),
+                        disc_latency_s=0.0)),
+        slo_s=2.0)
+    serving = ServingConfig(cascade=spec, num_workers=16,
+                            batch_choices=(1,))
+    profiles = as_boundary_profiles(small_profiles()[0], 2)
+    plan = solve_heterogeneous_cascade(spec, serving, profiles, 1.0,
+                                       classes={"slow": (16, 0.22)})
+    if plan.feasible:
+        lats = plan_tier_latencies(spec, plan,
+                                   classes={"slow": (16, 0.22)})
+        assert sum(lat for lat in lats if lat is not None) \
+            <= spec.slo_s + 1e-9, (lats, plan)
+
+
+def test_budget_validation_in_cascade_spec():
+    with pytest.raises(ValueError, match="budget"):
+        tiny3(slo=3.0, budgets=(1.0, 1.0, 1.5))      # sums past the SLO
+    with pytest.raises(ValueError, match="budget"):
+        tiny3(budgets=(0.0, None, None))             # non-positive
+    spec = tiny3(slo=6.0, budgets=(1.0, 2.0, 3.0))   # exactly the SLO: ok
+    assert spec.tiers[0].slo_budget_s == 1.0
+
+
+def test_homogeneous_solver_respects_budgets():
+    """solve_cascade skips batch tuples whose per-tier latency blows an
+    explicit budget even when the end-to-end SLO would still hold."""
+    profiles = as_boundary_profiles(small_profiles()[0], 2)
+    free = tiny3(slo=6.0)
+    tight = tiny3(slo=6.0, budgets=(None, None, 1.0))   # t2: e(1)=0.9 only
+    sv = lambda spec: ServingConfig(cascade=spec, num_workers=12,
+                                    batch_choices=(1, 4))
+    loose_plan = solve_cascade(free, sv(free), profiles, 4.0)
+    tight_plan = solve_cascade(tight, sv(tight), profiles, 4.0)
+    assert loose_plan.feasible and tight_plan.feasible
+    assert tight_plan.batches[2] == 1       # e2(4) = 1.95 > budget 1.0
+    assert tiny3().tiers[2].profile.exec_latency(
+        tight_plan.batches[2]) <= 1.0
+
+
+def test_budget_eligibility_scales_discriminator_too():
+    """The simulator charges (exec + disc) / speed, so a slow class whose
+    exec alone fits a tier budget but exec+disc scaled does not must be
+    kept off that tier."""
+    prof = LatencyProfile(0.10, 0.0)
+    spec = CascadeSpec(
+        name="disc2",
+        tiers=(TierSpec("t0", prof, disc_latency_s=0.10, slo_budget_s=0.5),
+               TierSpec("t1", LatencyProfile(0.3, 0.0), disc_latency_s=0.0)),
+        slo_s=5.0)
+    serving = ServingConfig(cascade=spec, num_workers=8, batch_choices=(1,))
+    profiles = [small_profiles()[0]]
+    # speed 0.45: exec/0.45 = 0.222 <= 0.5, but (exec+disc)/0.45 = 0.444
+    # <= 0.5 still eligible; speed 0.35: (0.2)/0.35 = 0.571 > 0.5 -> not
+    plan = solve_heterogeneous_cascade(spec, serving, profiles, 2.0,
+                                       classes={"slow": (8, 0.35)})
+    assert not plan.feasible or plan.class_workers[0] == {}
+    plan = solve_heterogeneous_cascade(spec, serving, profiles, 2.0,
+                                       classes={"ok": (8, 0.45)})
+    assert plan.feasible
+    lat = plan_tier_latencies(spec, plan, classes={"ok": (8, 0.45)})
+    assert lat[0] == pytest.approx((0.10 + 0.10) / 0.45)
+
+
+def test_threshold_grid_validated():
+    serving = default_serving("sdturbo", num_workers=8)
+    profile = small_profiles()[0]
+    with pytest.raises(ValueError, match="threshold_grid"):
+        solve_heterogeneous_cascade(serving.cascade, serving, [profile],
+                                    4.0, classes={"a": (8, 1.0)},
+                                    threshold_grid=1)
+    with pytest.raises(ValueError, match="threshold_grid"):
+        solve_heterogeneous(serving.cascade, serving, profile, 4.0,
+                            classes={"a": (8, 1.0)}, threshold_grid=1)
+
+
+def test_controller_drops_fully_dead_class():
+    """A class absent from a populated live census is dead: the planner
+    must not assign tiers to it."""
+    from repro.core.allocator import ResourceManager
+    from repro.core.milp import Telemetry
+    wcs = (WorkerClass("fast", 2, 1.0), WorkerClass("slow", 6, 0.5))
+    serving = default_serving("sdturbo", worker_classes=wcs)
+    rm = ResourceManager(serving.cascade, serving,
+                         make_profiles(serving, 0))
+    tel = Telemetry(demand_qps=4.0, queues=(0.0, 0.0),
+                    arrivals=(4.0, 1.0), live_workers=6,
+                    live_by_class=(("slow", 6),))
+    assert rm._live_classes(tel) == {"slow": (6, 0.5)}
+    plan = rm.plan(tel)
+    for alloc in plan.class_workers:
+        assert "fast" not in alloc, plan
+    # empty census (first tick): the declared inventory stands
+    tel0 = Telemetry(demand_qps=1.0, live_workers=8)
+    assert rm._live_classes(tel0) == {"fast": (2, 1.0), "slow": (6, 0.5)}
+
+
+# ---------------------------------------------------------------------------
+# Legacy solver: explicit infeasibility flag
+# ---------------------------------------------------------------------------
+def test_legacy_heterogeneous_feasible_flag():
+    serving = default_serving("sdturbo", num_workers=16)
+    profile = small_profiles()[0]
+    ok = solve_heterogeneous(serving.cascade, serving, profile, 8.0,
+                             classes={"a100": (8, 1.0), "l40s": (8, 0.6)})
+    assert ok["feasible"] is True and ok["objective"] > 0
+    bad = solve_heterogeneous(serving.cascade, serving, profile, 1e5,
+                              classes={"t4": (1, 0.25)})
+    assert bad["feasible"] is False
+    assert bad["x1"] == {} and bad["x2"] == {}
+
+
+# ---------------------------------------------------------------------------
+# Config surface
+# ---------------------------------------------------------------------------
+def test_parse_worker_classes():
+    wcs = parse_worker_classes("a100:4:1.0,a10g:12:0.45")
+    assert wcs == (WorkerClass("a100", 4, 1.0), WorkerClass("a10g", 12, 0.45))
+    wcs = parse_worker_classes("x:3", speed_defaults={"x": 0.7})
+    assert wcs[0].speed == 0.7
+    with pytest.raises(ValueError):
+        parse_worker_classes("a100:4:1.0:extra")
+    with pytest.raises(ValueError):
+        parse_worker_classes("a100:4,a100:2")         # duplicate names
+    with pytest.raises(ValueError):
+        parse_worker_classes("a100:0:1.0")            # zero count
+    with pytest.raises(ValueError):
+        parse_worker_classes(":4:1.0")                # empty class name
+
+
+def test_serving_config_validates_class_counts():
+    wcs = (WorkerClass("a", 4), WorkerClass("b", 4))
+    serving = default_serving("sdturbo", worker_classes=wcs)
+    assert serving.num_workers == 8
+    assert serving.class_table() == {"a": (4, 1.0), "b": (4, 1.0)}
+    with pytest.raises(ValueError, match="num_workers"):
+        ServingConfig(cascade=CASCADES["sdturbo"], num_workers=16,
+                      worker_classes=wcs)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous simulator
+# ---------------------------------------------------------------------------
+def test_hetero_sim_fault_conservation():
+    """Worker failures on a mixed-speed cluster: every query is still
+    accounted for and the per-class worker census survives."""
+    wcs = (WorkerClass("fast", 8, 1.0), WorkerClass("slow", 8, 0.5))
+    serving = default_serving("sdturbo", worker_classes=wcs,
+                              batch_choices=(1, 4, 16))
+    profiles = make_profiles(serving, 0)
+    fails = ((25.0, 0, 20.0), (40.0, 9, 25.0), (55.0, 3, 15.0))
+    sim = Simulator(serving, profiles,
+                    SimConfig(seed=0, failure_times=fails))
+    r = sim.run(static_trace(8.0, 100))
+    assert r.completed + r.dropped == r.total
+    assert r.completed > 0.6 * r.total
+    assert r.workers_by_class == {"fast": 8, "slow": 8}
+    # both classes actually executed batches
+    assert set(r.class_batch_latencies) == {"fast", "slow"}
+
+
+def test_slow_class_batches_proportionally_slower():
+    """With jitter off and a pinned all-tier-0 plan, a speed-0.5 class
+    reports batch latencies 2x the reference profile."""
+    wcs = (WorkerClass("fast", 4, 1.0), WorkerClass("slow", 4, 0.5))
+    serving = default_serving("sdturbo", worker_classes=wcs)
+    spec = as_cascade_spec(serving.cascade)
+    plan = AllocationPlan(workers=(8, 0), batches=(4, 4), thresholds=(0.0,),
+                          expected_latency=1.0, feasible=True,
+                          class_workers=({"fast": 4, "slow": 4}, {}))
+    sim = Simulator(serving, make_profiles(serving, 0),
+                    SimConfig(seed=0, fixed_plan=plan, straggler_sigma=0.0,
+                              straggler_prob=0.0, hedging=False))
+    r = sim.run(static_trace(6.0, 80))
+    assert r.completed + r.dropped == r.total
+
+    def ref(n):
+        return spec.tiers[0].profile.exec_latency(n) \
+            + spec.tiers[0].disc_latency_s
+
+    norm = {cls: float(np.mean([d / ref(n) for n, d in v]))
+            for cls, v in r.class_batch_latencies.items()}
+    assert 0.99 < norm["fast"] < 1.01, norm
+    assert 1.9 < norm["slow"] / norm["fast"] < 2.1, norm
+
+
+def test_all_baselines_run_heterogeneous():
+    """Every Table-1 baseline allocates over the same class table."""
+    wcs = (WorkerClass("a100", 6, 1.0), WorkerClass("a10g", 10, 0.45))
+    serving = default_serving("sdturbo", worker_classes=wcs,
+                              batch_choices=(1, 4, 16))
+    trace = static_trace(5.0, 50)
+    for b in BASELINES:
+        r = run_baseline(b, trace, serving, seed=0)
+        assert r.completed + r.dropped == r.total, b
+        assert r.completed > 0, b
+        assert r.workers_by_class == {"a100": 6, "a10g": 10}, b

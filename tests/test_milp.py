@@ -147,6 +147,18 @@ def test_heterogeneous(profile):
     serving = default_serving("sdturbo", num_workers=16)
     out = solve_heterogeneous(serving.cascade, serving, profile, 8.0,
                               classes={"a100": (8, 1.0), "l40s": (8, 0.6)})
+    assert out["feasible"] is True
     assert out["objective"] > 0
     total = sum(out["x1"].values()) + sum(out["x2"].values())
     assert total <= 16
+
+
+def test_heterogeneous_infeasible_is_flagged(profile):
+    """An unservable demand must come back feasible=False — not as a
+    silently-empty zero-threshold plan."""
+    serving = default_serving("sdturbo", num_workers=16)
+    out = solve_heterogeneous(serving.cascade, serving, profile, 1e5,
+                              classes={"t4": (2, 0.25)})
+    assert out["feasible"] is False
+    assert out["x1"] == {} and out["x2"] == {}
+    assert out["threshold"] == 0.0
