@@ -24,8 +24,8 @@ from repro.core.cascade import DiffusionCascade
 from repro.models.unet import init_unet
 from repro.serving.baselines import make_profiles
 from repro.serving.cluster import ClusterRuntime
-from repro.serving.profiles import (CASCADES, default_serving,
-                                    worker_classes_from_arg)
+from repro.serving.profiles import (CASCADES, class_costs_from_arg,
+                                    default_serving, worker_classes_from_arg)
 from repro.serving.simulator import SimConfig, Simulator
 from repro.serving.trace import azure_like_trace
 
@@ -33,16 +33,23 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--cascade", default="sdturbo", choices=sorted(CASCADES))
 ap.add_argument("--workers", type=int, default=8)
 ap.add_argument("--worker-classes", default=None,
-                help="name:count[:speed],... e.g. a100:2:1.0,a10g:6:0.45 "
-                "(overrides --workers)")
+                help="name:count[:speed][@model=BASExMARG],... e.g. "
+                "a100:2:1.0,a10g:6:0.45 (overrides --workers)")
+ap.add_argument("--cost-per-class", default=None,
+                help="$/hour per class as name[=cost],... — switches the "
+                "allocator to the cost-weighted objective")
 ap.add_argument("--duration", type=int, default=90)
 ap.add_argument("--seed", type=int, default=1)
 args = ap.parse_args()
 
 wcs = (worker_classes_from_arg(args.worker_classes)
        if args.worker_classes else ())
+if args.cost_per_class and not wcs:
+    ap.error("--cost-per-class requires --worker-classes")
+costs = (class_costs_from_arg(args.cost_per_class)
+         if args.cost_per_class else ())
 serving = default_serving(args.cascade, num_workers=args.workers,
-                          worker_classes=wcs)
+                          worker_classes=wcs, class_costs=costs)
 spec = as_cascade_spec(serving.cascade)
 n_tiers = spec.num_tiers
 
@@ -103,4 +110,6 @@ if wcs:
                                           "speed": wc.speed} for wc in wcs}
     report["workers_by_class"] = r.workers_by_class
     report["class_mean_batch_latency_s"] = r.class_latency_summary()
+if costs and r.plan_cost_timeline:
+    report["mean_cost_per_hour"] = round(r.mean_plan_cost_per_hour, 3)
 print(json.dumps(report, indent=1))

@@ -337,6 +337,28 @@ def tier_rho(spec: CascadeSpec, serving: "ServingConfig", i: int) -> float:
 
 
 @dataclass(frozen=True)
+class LatencyScale:
+    """Per-class latency scaling against the reference hardware the model
+    profiles were measured on: batch-1 latency multiplies by ``base``,
+    the per-extra-query marginal cost by ``marginal``. Real GPUs scale
+    the two differently (an a10g runs SDXL batch-1 at ~2.2x an A100 but
+    its marginal per-image cost at ~2.6x), which a single throughput
+    multiplier cannot express.
+    """
+    base: float
+    marginal: float
+
+    def __post_init__(self):
+        if self.base <= 0 or self.marginal <= 0:
+            raise ValueError(f"latency scales must be > 0, got "
+                             f"({self.base}, {self.marginal})")
+
+    def apply(self, profile: LatencyProfile) -> LatencyProfile:
+        return LatencyProfile(base_s=profile.base_s * self.base,
+                              marginal_s=profile.marginal_s * self.marginal)
+
+
+@dataclass(frozen=True)
 class WorkerClass:
     """A homogeneous group of workers in a heterogeneous cluster.
 
@@ -344,10 +366,17 @@ class WorkerClass:
     hardware the latency profiles were measured on: a worker of speed
     ``s`` runs every tier's batch in ``e(b) / s`` seconds and therefore
     contributes ``s * T(b)`` throughput (paper §5: mixed GPU classes).
+
+    ``profiles`` optionally refines that single multiplier into
+    per-model ``LatencyScale`` overrides (``(model_name, scale)`` pairs;
+    ``"*"`` matches every model). A model without an override falls back
+    to the uniform ``(1/speed, 1/speed)`` scaling, so plain
+    ``name:count:speed`` classes behave exactly as before.
     """
     name: str
     count: int
     speed: float = 1.0
+    profiles: Tuple[Tuple[str, LatencyScale], ...] = ()
 
     def __post_init__(self):
         if not self.name:
@@ -359,35 +388,153 @@ class WorkerClass:
         if self.speed <= 0:
             raise ValueError(f"worker class {self.name!r}: speed must "
                              f"be > 0, got {self.speed}")
+        models = [m for m, _ in self.profiles]
+        if len(set(models)) != len(models):
+            raise ValueError(f"worker class {self.name!r}: duplicate "
+                             f"model overrides in {models}")
+
+    def scale_for(self, model: str) -> LatencyScale:
+        """Latency scale for ``model``: exact override > ``"*"`` wildcard
+        > uniform ``1/speed``."""
+        wild = None
+        for m, sc in self.profiles:
+            if m == model:
+                return sc
+            if m == "*":
+                wild = sc
+        if wild is not None:
+            return wild
+        inv = 1.0 / self.speed
+        return LatencyScale(inv, inv)
+
+    def tier_profile(self, tier: "TierSpec") -> LatencyProfile:
+        """The tier's latency profile as executed on this class."""
+        return self.scale_for(tier.model).apply(tier.profile)
+
+    def tier_latency(self, tier: "TierSpec", batch: int,
+                     with_disc: bool = True) -> float:
+        """Class-scaled execution latency for a batch, optionally plus
+        the discriminator (a fixed-cost model run, scaled like batch-1
+        work)."""
+        lat = self.tier_profile(tier).exec_latency(batch)
+        if with_disc:
+            lat += tier.disc_latency_s * self.scale_for(tier.model).base
+        return lat
+
+    def tier_throughput(self, tier: "TierSpec", batch: int) -> float:
+        return batch / self.tier_latency(tier, batch, with_disc=False)
+
+
+def as_worker_class(name: str, value) -> WorkerClass:
+    """Normalize a class-table entry: a ``WorkerClass``, a ``(count,
+    speed)`` pair, or a ``(count, speed, profiles)`` triple."""
+    if isinstance(value, WorkerClass):
+        return value
+    count, speed = value[0], value[1]
+    profiles = tuple(value[2]) if len(value) > 2 else ()
+    return WorkerClass(name=name, count=int(count), speed=float(speed),
+                       profiles=profiles)
+
+
+def _parse_scale(value: str, entry: str) -> LatencyScale:
+    """``BASExMARGINAL`` (e.g. ``2.2x2.6``) or a single multiplier."""
+    bits = value.split("x")
+    try:
+        nums = [float(b) for b in bits]
+    except ValueError:
+        nums = None
+    if nums is None or len(nums) not in (1, 2):
+        raise ValueError(f"bad latency scale {value!r} in {entry!r}; "
+                         f"expected BASExMARGINAL, e.g. 2.2x2.6")
+    # range errors (<= 0) propagate from LatencyScale as such — a
+    # well-formed value must not be reported as a syntax problem
+    return LatencyScale(nums[0], nums[-1])
 
 
 def parse_worker_classes(text: str,
-                         speed_defaults: Optional[Mapping[str, float]] = None
+                         speed_defaults: Optional[Mapping[str, float]] = None,
+                         profile_defaults: Optional[
+                             Mapping[str, Tuple[float, float]]] = None,
                          ) -> Tuple[WorkerClass, ...]:
-    """Parse a ``--worker-classes`` CLI value: ``name:count[:speed],...``
-    e.g. ``a100:4:1.0,a10g:12:0.45``. Omitted speeds resolve through
-    ``speed_defaults`` (else 1.0)."""
+    """Parse a ``--worker-classes`` CLI value:
+    ``name:count[:speed][@model=BASExMARG]...,...``
+    e.g. ``a100:4:1.0,a10g:12:0.45`` or
+    ``a10g:12@*=2.2x2.6@sdxl=2.2x3.1``. Each ``@model=`` term pins a
+    per-model ``LatencyScale`` (``*`` matches every model). Omitted
+    speeds resolve through ``speed_defaults`` (else 1.0); when the speed
+    is omitted and no explicit ``*`` override is given,
+    ``profile_defaults`` (name -> ``(base, marginal)`` latency
+    multipliers) supplies the wildcard scale — also as the fallback
+    behind explicit per-model pins — and the speed becomes ``1/base``."""
     out = []
     for part in text.split(","):
         part = part.strip()
         if not part:
             continue
-        bits = part.split(":")
+        head, *over = part.split("@")
+        profiles = []
+        for term in over:
+            if "=" not in term:
+                raise ValueError(f"bad model override {term!r} in {part!r}; "
+                                 f"expected model=BASExMARGINAL")
+            model, _, value = term.partition("=")
+            profiles.append((model, _parse_scale(value, part)))
+        bits = head.split(":")
         if len(bits) == 2:
             name, count = bits
             speed = (speed_defaults or {}).get(name, 1.0)
+            default = (profile_defaults or {}).get(name)
+            # speed omitted: the class table's (base, marginal) wildcard
+            # applies — also alongside explicit per-model pins, so
+            # `a10g:12@sdxl=...` keeps the table scaling for every other
+            # model rather than silently degrading them to 1/speed
+            if default is not None \
+                    and not any(m == "*" for m, _ in profiles):
+                profiles.append(("*", LatencyScale(*default)))
+                speed = 1.0 / default[0]
         elif len(bits) == 3:
             name, count, speed = bits
         else:
             raise ValueError(f"bad worker-class entry {part!r}; expected "
-                             f"name:count[:speed]")
+                             f"name:count[:speed][@model=BASExMARG]")
         out.append(WorkerClass(name=name, count=int(count),
-                               speed=float(speed)))
+                               speed=float(speed),
+                               profiles=tuple(profiles)))
     if not out:
         raise ValueError(f"no worker classes in {text!r}")
     names = [wc.name for wc in out]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate worker-class names in {text!r}")
+    return tuple(out)
+
+
+def parse_class_costs(text: str,
+                      cost_defaults: Optional[Mapping[str, float]] = None
+                      ) -> Tuple[Tuple[str, float], ...]:
+    """Parse a ``--cost-per-class`` CLI value: ``name[=dollars_per_hour]``
+    entries, comma-separated (e.g. ``a100=4.10,a10g=1.21``). Omitted
+    costs resolve through ``cost_defaults``."""
+    out = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, sep, value = part.partition("=")
+        if sep:
+            cost = float(value)
+        elif cost_defaults and name in cost_defaults:
+            cost = float(cost_defaults[name])
+        else:
+            raise ValueError(f"no cost for class {name!r} in {text!r} and "
+                             f"no default available")
+        if cost <= 0:
+            raise ValueError(f"class {name!r}: cost must be > 0, got {cost}")
+        out.append((name, cost))
+    if not out:
+        raise ValueError(f"no class costs in {text!r}")
+    names = [n for n, _ in out]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate class names in {text!r}")
     return tuple(out)
 
 
@@ -407,8 +554,13 @@ class ServingConfig:
     rho_light: float = 0.90           # utilization cap (queue stability)
     rho_heavy: float = 0.85
     worker_classes: Tuple[WorkerClass, ...] = ()   # () => homogeneous
+    # optional $/hour per worker class: when set, the heterogeneous
+    # solver breaks threshold ties by dollar cost instead of worker count
+    class_costs: Tuple[Tuple[str, float], ...] = ()
 
     def __post_init__(self):
+        if self.class_costs and not self.worker_classes:
+            raise ValueError("class_costs requires worker_classes")
         if not self.worker_classes:
             return
         names = [wc.name for wc in self.worker_classes]
@@ -419,13 +571,36 @@ class ServingConfig:
             raise ValueError(
                 f"worker_classes counts sum to {total} but "
                 f"num_workers={self.num_workers}")
+        unknown = [n for n, _ in self.class_costs if n not in names]
+        if unknown:
+            raise ValueError(f"class_costs names {unknown} not in "
+                             f"worker_classes {names}")
+        if self.class_costs:
+            priced = {n for n, _ in self.class_costs}
+            missing = [n for n in names if n not in priced]
+            if missing:
+                # an unpriced class would be free to the cost-minimizing
+                # objective; demand a price for every class up front
+                raise ValueError(f"class_costs missing prices for "
+                                 f"classes {missing}")
 
     def class_table(self) -> "dict[str, Tuple[int, float]]":
-        """``{name: (count, speed)}`` for the solvers; a single unit-speed
-        'default' class when the cluster is homogeneous."""
+        """``{name: (count, speed)}`` (legacy scalar form); a single
+        unit-speed 'default' class when the cluster is homogeneous."""
         if not self.worker_classes:
             return {"default": (self.num_workers, 1.0)}
         return {wc.name: (wc.count, wc.speed) for wc in self.worker_classes}
+
+    def class_map(self) -> "dict[str, WorkerClass]":
+        """``{name: WorkerClass}`` with full latency profiles; a single
+        unit-speed 'default' class when the cluster is homogeneous, empty
+        when there are no workers at all (a phantom worker here would let
+        the solver return 'feasible' plans nothing can run)."""
+        if not self.worker_classes:
+            if self.num_workers <= 0:
+                return {}
+            return {"default": WorkerClass("default", self.num_workers, 1.0)}
+        return {wc.name: wc for wc in self.worker_classes}
 
 
 def replace(cfg, **kw):

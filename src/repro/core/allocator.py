@@ -107,16 +107,17 @@ class ResourceManager:
         return plan
 
     def _live_classes(self, telemetry: Telemetry) -> dict:
-        """Worker-class table shrunk to the classes' live counts (failure
-        detection / elastic scaling reduce a class's inventory). When the
-        census is populated, a class absent from it is fully dead and
-        must not be planned over; an empty census (first tick) means no
-        failures observed yet."""
+        """Worker-class table (``{name: WorkerClass}``, latency profiles
+        intact) shrunk to the classes' live counts (failure detection /
+        elastic scaling reduce a class's inventory). When the census is
+        populated, a class absent from it is fully dead and must not be
+        planned over; an empty census (first tick) means no failures
+        observed yet."""
         live = dict(telemetry.live_by_class)
         table = {}
         for wc in self.serving.worker_classes:
             count = live.get(wc.name, 0) if telemetry.live_by_class \
                 else wc.count
             if count > 0:
-                table[wc.name] = (count, wc.speed)
-        return table or self.serving.class_table()
+                table[wc.name] = dataclasses.replace(wc, count=count)
+        return table or self.serving.class_map()

@@ -114,7 +114,13 @@ def _solve_lp(c, A, b, lower, upper, tol=1e-9, max_iter=2000):
     return "infeasible", None, math.inf
 
 
-def solve_milp(p: MILP, max_nodes: int = 10_000) -> Solution:
+def solve_milp(p: MILP, max_nodes: int = 10_000,
+               incumbent: Optional[np.ndarray] = None) -> Solution:
+    """``incumbent``: optional known-feasible point (integer-rounded and
+    bound-checked here) whose objective seeds the branch-and-bound upper
+    bound, so pruning starts at the root instead of after the first
+    integral leaf — decisive for objectives whose LP relaxation is very
+    fractional (e.g. non-uniform cost weights)."""
     n = len(p.c)
     lower0 = np.zeros(n) if p.lower is None else np.asarray(p.lower, float)
     upper0 = (np.full(n, np.inf) if p.upper is None
@@ -122,17 +128,39 @@ def solve_milp(p: MILP, max_nodes: int = 10_000) -> Solution:
     int_set = list(p.integer)
 
     best = Solution("infeasible")
+    if incumbent is not None:
+        xi = np.asarray(incumbent, float).copy()
+        for i in int_set:
+            xi[i] = round(xi[i])
+        if ((p.A_ub @ xi <= p.b_ub + 1e-6).all()
+                and (xi >= lower0 - 1e-9).all()
+                and (xi <= upper0 + 1e-9).all()):
+            best = Solution("optimal", xi, float(p.c @ xi))
+
+    # objective-lattice pruning: when every variable is integer and every
+    # objective coefficient is (numerically) an integer, all attainable
+    # objectives sit on the integer lattice — a node can only beat the
+    # incumbent by >= 1, so prune anything within 1-eps of it. This never
+    # changes the returned optimum (pruned subtrees hold no strictly
+    # better point), it only skips proving ties node by node.
+    prune_eps = 1e-9
+    if (len(int_set) == n and n
+            and np.all(np.abs(p.c - np.round(p.c)) < 1e-9)):
+        prune_eps = 1.0 - 1e-6
     heap = []
     counter = itertools.count()
     status, x, obj = _solve_lp(p.c, p.A_ub, p.b_ub, lower0, upper0)
     if status != "optimal":
-        return Solution(status)
+        # the incumbent was bound- and constraint-checked above, so the
+        # problem is feasible: the root LP died on the iteration limit —
+        # return the known-feasible point instead of claiming infeasible
+        return best if best.status == "optimal" else Solution(status)
     heapq.heappush(heap, (obj, next(counter), lower0, upper0, x))
 
     nodes = 0
     while heap and nodes < max_nodes:
         bound, _, lo, hi, x = heapq.heappop(heap)
-        if bound >= best.objective - 1e-9:
+        if bound >= best.objective - prune_eps:
             continue
         nodes += 1
         frac_i = None
@@ -155,7 +183,7 @@ def solve_milp(p: MILP, max_nodes: int = 10_000) -> Solution:
             if lo2[frac_i] > hi2[frac_i]:
                 continue
             status, x2, obj2 = _solve_lp(p.c, p.A_ub, p.b_ub, lo2, hi2)
-            if status == "optimal" and obj2 < best.objective - 1e-9:
+            if status == "optimal" and obj2 < best.objective - prune_eps:
                 heapq.heappush(heap, (obj2, next(counter), lo2, hi2, x2))
     return best
 

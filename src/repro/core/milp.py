@@ -30,7 +30,8 @@ import time
 from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 from repro.config.base import (CascadeConfig, CascadeSpec, ServingConfig,
-                               as_cascade_spec, tier_rho)
+                               WorkerClass, as_cascade_spec, as_worker_class,
+                               tier_rho)
 from repro.core.confidence import DeferralProfile
 
 
@@ -52,6 +53,15 @@ class AllocationPlan:
     solve_ms: float = 0.0
     objective: float = -1.0
     class_workers: Optional[Tuple[Mapping[str, int], ...]] = None
+    # $/hour of the chosen assignment (only when the solver was given
+    # per-class costs); the cost-weighted objective's tie-break value
+    cost: Optional[float] = None
+
+    def cost_per_query(self, demand_qps: float) -> Optional[float]:
+        """$/query at the given demand (cost rate / arrival rate)."""
+        if self.cost is None or demand_qps <= 0:
+            return None
+        return self.cost / 3600.0 / demand_qps
 
     @property
     def num_tiers(self) -> int:
@@ -429,16 +439,18 @@ def solve_heterogeneous(
 # N-tier heterogeneous allocation (paper §5 generalized)
 # ---------------------------------------------------------------------------
 def _normalize_classes(serving: ServingConfig,
-                       classes) -> "Dict[str, Tuple[int, float]]":
-    """Resolve the worker-class table: explicit arg > ServingConfig >
-    single unit-speed class. Mapping form is sorted by name for
-    determinism; WorkerClass tuples keep their declared order."""
+                       classes) -> "Dict[str, WorkerClass]":
+    """Resolve the worker-class table to ``{name: WorkerClass}`` (full
+    per-class latency profiles): explicit arg > ServingConfig > single
+    unit-speed class. Mapping values may be ``WorkerClass``es, ``(count,
+    speed)`` pairs, or ``(count, speed, profiles)`` triples; mapping form
+    is sorted by name for determinism, WorkerClass tuples keep their
+    declared order."""
     if classes is None:
-        return serving.class_table()
+        return serving.class_map()
     if isinstance(classes, Mapping):
-        return {c: (int(classes[c][0]), float(classes[c][1]))
-                for c in sorted(classes)}
-    return {wc.name: (wc.count, wc.speed) for wc in classes}
+        return {c: as_worker_class(c, classes[c]) for c in sorted(classes)}
+    return {wc.name: wc for wc in classes}
 
 
 def _tier_budgets(spec: CascadeSpec, profs, discs, batches,
@@ -476,15 +488,17 @@ def _tier_budgets(spec: CascadeSpec, profs, discs, batches,
 
 
 def _solve_assignment(coefs, reqs, counts, elig, *, maximize_tier=None,
-                      pinned=None):
+                      pinned=None, weights=None):
     """Class-assignment ILP over x[tier][class] (core/bnb.py).
 
     ``coefs[i][c]``: capacity one class-c worker contributes to tier i;
     ``reqs[i]``: required capacity (rows emitted only when > 0);
     ``elig[i]``: eligible class indices (others pinned to 0);
     ``pinned``: {tier: per-class counts} rows frozen to exact values
-    (drain-dominated tiers that soak up all spare capacity).
-    Minimizes total workers, or maximizes tier ``maximize_tier``'s
+    (drain-dominated tiers that soak up all spare capacity);
+    ``weights``: per-class objective weights for the minimize direction
+    ($/hour — the cost-weighted objective), default 1 per worker.
+    Minimizes total weight, or maximizes tier ``maximize_tier``'s
     capacity. Returns the integer x matrix, or None when infeasible.
     """
     from repro.core.bnb import MILP, solve_milp
@@ -520,14 +534,36 @@ def _solve_assignment(coefs, reqs, counts, elig, *, maximize_tier=None,
             lower[i * nc + c] = row[c]
     if maximize_tier is None:
         c_obj = np.ones(nv)
+        if weights is not None:
+            # put $/hour weights on an integer lattice when a power-of-ten
+            # scale makes them exact (4.10 -> 410 cents): the argmin is
+            # unchanged and bnb's objective-lattice pruning kicks in
+            ws = list(weights)
+            for scale in (1.0, 10.0, 100.0, 1e4, 1e6):
+                scaled_w = [w * scale for w in weights]
+                if all(abs(v - round(v)) < 1e-9 * max(scale, 1.0)
+                       for v in scaled_w):
+                    ws = [float(round(v)) for v in scaled_w]
+                    break
+            for i in range(nt):
+                for c in range(nc):
+                    c_obj[i * nc + c] = ws[c]
     else:
         c_obj = np.zeros(nv)
         for c in range(nc):
             c_obj[maximize_tier * nc + c] = -coefs[maximize_tier][c]
-    sol = solve_milp(MILP(c=np.asarray(c_obj), A_ub=np.asarray(A, float),
-                          b_ub=np.asarray(rhs, float),
-                          integer=list(range(nv)), upper=upper,
-                          lower=lower))
+    prob = MILP(c=np.asarray(c_obj), A_ub=np.asarray(A, float),
+                b_ub=np.asarray(rhs, float),
+                integer=list(range(nv)), upper=upper, lower=lower)
+    seed = None
+    if maximize_tier is None and weights is not None:
+        # the $-weighted relaxation is highly fractional and branches
+        # deep; a fast min-worker solve (near-integral relaxation) gives
+        # a feasible incumbent so the weighted search prunes from node 1
+        warm = solve_milp(dataclasses.replace(prob, c=np.ones(nv)))
+        if warm.status == "optimal":
+            seed = warm.x
+    sol = solve_milp(prob, incumbent=seed)
     if sol.status != "optimal":
         return None
     return [[int(round(sol.x[i * nc + c])) for c in range(nc)]
@@ -547,10 +583,11 @@ def solve_heterogeneous_cascade(
     fixed_thresholds: Optional[Sequence[float]] = None,
     fixed_batches: Optional[Sequence[int]] = None,
     threshold_grid: Optional[int] = None,
+    class_costs: Optional[Mapping[str, float]] = None,
 ) -> AllocationPlan:
     """Exact N-tier heterogeneous solver (paper §5 generalized from the
     hardwired light/heavy pair): an ILP over ``x[tier][class]`` with
-    per-class speed multipliers, per-tier batch search, and per-tier SLO
+    per-class latency profiles, per-tier batch search, and per-tier SLO
     budgets.
 
     For each batch tuple, boundaries close tier-by-tier exactly as in
@@ -563,10 +600,20 @@ def solve_heterogeneous_cascade(
     pinned batches and ``threshold_grid`` it reproduces the legacy
     ``solve_heterogeneous`` grid solver (property-tested).
 
-    ``classes``: ``{name: (count, speed)}`` or WorkerClass tuple; default
-    is ``serving.worker_classes`` (or one unit-speed class). A class of
-    speed ``s`` runs every tier in ``e(b)/s`` and is eligible for a tier
-    only if that fits the tier's SLO budget.
+    ``classes``: ``{name: WorkerClass | (count, speed[, profiles])}`` or
+    WorkerClass tuple; default is ``serving.worker_classes`` (or one
+    unit-speed class). Each class's per-model ``LatencyScale`` overrides
+    give it its own ``(base, marginal)`` latency curve per tier — batch-1
+    and marginal cost scale independently, so the optimal batch size now
+    interacts with the class mix — with plain ``speed`` classes falling
+    back to the uniform ``e(b)/speed`` scaling. A class is eligible for
+    a tier only if its scaled (exec + discriminator) latency fits the
+    tier's SLO budget.
+
+    ``class_costs``: optional ``{name: $/hour}``. When present (or set on
+    ``serving.class_costs``), threshold ties break by dollar cost instead
+    of worker count and the final assignment ILP minimizes $/hour; the
+    returned plan carries ``cost`` (and ``cost_per_query(demand)``).
     """
     t0 = time.perf_counter()
     spec = as_cascade_spec(cascade)
@@ -578,9 +625,27 @@ def solve_heterogeneous_cascade(
                          f"profiles, got {len(profiles)}")
     table = _normalize_classes(serving, classes)
     names = list(table)
-    counts = [table[c][0] for c in names]
-    speeds = [table[c][1] for c in names]
+    wcs = [table[c] for c in names]
+    counts = [wc.count for wc in wcs]
     S = sum(counts)
+    if class_costs is None and serving.class_costs:
+        # the caller may pass a live (failure-shrunken) class table; a
+        # class that died out of it entirely has no workers to price, so
+        # drop its entry instead of raising mid-run
+        class_costs = {c: v for c, v in serving.class_costs if c in table}
+    costs = None
+    if class_costs:
+        unknown = [c for c in class_costs if c not in table]
+        if unknown:
+            raise ValueError(f"class_costs names {unknown} not in class "
+                             f"table {names}")
+        missing = [c for c in names if c not in class_costs]
+        if missing:
+            # a $0 default would make the class free to the minimizing
+            # objective and silently under-report plan.cost
+            raise ValueError(f"class_costs missing prices for {missing}; "
+                             f"every class in the table must be priced")
+        costs = [float(class_costs[c]) for c in names]
     lam_D = serving.overprovision * max(demand_qps, 1e-9)
     queues = _pad(queues, n)
     arrivals = _pad(arrivals, n)
@@ -610,6 +675,14 @@ def solve_heterogeneous_cascade(
             *[spec.tier_batch_choices(i, serving.batch_choices)
               for i in range(n)])
 
+    # per-(tier, class) latency curves: each class runs tier i's model
+    # under its own (base, marginal) scaling; uniform 1/speed without
+    # explicit overrides
+    scaled = [[wc.tier_profile(spec.tiers[i]) for wc in wcs]
+              for i in range(n)]
+    disc_scale = [[wc.scale_for(spec.tiers[i].model).base for wc in wcs]
+                  for i in range(n)]
+
     best: Optional[AllocationPlan] = None
     for batches in batch_tuples:
         if queuing_model == "littles_law":
@@ -623,20 +696,22 @@ def solve_heterogeneous_cascade(
         budgets = _tier_budgets(spec, profs, discs, batches, sum(qd))
         if budgets is None:
             continue
-        # the discriminator runs on the worker too, so the whole tier
-        # latency scales with class speed (matches Simulator._exec_latency)
+        # the discriminator runs on the worker too (a fixed-cost model
+        # run, so it scales with the class's batch-1 base scale; matches
+        # Simulator._profiled_latency)
         elig = [[c for c in range(len(names))
-                 if (profs[i].exec_latency(batches[i]) + discs[i])
-                 / speeds[c] <= budgets[i] + 1e-9]
+                 if scaled[i][c].exec_latency(batches[i])
+                 + discs[i] * disc_scale[i][c] <= budgets[i] + 1e-9]
                 for i in range(n)]
         if not elig[0]:
             continue
         # capacity coefficients: tier 0 is constrained in raw-throughput
         # units (lam/rho + drain, matching solve_cascade); deferred tiers
         # in rho-derated units
-        coefs = [[profs[0].throughput(batches[0]) * s for s in speeds]]
-        coefs += [[profs[j].throughput(batches[j]) * rhos[j] * s
-                   for s in speeds] for j in range(1, n)]
+        coefs = [[scaled[0][c].throughput(batches[0])
+                  for c in range(len(names))]]
+        coefs += [[scaled[j][c].throughput(batches[j]) * rhos[j]
+                   for c in range(len(names))] for j in range(1, n)]
         reqs = [lam_D / rhos[0] + drains[0]]
         thresholds = []
         pinned: Dict[int, list] = {}
@@ -682,7 +757,15 @@ def solve_heterogeneous_cascade(
             lam = lam * profiles[b].f(t)
         if not ok:
             continue
-        x = _solve_assignment(coefs, reqs, counts, elig, pinned=pinned)
+        # thresholds are fixed by the tier-by-tier closing above, before
+        # the final assignment ILP runs — so a tuple that already loses
+        # the lexicographic threshold comparison can never become the
+        # plan, and skipping its (expensive, $-weighted) assignment solve
+        # changes nothing
+        if best is not None and tuple(thresholds) < best.thresholds:
+            continue
+        x = _solve_assignment(coefs, reqs, counts, elig, pinned=pinned,
+                              weights=costs)
         if x is None:                   # fixed thresholds may not fit
             continue
         workers = tuple(sum(row) for row in x)
@@ -693,11 +776,21 @@ def solve_heterogeneous_cascade(
                               thresholds=tuple(thresholds),
                               expected_latency=latency, feasible=True,
                               objective=thresholds[0],
-                              class_workers=class_workers)
-        if (best is None or cand.thresholds > best.thresholds
-                or (cand.thresholds == best.thresholds
-                    and cand.total_workers < best.total_workers)):
+                              class_workers=class_workers,
+                              cost=sum(x[i][c] * costs[c]
+                                       for i in range(n)
+                                       for c in range(len(names)))
+                              if costs is not None else None)
+        # lexicographic thresholds first (quality); ties break by dollar
+        # cost when costs are given, else by worker count
+        if best is None or cand.thresholds > best.thresholds:
             best = cand
+        elif cand.thresholds == best.thresholds:
+            if costs is not None and cand.cost != best.cost:
+                if cand.cost < best.cost:
+                    best = cand
+            elif cand.total_workers < best.total_workers:
+                best = cand
 
     ms = (time.perf_counter() - t0) * 1e3
     if best is None:
@@ -711,20 +804,29 @@ def solve_heterogeneous_cascade(
         workers = (x0, max(S - x0, 0)) + (0,) * (n - 2)
         class_workers = [dict() for _ in range(n)]
         left = x0
-        for c in sorted(names, key=lambda c: -table[c][1]):
-            take = min(table[c][0], left)   # fastest classes on tier 0 first
+        # fastest classes (by scaled tier-0 batch latency) on tier 0 first
+        order = sorted(names, key=lambda c: table[c].tier_profile(
+            spec.tiers[0]).exec_latency(batches[0]))
+        for c in order:
+            take = min(table[c].count, left)
             if take:
                 class_workers[0][c] = take
-            spill = table[c][0] - take
+            spill = table[c].count - take
             if spill and n > 1:
                 class_workers[1][c] = class_workers[1].get(c, 0) + spill
             left -= take
+        fb_cost = None
+        if costs is not None:
+            fb_cost = sum(alloc.get(names[c], 0) * costs[c]
+                          for alloc in class_workers
+                          for c in range(len(names)))
         return AllocationPlan(workers=workers, batches=batches,
                               thresholds=(0.0,) * spec.num_boundaries,
                               expected_latency=profs[0].exec_latency(
                                   batches[0]),
                               feasible=False, solve_ms=ms, objective=0.0,
-                              class_workers=tuple(class_workers))
+                              class_workers=tuple(class_workers),
+                              cost=fb_cost)
     return dataclasses.replace(best, solve_ms=ms)
 
 
@@ -734,9 +836,10 @@ def plan_tier_latencies(cascade: "CascadeSpec | CascadeConfig",
                         serving: Optional[ServingConfig] = None
                         ) -> "list[Optional[float]]":
     """Worst-case execution latency (exec + discriminator) per tier under
-    ``plan``: the slowest worker class actually assigned to each tier.
-    ``None`` for tiers with no workers. Unit speeds when the plan carries
-    no class split."""
+    ``plan``: the slowest worker class actually assigned to each tier,
+    evaluated through that class's per-model latency scales. ``None`` for
+    tiers with no workers. Unit speeds when the plan carries no class
+    split."""
     spec = as_cascade_spec(cascade)
     table = None
     if classes is not None or (serving is not None
@@ -749,12 +852,15 @@ def plan_tier_latencies(cascade: "CascadeSpec | CascadeConfig",
         disc = spec.tiers[i].disc_latency_s if i < spec.num_tiers - 1 else 0.0
         base = spec.tiers[i].profile.exec_latency(plan.batches[i]) + disc
         if plan.class_workers is not None and table is not None:
-            assigned = [table[c][1] for c, k in plan.class_workers[i].items()
+            assigned = [table[c] for c, k in plan.class_workers[i].items()
                         if k > 0 and c in table]
             if not assigned:
                 out.append(None if plan.workers[i] == 0 else base)
                 continue
-            out.append(base / min(assigned))
+            out.append(max(
+                wc.tier_profile(spec.tiers[i]).exec_latency(plan.batches[i])
+                + disc * wc.scale_for(spec.tiers[i].model).base
+                for wc in assigned))
         else:
             out.append(base if plan.workers[i] > 0 else None)
     return out

@@ -20,7 +20,8 @@ import pathlib
 import numpy as np
 
 from repro.serving.baselines import BASELINES, run_baseline
-from repro.serving.profiles import (CASCADES, default_serving, list_cascades,
+from repro.serving.profiles import (CASCADES, class_costs_from_arg,
+                                    default_serving, list_cascades,
                                     worker_classes_from_arg)
 from repro.serving.trace import azure_like_trace, load_trace_file, static_trace
 
@@ -34,9 +35,17 @@ def main():
                     choices=list(BASELINES))
     ap.add_argument("--workers", type=int, default=16)
     ap.add_argument("--worker-classes", default=None,
-                    help="heterogeneous cluster as name:count[:speed],... "
-                    "e.g. a100:4:1.0,a10g:12:0.45 (speed defaults from "
-                    "the GPU class table; overrides --workers)")
+                    help="heterogeneous cluster as "
+                    "name:count[:speed][@model=BASExMARG],... e.g. "
+                    "a100:4:1.0,a10g:12:0.45 or a10g:12@sdxl=2.2x2.6 "
+                    "(per-class latency scales default from the GPU "
+                    "class table; overrides --workers)")
+    ap.add_argument("--cost-per-class", default=None,
+                    help="cost-weighted allocation objective: $/hour per "
+                    "class as name[=cost],... e.g. a100=4.10,a10g=1.21 "
+                    "(omitted costs default from the GPU price table); "
+                    "threshold ties then break by dollar cost instead of "
+                    "worker count")
     ap.add_argument("--duration", type=int, default=360)
     ap.add_argument("--trace-min", type=float, default=4.0)
     ap.add_argument("--trace-max", type=float, default=32.0)
@@ -63,8 +72,12 @@ def main():
             args.trace_min, args.trace_max)
     wcs = (worker_classes_from_arg(args.worker_classes)
            if args.worker_classes else ())
+    if args.cost_per_class and not wcs:
+        ap.error("--cost-per-class requires --worker-classes")
+    costs = (class_costs_from_arg(args.cost_per_class)
+             if args.cost_per_class else ())
     serving = default_serving(args.cascade, num_workers=args.workers,
-                              worker_classes=wcs)
+                              worker_classes=wcs, class_costs=costs)
     spec = serving.cascade
     r = run_baseline(args.baseline, trace, serving, seed=args.seed)
 
@@ -92,9 +105,19 @@ def main():
     }
     if wcs:
         report["worker_classes"] = {
-            wc.name: {"count": wc.count, "speed": wc.speed} for wc in wcs}
+            wc.name: {"count": wc.count, "speed": wc.speed,
+                      "profiles": {m: [sc.base, sc.marginal]
+                                   for m, sc in wc.profiles}}
+            for wc in wcs}
         report["workers_by_class"] = r.workers_by_class
         report["class_mean_batch_latency_s"] = r.class_latency_summary()
+    if costs and r.plan_cost_timeline:
+        mean_rate = r.mean_plan_cost_per_hour         # $/hour
+        report["cost_per_class"] = dict(costs)
+        report["mean_cost_per_hour"] = round(mean_rate, 3)
+        report["cost_per_1k_queries"] = round(
+            mean_rate / 3600.0 * trace.duration_s
+            / max(r.completed, 1) * 1000.0, 4)
     print(json.dumps(report, indent=1))
     if args.out:
         pathlib.Path(args.out).write_text(json.dumps(report, indent=1))

@@ -82,13 +82,19 @@ def run_baseline(name: str, trace: Trace, serving: ServingConfig,
     elif name == "clipper-heavy":
         profiles = make_profiles(serving, seed)
         # largest batch whose execution latency still fits the SLO (on the
-        # slowest class present, so heterogeneous runs stay comparable)
+        # slowest class present — via its per-model latency scales, since
+        # a steep marginal curve can blow the SLO at large batches even
+        # when batch-1 fits — so heterogeneous runs stay comparable)
         final = spec.tiers[-1]
-        slowest = min((wc.speed for wc in serving.worker_classes),
-                      default=1.0)
+
+        def worst_lat(b: int) -> float:
+            if not serving.worker_classes:
+                return final.profile.exec_latency(b)
+            return max(wc.tier_profile(final).exec_latency(b)
+                       for wc in serving.worker_classes)
+
         choices = spec.tier_batch_choices(n - 1, serving.batch_choices)
-        feas = [b for b in choices
-                if final.profile.exec_latency(b) / slowest <= spec.slo_s]
+        feas = [b for b in choices if worst_lat(b) <= spec.slo_s]
         b_last = max(feas) if feas else min(choices)
         batches = tuple(1 for _ in range(n - 1)) + (b_last,)
         plan = AllocationPlan(

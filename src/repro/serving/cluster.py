@@ -16,7 +16,7 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.config.base import LatencyProfile, ServingConfig
+from repro.config.base import LatencyProfile, ServingConfig, WorkerClass
 from repro.core.cascade import DiffusionCascade
 
 
@@ -28,6 +28,16 @@ class WorkerSlice:
     devices: tuple = ()
     class_name: str = ""              # hardware class ("" = homogeneous)
     speed: float = 1.0                # throughput multiplier vs reference
+    # full class spec (per-model latency scales); None = homogeneous
+    wc: Optional[WorkerClass] = None
+
+    def expected_latency(self, profile: LatencyProfile, batch: int,
+                         model: str = "") -> float:
+        """Class-adjusted expected execution latency for a batch (the
+        measured reference profile through this slice's latency scales)."""
+        if self.wc is not None:
+            return self.wc.scale_for(model).apply(profile).exec_latency(batch)
+        return profile.exec_latency(batch) / max(self.speed, 1e-9)
 
 
 class ClusterRuntime:
@@ -40,15 +50,17 @@ class ClusterRuntime:
         tp = max(serving.worker_tp_size, 1)
         # heterogeneous clusters: wid order follows the declared class
         # order, matching the simulator's worker numbering
-        class_of = []
+        class_of: List[Optional[WorkerClass]] = []
         for wc in serving.worker_classes:
-            class_of += [(wc.name, wc.speed)] * wc.count
-        class_of += [("", 1.0)] * (serving.num_workers - len(class_of))
+            class_of += [wc] * wc.count
+        class_of += [None] * (serving.num_workers - len(class_of))
         self.slices: List[WorkerSlice] = [
             WorkerSlice(wid=i,
                         devices=tuple(jax.devices()[(i * tp) % n:
                                                     (i * tp) % n + tp]),
-                        class_name=class_of[i][0], speed=class_of[i][1])
+                        class_name=class_of[i].name if class_of[i] else "",
+                        speed=class_of[i].speed if class_of[i] else 1.0,
+                        wc=class_of[i])
             for i in range(serving.num_workers)]
 
     def measure_profile(self, batches=(1, 2, 4), prompt_len: int = 8,

@@ -17,7 +17,8 @@ from __future__ import annotations
 from typing import Dict, List, Sequence, Tuple
 
 from repro.config.base import (CascadeSpec, LatencyProfile, ServingConfig,
-                               TierSpec, WorkerClass, parse_worker_classes)
+                               TierSpec, WorkerClass, parse_class_costs,
+                               parse_worker_classes)
 
 # model -> e(b) = base + marginal*(b-1)
 MODEL_PROFILES: Dict[str, LatencyProfile] = {
@@ -31,20 +32,49 @@ MODEL_PROFILES: Dict[str, LatencyProfile] = {
 DISCRIMINATOR_LATENCY_S = {"efficientnet_s": 0.010, "resnet34": 0.002,
                            "vit_b16": 0.005}
 
-# Diffusion-workload throughput multipliers vs the A100-80GB the
-# MODEL_PROFILES were measured on (paper §5's heterogeneous clusters).
-# Used as speed defaults for `--worker-classes a100:4,a10g:12` syntax;
-# an explicit third field (`a10g:12:0.5`) always wins.
+# Diffusion-workload latency multipliers vs the A100-80GB the
+# MODEL_PROFILES were measured on (paper §5's heterogeneous clusters):
+# (batch-1 base scale, per-extra-image marginal scale). Batch-1 latency
+# is dominated by kernel launch + memory traffic while the marginal cost
+# tracks raw compute, so memory-light cards (a10g, t4) fall off faster
+# on marginal cost than on batch-1. Used as profile defaults for
+# `--worker-classes a100:4,a10g:12` syntax; explicit speeds
+# (`a10g:12:0.5`) or `@model=BASExMARG` overrides always win.
+GPU_CLASS_PROFILES: Dict[str, Tuple[float, float]] = {
+    "h100": (0.63, 0.58), "a100": (1.00, 1.00), "l40s": (1.67, 1.85),
+    "v100": (1.82, 2.00), "a10g": (2.22, 2.60), "t4": (4.00, 4.80),
+}
+
+# Legacy scalar view of the same table: throughput multipliers derived
+# from the batch-1 base scale (kept for `speed`-only call sites).
 GPU_CLASS_SPEEDS: Dict[str, float] = {
-    "h100": 1.60, "a100": 1.00, "l40s": 0.60, "v100": 0.55,
-    "a10g": 0.45, "t4": 0.25,
+    name: round(1.0 / base, 4)
+    for name, (base, _marg) in GPU_CLASS_PROFILES.items()
+}
+
+# On-demand $/hour reference prices (us-east, mid-2025 ballpark) for the
+# cost-weighted allocation objective (`--cost-per-class a100,a10g`).
+GPU_CLASS_COSTS: Dict[str, float] = {
+    "h100": 6.98, "a100": 4.10, "l40s": 1.99, "v100": 3.06,
+    "a10g": 1.21, "t4": 0.53,
 }
 
 
 def worker_classes_from_arg(text: str) -> Tuple[WorkerClass, ...]:
-    """Parse a ``--worker-classes`` CLI value with the GPU speed table as
-    defaults for omitted speeds."""
-    return parse_worker_classes(text, speed_defaults=GPU_CLASS_SPEEDS)
+    """Parse a ``--worker-classes`` CLI value with the GPU latency-scale
+    table as the wildcard default for speed-omitted known classes — also
+    as the fallback behind explicit ``@model=`` pins, so ``a10g:12@sdxl=…``
+    keeps the table's (base, marginal) for every other model. An explicit
+    speed makes the class a pure scalar (the scalar speed table covers
+    speed-omitted entries of unknown classes)."""
+    return parse_worker_classes(text, speed_defaults=GPU_CLASS_SPEEDS,
+                                profile_defaults=GPU_CLASS_PROFILES)
+
+
+def class_costs_from_arg(text: str) -> Tuple[Tuple[str, float], ...]:
+    """Parse a ``--cost-per-class`` CLI value with the GPU price table as
+    defaults for omitted costs."""
+    return parse_class_costs(text, cost_defaults=GPU_CLASS_COSTS)
 
 
 def make_cascade(name: str, models: Sequence[str], *, slo_s: float,

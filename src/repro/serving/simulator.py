@@ -19,12 +19,14 @@ import dataclasses
 import heapq
 import inspect
 import itertools
+import math
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.config.base import ServingConfig, as_cascade_spec
+from repro.config.base import (LatencyProfile, ServingConfig,
+                               as_cascade_spec)
 from repro.core.allocator import AllocatorOptions, ResourceManager
 from repro.core.confidence import DeferralProfile, as_boundary_profiles
 from repro.core.milp import Telemetry
@@ -63,7 +65,8 @@ class Worker:
     batch_started: float = 0.0
     last_heartbeat: float = 0.0
     speed: float = 1.0            # hardware-class throughput multiplier
-    wclass: str = ""              # worker-class name ("" = homogeneous)
+    wclass: str = ""              # worker-class name ("" = homogeneous);
+    # per-model latency scales live in Simulator._class_tier, keyed by it
 
 
 @dataclasses.dataclass
@@ -110,6 +113,9 @@ class SimResult:
     # per worker class: (batch size, wall-clock batch latency) samples
     class_batch_latencies: Dict[str, List[Tuple[int, float]]] = \
         dataclasses.field(default_factory=dict)
+    # (t, $/hour) of each applied plan (cost-weighted objective runs)
+    plan_cost_timeline: List[Tuple[float, float]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def violation_ratio(self) -> float:
@@ -128,6 +134,11 @@ class SimResult:
     @property
     def mean_fid(self) -> float:
         vals = [f for _, f in self.fid_timeline]
+        return float(np.mean(vals)) if vals else float("nan")
+
+    @property
+    def mean_plan_cost_per_hour(self) -> float:
+        vals = [c for _, c in self.plan_cost_timeline]
         return float(np.mean(vals)) if vals else float("nan")
 
     def class_latency_summary(self) -> Dict[str, float]:
@@ -197,6 +208,19 @@ class Simulator:
         self._recent_defer: deque = deque()
         self._window_done = 0
         self._active_S = serving.num_workers
+        # per-(class, tier) scaled latency — (profile, disc seconds),
+        # constant for the whole run: the routing / predictive-drop hot
+        # paths evaluate it per live worker per query, so they must not
+        # rebuild LatencyScale/LatencyProfile objects every call
+        self._class_tier: Dict[Tuple[str, int],
+                               Tuple[LatencyProfile, float]] = {}
+        for role, tier in enumerate(self.spec.tiers):
+            disc = tier.disc_latency_s if role < self.num_tiers - 1 else 0.0
+            for wc in serving.worker_classes:
+                self._class_tier[(wc.name, role)] = (
+                    wc.tier_profile(tier),
+                    disc * wc.scale_for(tier.model).base)
+            self._class_tier[("", role)] = (tier.profile, disc)
 
     @property
     def profile(self) -> DeferralProfile:
@@ -282,18 +306,21 @@ class Simulator:
             ws = [w for w in ws if w.role == role]
         return ws
 
-    def _route(self, q: Query, tier: int) -> bool:
-        ws = self._live(tier)
+    def _route(self, q: Query, tier: int,
+               exclude: Optional[int] = None) -> bool:
+        ws = [w for w in self._live(tier) if w.wid != exclude]
         if not ws:
             # no live worker of that tier: park on a loading one if any
             ws = [w for w in self.workers.values()
-                  if w.alive and w.wid < self._active_S and w.role == tier]
+                  if w.alive and w.wid < self._active_S and w.role == tier
+                  and w.wid != exclude]
         if not ws:
             return False
-        # least expected drain time: a slow-class worker's queue takes
-        # proportionally longer to clear
+        # least expected drain time: weight the backlog by the class's
+        # per-item cost at its configured batch size, so a class with a
+        # steep marginal curve takes proportionally longer to clear
         w = min(ws, key=lambda w: (len(w.queue) + len(w.in_flight))
-                / max(w.speed, 1e-9))
+                * self._per_item_cost(w, tier))
         q.enqueued_at = self.now
         w.queue.append(q)
         self._maybe_start(w)
@@ -309,12 +336,29 @@ class Simulator:
             self.result.dropped += 1
             self.result.violations += 1
 
+    def _profiled_latency(self, w: Worker, role: int, n: int) -> float:
+        """Deterministic class-profiled batch latency (exec + this tier's
+        discriminator, a fixed-cost run scaled like batch-1 work)."""
+        cached = self._class_tier.get((w.wclass, role))
+        if cached is not None:
+            prof, disc = cached
+            return prof.exec_latency(n) + disc
+        # defensive fallback for a worker outside the cached class table
+        tier = self.spec.tiers[role]
+        base = tier.profile.exec_latency(n) / max(w.speed, 1e-9)
+        if role < self.num_tiers - 1:
+            base += tier.disc_latency_s / max(w.speed, 1e-9)
+        return base
+
+    def _per_item_cost(self, w: Worker, role: int) -> float:
+        """Expected seconds per query at the worker's configured batch
+        size (routing weight; reduces to 1/speed ordering when the class
+        has no per-model overrides)."""
+        b = max(w.batch_size, 1)
+        return self._profiled_latency(w, role, b) / b
+
     def _exec_latency(self, w: Worker, n: int) -> float:
-        tier = self.spec.tiers[w.role]
-        base = tier.profile.exec_latency(n)
-        if w.role < self.num_tiers - 1:
-            base += tier.disc_latency_s
-        base /= max(w.speed, 1e-9)        # hardware-class multiplier
+        base = self._profiled_latency(w, w.role, n)
         jit = float(self.rng.lognormal(0.0, self.sim.straggler_sigma))
         if self.rng.random() < self.sim.straggler_prob:
             jit *= float(self.rng.uniform(3.0, 8.0))
@@ -324,13 +368,19 @@ class Simulator:
         if (not w.alive or w.role is None or self.now < w.loading_until
                 or self.now < w.busy_until or w.in_flight or not w.queue):
             return
+        # predictive drop (paper: queries predicted to miss are dropped)
+        # — deterministic expected latency: sampling _exec_latency here
+        # would consume RNG per candidate and bake straggler jitter into
+        # the deadline estimate; constant for the whole batch assembly
+        est_done = math.inf
+        if self.serving.drop_predicted_misses:
+            est_done = self.now \
+                + self._profiled_latency(w, w.role, w.batch_size) * 0.9
         batch: List[Query] = []
         while w.queue and len(batch) < w.batch_size:
             q = w.queue.popleft()
             if q.done_at is not None or q.dropped:
                 continue           # hedged duplicate already finished
-            # predictive drop (paper: queries predicted to miss are dropped)
-            est_done = self.now + self._exec_latency(w, w.batch_size) * 0.9
             if (self.serving.drop_predicted_misses and est_done > q.deadline
                     and q.stage == w.role):
                 q.dropped = True
@@ -448,6 +498,8 @@ class Simulator:
         self.thresholds = tuple(plan.thresholds)
         self.result.threshold_timeline.append((self.now, self.threshold))
         self.result.thresholds_timeline.append((self.now, self.thresholds))
+        if getattr(plan, "cost", None) is not None:
+            self.result.plan_cost_timeline.append((self.now, plan.cost))
         live = [w for w in self.workers.values()
                 if w.alive and w.wid < self._active_S]
         class_workers = getattr(plan, "class_workers", None)
@@ -455,26 +507,33 @@ class Simulator:
             # heterogeneous plan: each worker class gets its own per-tier
             # role quota so slow hardware lands on the tiers the solver
             # picked for it
+            orphans: List[Query] = []
             for wc in self.serving.worker_classes:
                 live_c = [w for w in live if w.wclass == wc.name]
                 want_c: List[Optional[int]] = [
                     i for i, alloc in enumerate(class_workers)
                     for _ in range(alloc.get(wc.name, 0))]
-                self._assign_roles(live_c, want_c)
+                orphans += self._assign_roles(live_c, want_c)
+            self._settle_orphans(orphans)
         else:
             want: List[Optional[int]] = [
                 i for i, n in enumerate(plan.workers) for _ in range(n)]
-            self._assign_roles(live, want)
+            self._settle_orphans(self._assign_roles(live, want))
         for w in live:
             if w.role is not None:
                 w.batch_size = plan.batches[w.role]
             self._maybe_start(w)
 
     def _assign_roles(self, live: List[Worker],
-                      want: List[Optional[int]]):
+                      want: List[Optional[int]]) -> List[Query]:
         """Stable role assignment: keep matching roles to avoid reload
-        churn; reassigned workers pay the model-load delay and their
-        queued work is re-routed."""
+        churn; every worker switching onto a role pays the model-load
+        delay (including scale-up / freshly recovered workers starting
+        from role None). Returns the reassigned workers' orphaned queued
+        work for the caller to ``_settle_orphans`` once *every* role in
+        the plan has settled — a heterogeneous plan assigns class by
+        class, and an orphan's tier may belong to a class that has not
+        been assigned yet."""
         want = list(want) + [None] * max(len(live) - len(want), 0)
         unassigned = []
         remaining = list(want)
@@ -483,14 +542,29 @@ class Simulator:
                 remaining.remove(w.role)
             else:
                 unassigned.append(w)
+        orphans: List[Query] = []
         for w, role in zip(unassigned, remaining):
-            if w.role is not None and role is not None and w.role != role:
+            if role is not None and w.role != role:
                 w.loading_until = self.now + self.sim.model_load_s
-                # re-route queued work for the old role
-                for q in list(w.queue):
-                    w.queue.remove(q)
-                    self._route(q, q.stage)
+            if w.role is not None and w.role != role and w.queue:
+                orphans.extend(w.queue)
+                w.queue.clear()
             w.role = role
+        return orphans
+
+    def _settle_orphans(self, orphans: List[Query]):
+        """Re-route work orphaned by role reassignment — or drop it as an
+        SLO violation when no worker of its tier remains, preserving
+        completed + dropped == total. Runs after all roles settle, so an
+        orphan cannot be parked back on its old worker's now-reassigned
+        queue (and cross-class tier moves re-route instead of dropping)."""
+        for q in orphans:
+            if q.done_at is not None or q.dropped:
+                continue           # hedged duplicate already finished
+            if not self._route(q, q.stage):
+                q.dropped = True
+                self.result.dropped += 1
+                self.result.violations += 1
 
     def _on_control(self):
         self._check_heartbeats()       # failure detection (heartbeat timeout)
@@ -517,21 +591,22 @@ class Simulator:
 
     def _hedge_stragglers(self):
         """Straggler mitigation: if a batch runs far past its expected
-        latency, re-dispatch its queries to the least-loaded peer."""
+        (class-profiled) latency, re-dispatch its queries to the
+        least-loaded *peer* — never back onto the straggler itself, which
+        would double its queue instead of mitigating."""
         for w in list(self.workers.values()):
             if not w.alive or not w.in_flight:
                 continue
             role = w.batch_role if w.batch_role is not None else w.role
             if role is None:
                 continue
-            prof = self.spec.tiers[role].profile
-            expect = prof.exec_latency(len(w.in_flight)) / max(w.speed, 1e-9)
+            expect = self._profiled_latency(w, role, len(w.in_flight))
             if (self.now - w.batch_started) > 2.5 * expect:
                 for q in w.in_flight:
-                    if not q.hedged and q.done_at is None:
-                        q.hedged = True
+                    if not q.hedged and q.done_at is None and \
+                            self._route(q, q.stage, exclude=w.wid):
+                        q.hedged = True     # duplicate dispatched to a peer
                         self.result.hedged += 1
-                        self._route(q, q.stage)  # duplicate dispatch
 
     # ------------------------------------------------------------------
     def _on_fail(self, wid: int, repair_s: float):
@@ -556,6 +631,13 @@ class Simulator:
         w.alive = True
         w.role = None
         w.loading_until = self.now + self.sim.model_load_s
+        if w.queue or w.in_flight:
+            # failed and recovered within one control period: the
+            # heartbeat requeue (which only fires while not alive) never
+            # ran, so the stale queue/in-flight work would wedge the
+            # worker forever (_maybe_start requires empty in_flight).
+            # Release it now.
+            self._detect_and_requeue(w)
 
     def _on_scale(self, new_s: int):
         self._active_S = new_s

@@ -2,13 +2,16 @@
 
 Anchors ``solve_heterogeneous_cascade`` three ways:
   * brute force — exhaustive over class assignments, per-tier batches and
-    the full empirical-CDF threshold grid on small N=3 instances;
+    the full empirical-CDF threshold grid on small N=3 instances, now
+    including classes with split (base, marginal) latency scales (the
+    batch search interacts with the class mix);
   * the legacy two-tier grid solver ``solve_heterogeneous`` at N=2
     (property-tested);
   * the homogeneous ``solve_cascade`` with a single unit-speed class
     (property-tested, decision-for-decision).
-Plus per-tier SLO-budget guarantees and heterogeneous simulator runs
-(fault injection, per-class latency telemetry).
+Plus per-tier SLO-budget guarantees, the cost-weighted objective, and
+heterogeneous simulator runs (fault injection, per-class latency
+telemetry).
 """
 import dataclasses
 import itertools
@@ -16,9 +19,11 @@ import itertools
 import numpy as np
 import pytest
 
-from repro.config.base import (CascadeSpec, LatencyProfile, ServingConfig,
-                               TierSpec, WorkerClass, as_cascade_spec,
-                               parse_worker_classes, tier_rho)
+from repro.config.base import (CascadeSpec, LatencyProfile, LatencyScale,
+                               ServingConfig, TierSpec, WorkerClass,
+                               as_cascade_spec, as_worker_class,
+                               parse_class_costs, parse_worker_classes,
+                               tier_rho)
 from repro.core.confidence import DeferralProfile, as_boundary_profiles
 from repro.core.milp import (AllocationPlan, plan_tier_latencies,
                              solve_cascade, solve_heterogeneous,
@@ -86,12 +91,13 @@ def _budgets_for(spec, batches, qd_total=0.0):
 
 def brute_force_hetero(spec, serving, profiles, demand, classes):
     """Exhaustive ground truth: every class assignment x[tier][class],
-    every batch tuple, every empirical-CDF threshold step. Returns
-    (per-boundary deferred fractions, total workers) of the lexicographic
-    optimum, or None when infeasible."""
+    every batch tuple, every empirical-CDF threshold step. Classes may be
+    ``(count, speed)`` pairs or full ``WorkerClass``es with per-model
+    latency scales. Returns (per-boundary deferred fractions, total
+    workers) of the lexicographic optimum, or None when infeasible."""
     names = sorted(classes)
-    counts = [classes[c][0] for c in names]
-    speeds = [classes[c][1] for c in names]
+    wcs = [as_worker_class(c, classes[c]) for c in names]
+    counts = [wc.count for wc in wcs]
     n = spec.num_tiers
     lam_D = serving.overprovision * demand
     rhos = [tier_rho(spec, serving, i) for i in range(n)]
@@ -105,17 +111,21 @@ def brute_force_hetero(spec, serving, profiles, demand, classes):
         budgets = _budgets_for(spec, batches)
         if budgets is None:
             continue
-        elig = [[(spec.tiers[i].profile.exec_latency(batches[i]) + discs[i])
-                 / speeds[c] <= budgets[i] + 1e-9
+        lat = [[wcs[c].tier_profile(spec.tiers[i]).exec_latency(batches[i])
+                + discs[i] * wcs[c].scale_for(spec.tiers[i].model).base
+                for c in range(len(names))] for i in range(n)]
+        elig = [[lat[i][c] <= budgets[i] + 1e-9
                  for c in range(len(names))] for i in range(n)]
-        T = [spec.tiers[i].profile.throughput(batches[i]) for i in range(n)]
+        T = [[batches[i]
+              / wcs[c].tier_profile(spec.tiers[i]).exec_latency(batches[i])
+              for c in range(len(names))] for i in range(n)]
         for assign in itertools.product(
                 *[_assignments(counts[c], n) for c in range(len(names))]):
             # assign[c][i] workers of class c on tier i
             if any(assign[c][i] > 0 and not elig[i][c]
                    for c in range(len(names)) for i in range(n)):
                 continue
-            cap = [sum(assign[c][i] * speeds[c] * T[i]
+            cap = [sum(assign[c][i] * T[i][c]
                        for c in range(len(names))) for i in range(n)]
             if cap[0] < lam_D / rhos[0] - 1e-9:
                 continue
@@ -142,6 +152,18 @@ HET_INSTANCES = [
     (6.0, {"fast": (3, 1.0), "slow": (2, 0.6)}, (None, None, None), 6.0),
     (2.0, {"fast": (2, 1.0), "slow": (3, 0.5)}, (0.5, 1.2, 2.0), 6.0),
     (4.0, {"fast": (2, 1.3), "slow": (2, 0.4)}, (None, 1.0, None), 4.0),
+    # split (base, marginal) latency scales: marginal cost falls off
+    # faster than batch-1, so batch choice interacts with class mix
+    (3.0, {"fast": (2, 1.0),
+           "mem": WorkerClass("mem", 3, 0.5,
+                              (("*", LatencyScale(1.6, 3.0)),))},
+     (None, None, None), 6.0),
+    (5.0, {"fast": WorkerClass("fast", 2, 1.0,
+                               (("t2", LatencyScale(0.8, 0.6)),)),
+           "slow": (3, 0.5)}, (None, None, None), 6.0),
+    (2.5, {"a": WorkerClass("a", 3, 1.0, (("*", LatencyScale(1.4, 1.1)),)),
+           "b": WorkerClass("b", 2, 1.0, (("*", LatencyScale(1.1, 2.6)),))},
+     (0.5, 1.2, 2.0), 6.0),
 ]
 
 
@@ -207,6 +229,64 @@ def test_n2_hetero_matches_legacy(demand, c1, c2, s1, s2, scores):
         assert abs(plan.thresholds[0] - legacy["threshold"]) < 1e-12
         assert plan.total_workers == (sum(legacy["x1"].values())
                                       + sum(legacy["x2"].values()))
+
+
+@given(st.floats(0.5, 20.0), st.integers(1, 5), st.integers(0, 5),
+       st.floats(0.3, 1.2), st.floats(0.3, 1.2),
+       st.lists(st.floats(0.05, 0.95), min_size=12, max_size=30))
+@settings(max_examples=12, deadline=None)
+def test_uniform_profiles_reduce_to_scalar_speed(demand, c1, c2, s1, s2,
+                                                 scores):
+    """A per-class profile with base == marginal == 1/speed is exactly
+    the scalar-speed class of PR 2, decision-for-decision."""
+    spec = tiny3()
+    serving = ServingConfig(cascade=spec, num_workers=16,
+                            batch_choices=(1, 2, 4))
+    profiles = as_boundary_profiles(DeferralProfile(scores), 2)
+    scalar = {"a": (c1, s1)}
+    prof = {"a": WorkerClass("a", c1, s1,
+                             (("*", LatencyScale(1.0 / s1, 1.0 / s1)),))}
+    if c2:
+        scalar["b"] = (c2, s2)
+        prof["b"] = WorkerClass("b", c2, s2,
+                                (("*", LatencyScale(1.0 / s2, 1.0 / s2)),))
+    p1 = solve_heterogeneous_cascade(spec, serving, profiles, demand,
+                                     classes=scalar)
+    p2 = solve_heterogeneous_cascade(spec, serving, profiles, demand,
+                                     classes=prof)
+    assert p1.workers == p2.workers
+    assert p1.batches == p2.batches
+    assert p1.thresholds == p2.thresholds
+    assert p1.feasible == p2.feasible
+    assert p1.class_workers == p2.class_workers
+
+
+def test_marginal_scale_changes_batch_choice():
+    """With a split profile the batch search interacts with the class
+    mix: a class whose marginal cost blows up at large batches forces a
+    different batch than its scalar-speed twin (same batch-1 latency)."""
+    spec = CascadeSpec(
+        name="marg2",
+        tiers=(TierSpec("t0", LatencyProfile(0.40, 0.05),
+                        disc_latency_s=0.0),
+               TierSpec("t1", LatencyProfile(0.50, 0.10),
+                        disc_latency_s=0.0)),
+        slo_s=3.0)
+    serving = ServingConfig(cascade=spec, num_workers=4,
+                            batch_choices=(1, 8))
+    profiles = [small_profiles()[0]]
+    scalar = {"gpu": (4, 0.5)}          # e0(8)/0.5 = 1.5 s: batch 8 fits
+    steep = {"gpu": WorkerClass("gpu", 4, 0.5,
+                                (("*", LatencyScale(2.0, 8.0)),))}
+    # steep e0(8) = 0.4*2 + 0.05*8*7 = 3.6 s > SLO: batch 8 ineligible
+    p_scalar = solve_heterogeneous_cascade(spec, serving, profiles, 2.0,
+                                           classes=scalar)
+    p_steep = solve_heterogeneous_cascade(spec, serving, profiles, 2.0,
+                                          classes=steep)
+    assert p_scalar.feasible
+    assert p_scalar.batches[0] == 8
+    if p_steep.feasible:
+        assert p_steep.batches[0] == 1
 
 
 @given(st.floats(0.5, 30.0), st.integers(2, 32),
@@ -371,6 +451,131 @@ def test_budget_eligibility_scales_discriminator_too():
     assert lat[0] == pytest.approx((0.10 + 0.10) / 0.45)
 
 
+# ---------------------------------------------------------------------------
+# Cost-weighted objective ($/query instead of worker count)
+# ---------------------------------------------------------------------------
+def test_cost_objective_prefers_cheap_classes():
+    """With per-class $/hour costs, threshold ties break by dollar cost:
+    two equally-fast classes -> the allocation lands on the cheap one,
+    at identical quality (thresholds)."""
+    serving = default_serving("sdturbo", num_workers=16)
+    profiles = [small_profiles()[0]]
+    classes = {"cheap": (8, 1.0), "exp": (8, 1.0)}
+    costs = {"cheap": 1.0, "exp": 10.0}
+    base = solve_heterogeneous_cascade(serving.cascade, serving, profiles,
+                                       4.0, classes=classes)
+    plan = solve_heterogeneous_cascade(serving.cascade, serving, profiles,
+                                       4.0, classes=classes,
+                                       class_costs=costs)
+    assert base.cost is None
+    assert plan.feasible and plan.cost is not None
+    assert plan.thresholds == base.thresholds      # quality unaffected
+    assert plan.total_workers <= 8                 # fits in cheap alone
+    assert all(alloc.get("exp", 0) == 0 for alloc in plan.class_workers)
+    assert plan.cost == pytest.approx(plan.total_workers * 1.0)
+    assert plan.cost_per_query(4.0) == pytest.approx(
+        plan.cost / 3600.0 / 4.0)
+    assert plan.cost_per_query(0.0) is None
+
+
+def test_cost_objective_from_serving_config_reaches_sim():
+    """ServingConfig.class_costs flows through the controller into the
+    solver and the simulator's plan-cost timeline."""
+    wcs = (WorkerClass("fast", 8, 1.0), WorkerClass("slow", 8, 0.5))
+    serving = default_serving("sdturbo", worker_classes=wcs,
+                              batch_choices=(1, 4, 16),
+                              class_costs=(("fast", 4.0), ("slow", 1.2)))
+    r = run_baseline("diffserve", static_trace(4.0, 40), serving, seed=0)
+    assert r.completed + r.dropped == r.total
+    assert r.plan_cost_timeline
+    assert all(c >= 0.0 for _, c in r.plan_cost_timeline)
+    assert np.isfinite(r.mean_plan_cost_per_hour)
+
+
+def test_class_costs_validated():
+    wcs = (WorkerClass("fast", 8, 1.0), WorkerClass("slow", 8, 0.5))
+    with pytest.raises(ValueError, match="class_costs"):
+        default_serving("sdturbo", class_costs=(("fast", 1.0),))
+    with pytest.raises(ValueError, match="not in"):
+        default_serving("sdturbo", worker_classes=wcs,
+                        class_costs=(("zzz", 1.0),))
+    # every declared class must carry a price: a $0 default would be
+    # free to the minimizing objective
+    with pytest.raises(ValueError, match="missing prices"):
+        default_serving("sdturbo", worker_classes=wcs,
+                        class_costs=(("fast", 4.0),))
+    serving = default_serving("sdturbo", num_workers=4)
+    with pytest.raises(ValueError, match="class_costs"):
+        solve_heterogeneous_cascade(serving.cascade, serving,
+                                    [small_profiles()[0]], 2.0,
+                                    classes={"a": (4, 1.0)},
+                                    class_costs={"nope": 1.0})
+    with pytest.raises(ValueError, match="missing prices"):
+        solve_heterogeneous_cascade(serving.cascade, serving,
+                                    [small_profiles()[0]], 2.0,
+                                    classes={"a": (2, 1.0), "b": (2, 1.0)},
+                                    class_costs={"a": 1.0})
+
+
+def test_class_costs_survive_whole_class_failure():
+    """The controller passes a live (failure-shrunken) class table; costs
+    for a class that died out of it entirely must be dropped, not raised
+    over — the solver keeps replanning with the survivors priced."""
+    wcs = (WorkerClass("fast", 4, 1.0), WorkerClass("slow", 4, 0.5))
+    serving = default_serving("sdturbo", worker_classes=wcs,
+                              batch_choices=(1, 4),
+                              class_costs=(("fast", 4.0), ("slow", 1.2)))
+    plan = solve_heterogeneous_cascade(serving.cascade, serving,
+                                       [small_profiles()[0]], 1.0,
+                                       classes={"slow": (4, 0.5)})
+    assert plan.cost is not None
+    assert all("fast" not in alloc for alloc in plan.class_workers)
+    used = sum(alloc.get("slow", 0) for alloc in plan.class_workers)
+    assert plan.cost == pytest.approx(used * 1.2)
+
+
+def test_zero_workers_is_infeasible_not_phantom():
+    """A homogeneous config with num_workers=0 must come back
+    feasible=False with an empty allocation — not a 'feasible' plan built
+    on a phantom default worker that does not exist."""
+    serving = default_serving("sdturbo", num_workers=0)
+    plan = solve_heterogeneous_cascade(serving.cascade, serving,
+                                       [small_profiles()[0]], 2.0)
+    assert not plan.feasible
+    assert plan.workers == (0, 0)
+    assert all(not alloc for alloc in plan.class_workers)
+
+
+def test_worker_slice_projects_class_latency():
+    """WorkerSlice.expected_latency projects a measured reference profile
+    through the slice's class latency scales (cluster-mode counterpart of
+    Simulator._profiled_latency); scalar-speed slices divide by speed."""
+    from repro.serving.cluster import WorkerSlice
+    prof = LatencyProfile(base_s=1.0, marginal_s=0.1)
+    wc = WorkerClass("a10g", 1, 0.5,
+                     profiles=(("*", LatencyScale(2.0, 3.0)),))
+    s = WorkerSlice(wid=0, class_name="a10g", speed=0.5, wc=wc)
+    assert s.expected_latency(prof, 3) == pytest.approx(
+        2.0 * 1.0 + 3.0 * 0.1 * 2)
+    plain = WorkerSlice(wid=1, speed=0.5)
+    assert plain.expected_latency(prof, 3) == pytest.approx(
+        (1.0 + 0.2) / 0.5)
+
+
+def test_parse_class_costs():
+    assert parse_class_costs("a=2.5,b=1") == (("a", 2.5), ("b", 1.0))
+    assert parse_class_costs("a100", cost_defaults={"a100": 4.1}) \
+        == (("a100", 4.1),)
+    with pytest.raises(ValueError, match="no cost"):
+        parse_class_costs("mystery")
+    with pytest.raises(ValueError, match="> 0"):
+        parse_class_costs("a=0")
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_class_costs("a=1,a=2")
+    with pytest.raises(ValueError, match="no class costs"):
+        parse_class_costs(" , ")
+
+
 def test_threshold_grid_validated():
     serving = default_serving("sdturbo", num_workers=8)
     profile = small_profiles()[0]
@@ -395,13 +600,14 @@ def test_controller_drops_fully_dead_class():
     tel = Telemetry(demand_qps=4.0, queues=(0.0, 0.0),
                     arrivals=(4.0, 1.0), live_workers=6,
                     live_by_class=(("slow", 6),))
-    assert rm._live_classes(tel) == {"slow": (6, 0.5)}
+    assert rm._live_classes(tel) == {
+        "slow": dataclasses.replace(wcs[1], count=6)}
     plan = rm.plan(tel)
     for alloc in plan.class_workers:
         assert "fast" not in alloc, plan
     # empty census (first tick): the declared inventory stands
     tel0 = Telemetry(demand_qps=1.0, live_workers=8)
-    assert rm._live_classes(tel0) == {"fast": (2, 1.0), "slow": (6, 0.5)}
+    assert rm._live_classes(tel0) == {"fast": wcs[0], "slow": wcs[1]}
 
 
 # ---------------------------------------------------------------------------
@@ -435,6 +641,56 @@ def test_parse_worker_classes():
         parse_worker_classes("a100:0:1.0")            # zero count
     with pytest.raises(ValueError):
         parse_worker_classes(":4:1.0")                # empty class name
+
+
+def test_parse_worker_class_profiles():
+    """The @model=BASExMARG syntax pins per-model latency scales."""
+    wcs = parse_worker_classes("a10g:12:0.45@sdxl=2.2x2.6@*=2.0")
+    assert wcs[0].scale_for("sdxl") == LatencyScale(2.2, 2.6)
+    assert wcs[0].scale_for("anything-else") == LatencyScale(2.0, 2.0)
+    # profile defaults kick in when neither speed nor overrides are given
+    wcs = parse_worker_classes("gpu:2", profile_defaults={"gpu": (2.0, 3.0)})
+    assert wcs[0].scale_for("m") == LatencyScale(2.0, 3.0)
+    assert wcs[0].speed == pytest.approx(0.5)
+    # an explicit speed suppresses the profile default (pure scalar class)
+    wcs = parse_worker_classes("gpu:2:0.4",
+                               profile_defaults={"gpu": (2.0, 3.0)})
+    assert wcs[0].profiles == ()
+    assert wcs[0].scale_for("m") == LatencyScale(2.5, 2.5)
+    # explicit per-model pins keep the table wildcard behind them: other
+    # models stay on the class's (base, marginal), not uniform 1/speed
+    wcs = parse_worker_classes("gpu:2@m=4.0x5.0",
+                               profile_defaults={"gpu": (2.0, 3.0)})
+    assert wcs[0].scale_for("m") == LatencyScale(4.0, 5.0)
+    assert wcs[0].scale_for("other") == LatencyScale(2.0, 3.0)
+    # a well-formed but out-of-range scale is a range error, not syntax
+    with pytest.raises(ValueError, match="> 0"):
+        parse_worker_classes("a:1@m=0x2.0")
+    with pytest.raises(ValueError, match="model override"):
+        parse_worker_classes("a:1@sdxl")              # missing =
+    with pytest.raises(ValueError, match="latency scale"):
+        parse_worker_classes("a:1@m=zz")              # unparseable scale
+    with pytest.raises(ValueError, match="latency scale"):
+        parse_worker_classes("a:1@m=1.0x2.0x3.0")     # too many parts
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_worker_classes("a:1@m=2.0@m=3.0")       # duplicate model
+
+
+def test_worker_class_scale_semantics():
+    sc = LatencyScale(2.0, 3.0)
+    wc = WorkerClass("mem", 1, 1.0, (("*", sc),))
+    tier = TierSpec("t", LatencyProfile(0.10, 0.05), disc_latency_s=0.01)
+    prof = wc.tier_profile(tier)
+    assert prof.base_s == pytest.approx(0.20)
+    assert prof.marginal_s == pytest.approx(0.15)
+    # discriminator is a fixed-cost run: scales with the base multiplier
+    assert wc.tier_latency(tier, 4) == pytest.approx(
+        0.20 + 3 * 0.15 + 0.01 * 2.0)
+    assert wc.tier_throughput(tier, 4) == pytest.approx(4 / 0.65)
+    with pytest.raises(ValueError, match="> 0"):
+        LatencyScale(0.0, 1.0)
+    with pytest.raises(ValueError, match="duplicate"):
+        WorkerClass("x", 1, 1.0, (("m", sc), ("m", sc)))
 
 
 def test_serving_config_validates_class_counts():
@@ -491,6 +747,36 @@ def test_slow_class_batches_proportionally_slower():
             for cls, v in r.class_batch_latencies.items()}
     assert 0.99 < norm["fast"] < 1.01, norm
     assert 1.9 < norm["slow"] / norm["fast"] < 2.1, norm
+
+
+def test_profiled_class_batch_latencies_exact():
+    """With jitter off, a class with split (base, marginal) scales shows
+    batch latencies of exactly base*e_1 + marginal*marg*(b-1) + base*disc
+    — not the uniform e(b)/speed scaling."""
+    sc = LatencyScale(2.0, 3.0)
+    wcs = (WorkerClass("ref", 4, 1.0),
+           WorkerClass("mem", 4, 1.0, (("*", sc),)))
+    serving = default_serving("sdturbo", worker_classes=wcs)
+    spec = as_cascade_spec(serving.cascade)
+    plan = AllocationPlan(workers=(8, 0), batches=(4, 4), thresholds=(0.0,),
+                          expected_latency=1.0, feasible=True,
+                          class_workers=({"ref": 4, "mem": 4}, {}))
+    sim = Simulator(serving, make_profiles(serving, 0),
+                    SimConfig(seed=0, fixed_plan=plan, straggler_sigma=0.0,
+                              straggler_prob=0.0, hedging=False))
+    r = sim.run(static_trace(6.0, 80))
+    assert r.completed + r.dropped == r.total
+    t0 = spec.tiers[0]
+
+    def expect(n, scale):
+        return (t0.profile.base_s * scale.base
+                + t0.profile.marginal_s * scale.marginal * (n - 1)
+                + t0.disc_latency_s * scale.base)
+
+    assert set(r.class_batch_latencies) == {"ref", "mem"}
+    for cls, scale in (("ref", LatencyScale(1.0, 1.0)), ("mem", sc)):
+        for n, d in r.class_batch_latencies[cls]:
+            assert d == pytest.approx(expect(n, scale)), (cls, n, d)
 
 
 def test_all_baselines_run_heterogeneous():

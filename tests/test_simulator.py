@@ -1,5 +1,7 @@
 """Serving-simulator tests: paper orderings, fault tolerance, snapshot/
-restore determinism, elastic scaling, straggler hedging."""
+restore determinism, elastic scaling, straggler hedging, and worker
+lifecycle/conservation regressions (role reassignment, fast fail/recover
+cycles, scale-up load accounting, hedge routing)."""
 import numpy as np
 import pytest
 
@@ -7,7 +9,7 @@ from repro.serving.baselines import BASELINES, make_profile, run_baseline
 from repro.serving.faults import (poisson_failures, restore, resume,
                                   snapshot)
 from repro.serving.profiles import default_serving
-from repro.serving.simulator import SimConfig, Simulator
+from repro.serving.simulator import Query, SimConfig, Simulator
 from repro.serving.trace import azure_like_trace, static_trace
 
 
@@ -147,6 +149,215 @@ def test_snapshot_restore_deterministic(serving, tmp_path):
     assert final.completed == full.completed
     assert final.violations == full.violations
     assert abs(final.mean_fid - full.mean_fid) < 1e-9
+
+
+
+# ---------------------------------------------------------------------------
+# Worker lifecycle / conservation regressions
+# ---------------------------------------------------------------------------
+def test_reassign_drops_unroutable_queue():
+    """A re-planned worker's queued queries must be dropped (and counted
+    as violations) when no worker of their tier remains — not silently
+    lost or parked back on the reassigned worker's old role."""
+    sv = default_serving("sdturbo", num_workers=2)
+    sim = Simulator(sv, make_profile(sv, 0), SimConfig(seed=0))
+    sim.result.total = 3
+    w0, w1 = sim.workers[0], sim.workers[1]
+    w0.role, w1.role = 1, 0
+    for i in range(3):
+        w0.queue.append(Query(qid=i, arrival=0.0, deadline=5.0, stage=1))
+    # re-plan removes tier 1 entirely: the stage-1 queue has nowhere to go
+    sim._settle_orphans(sim._assign_roles([w0, w1], [0, 0]))
+    assert not w0.queue and not w1.queue
+    assert sim.result.dropped == 3
+    assert sim.result.violations == 3
+    assert sim.result.completed + sim.result.dropped == sim.result.total
+
+
+def test_reassign_reroutes_to_surviving_tier_worker():
+    """When a worker of the old tier survives the re-plan, the reassigned
+    worker's queue moves there instead of being dropped."""
+    sv = default_serving("sdturbo", num_workers=3)
+    sim = Simulator(sv, make_profile(sv, 0), SimConfig(seed=0))
+    sim.result.total = 2
+    w0, w1, w2 = (sim.workers[i] for i in range(3))
+    w0.role, w1.role, w2.role = 1, 1, 0
+    qs = [Query(qid=i, arrival=0.0, deadline=50.0, stage=1)
+          for i in range(2)]
+    w1.queue.extend(qs)
+    # stable matching keeps w0 on tier 1 and reassigns w1 to tier 0
+    sim._settle_orphans(sim._assign_roles([w0, w1, w2], [0, 1, 0]))
+    assert (w0.role, w1.role, w2.role) == (1, 0, 0)
+    assert sim.result.dropped == 0
+    assert all(q in w0.queue or q in w0.in_flight for q in qs)
+
+
+def test_reassign_across_classes_reroutes_not_drops():
+    """A heterogeneous plan assigns roles class by class: when a tier
+    moves from class a to class b in one plan, class a's orphaned queue
+    must wait for class b's assignment and re-route there — not be
+    dropped because no worker held the tier mid-assignment."""
+    from repro.config.base import WorkerClass
+    from repro.core.milp import AllocationPlan
+
+    wcs = (WorkerClass("a", 1, 1.0), WorkerClass("b", 1, 1.0))
+    sv = default_serving("sdturbo", worker_classes=wcs)
+    plan = AllocationPlan(workers=(1, 1), batches=(1, 1),
+                          thresholds=(0.5,), expected_latency=1.0,
+                          feasible=True,
+                          class_workers=({"a": 1}, {"b": 1}))
+    sim = Simulator(sv, make_profile(sv, 0),
+                    SimConfig(seed=0, fixed_plan=plan))
+    sim.result.total = 2
+    w0, w1 = sim.workers[0], sim.workers[1]     # w0: class a, w1: class b
+    w0.role, w1.role = 1, 0                     # old plan: tier 1 on a
+    qs = [Query(qid=i, arrival=0.0, deadline=50.0, stage=1)
+          for i in range(2)]
+    w0.queue.extend(qs)
+    sim._apply_plan_now()                       # new plan: tier 1 on b
+    assert (w0.role, w1.role) == (0, 1)
+    assert sim.result.dropped == 0
+    assert all(q in w1.queue or q in w1.in_flight for q in qs)
+
+
+def test_recover_requeues_stale_work():
+    """A worker that fails and recovers within one control period (so the
+    heartbeat requeue, which only fires while dead, never ran) must
+    release its stale queue/in-flight work on recovery instead of
+    wedging forever behind a non-empty in_flight."""
+    sv = default_serving("sdturbo", num_workers=2)
+    sim = Simulator(sv, make_profile(sv, 0), SimConfig(seed=0))
+    sim.result.total = 2
+    w0, w1 = sim.workers[0], sim.workers[1]
+    w0.role = w1.role = 0
+    q1 = Query(qid=0, arrival=0.0, deadline=9.0)
+    q2 = Query(qid=1, arrival=0.0, deadline=9.0)
+    w0.in_flight = [q1]
+    w0.queue.append(q2)
+    sim._dispatch(sim.FAIL, (0, 0.5))
+    sim.now = 0.5
+    sim._dispatch(sim.RECOVER, 0)
+    assert w0.alive and not w0.in_flight and not w0.queue
+    assert sim.result.requeued_on_failure == 2
+    # both queries went to the live peer, none lost
+    assert all(q in w1.queue or q in w1.in_flight for q in (q1, q2))
+
+
+def test_fast_fail_recover_cycle_keeps_serving():
+    """End-to-end: fail/recover cycles shorter than the control period
+    must not wedge workers (conservation + healthy completion rate)."""
+    sv = default_serving("sdturbo", num_workers=2)
+    trace = static_trace(4.0, 60)
+    fails = tuple((7.0 + 9.0 * i, i % 2, 0.6) for i in range(5))
+    sim = Simulator(sv, make_profile(sv, 0),
+                    SimConfig(seed=0, failure_times=fails))
+    r = sim.run(trace)
+    assert r.completed + r.dropped == r.total
+    for w in sim.workers.values():
+        assert not w.in_flight        # nobody left permanently wedged
+    assert r.completed > 0.8 * r.total
+
+
+def test_cold_start_and_scale_up_pay_model_load():
+    """Any None -> role transition charges the model-load delay: the
+    initial plan (cold start) and workers joining via scale-up must not
+    start serving instantly."""
+    sv = default_serving("sdturbo", num_workers=4)
+    sim = Simulator(sv, make_profile(sv, 0), SimConfig(seed=0))
+    sim._apply_plan_now(first=True)
+    loaded = [w for w in sim.workers.values() if w.role is not None]
+    assert loaded
+    assert all(w.loading_until == sim.sim.model_load_s for w in loaded)
+
+    # scale-up: two fresh workers (role None) join two settled ones
+    sim2 = Simulator(sv, make_profile(sv, 0), SimConfig(seed=0))
+    sim2.now = 50.0
+    live = [sim2.workers[i] for i in range(4)]
+    live[0].role, live[1].role = 0, 1
+    sim2._assign_roles(live, [0, 1, 0, 1])
+    assert live[0].loading_until == 0.0       # kept role: no reload
+    assert live[1].loading_until == 0.0
+    assert live[2].loading_until == 50.0 + sim2.sim.model_load_s
+    assert live[3].loading_until == 50.0 + sim2.sim.model_load_s
+
+
+def test_hedge_excludes_straggler():
+    """A hedged re-dispatch must land on a peer, never back on the
+    straggling worker itself (which would double its queue)."""
+    sv = default_serving("sdturbo", num_workers=2)
+    sim = Simulator(sv, make_profile(sv, 0), SimConfig(seed=0))
+    sim.result.total = 5
+    w0, w1 = sim.workers[0], sim.workers[1]
+    w0.role = w1.role = 0
+    q = Query(qid=0, arrival=0.0, deadline=500.0)
+    w0.in_flight = [q]
+    w0.batch_role = 0
+    w0.batch_started = 0.0
+    # make the peer look *more* loaded, so least-loaded routing would
+    # otherwise pick the straggler itself
+    for i in range(1, 5):
+        w1.queue.append(Query(qid=i, arrival=0.0, deadline=500.0))
+    sim.now = 60.0                 # way past 2.5x the expected latency
+    sim._hedge_stragglers()
+    assert q.hedged and sim.result.hedged == 1
+    assert q not in w0.queue
+    assert q in w1.queue or q in w1.in_flight
+
+
+def test_hedge_without_peer_does_not_self_duplicate():
+    """With no peer of the same tier, the straggler keeps its batch —
+    no duplicate is parked back on its own queue."""
+    sv = default_serving("sdturbo", num_workers=1)
+    sim = Simulator(sv, make_profile(sv, 0), SimConfig(seed=0))
+    sim.result.total = 1
+    w0 = sim.workers[0]
+    w0.role = 0
+    q = Query(qid=0, arrival=0.0, deadline=500.0)
+    w0.in_flight = [q]
+    w0.batch_role = 0
+    w0.batch_started = 0.0
+    sim.now = 60.0
+    sim._hedge_stragglers()
+    assert not q.hedged and sim.result.hedged == 0
+    assert not w0.queue
+
+
+def test_predictive_drop_uses_deterministic_estimate():
+    """The predictive-drop deadline estimate must use the deterministic
+    expected latency: sampling the jittered execution latency would both
+    consume RNG per candidate and bake straggler jitter into the
+    estimate, spuriously dropping queries that fit their deadline."""
+    sv = default_serving("sdturbo", num_workers=1)
+    sim = Simulator(sv, make_profile(sv, 0),
+                    SimConfig(seed=0, straggler_prob=1.0,
+                              straggler_sigma=0.0, hedging=False))
+    sim.result.total = 1
+    w = sim.workers[0]
+    w.role = 0
+    w.batch_size = 1
+    # expected e(1) + disc = 0.11 s; 0.9x estimate fits the 0.25 s slack
+    # easily, while any 3-8x straggler draw would not
+    q = Query(qid=0, arrival=0.0, deadline=0.25)
+    w.queue.append(q)
+    sim._maybe_start(w)
+    assert sim.result.dropped == 0
+    assert w.in_flight == [q]
+
+
+def test_lifecycle_stress_conservation():
+    """Role reassignment under a moving plan + fast recoveries + elastic
+    scale events: completed + dropped == total must survive all of it."""
+    sv = default_serving("sdturbo", num_workers=6)
+    trace = azure_like_trace(150, seed=5).scale(2, 24)
+    fails = ((20.0, 0, 0.7), (21.0, 1, 30.0), (45.0, 2, 0.5),
+             (46.0, 0, 0.6), (70.0, 3, 12.0), (95.0, 4, 1.1))
+    sim = Simulator(sv, make_profile(sv, 0),
+                    SimConfig(seed=3, failure_times=fails,
+                              scale_events=((30.0, 4), (60.0, 6),
+                                            (90.0, 3), (110.0, 6))))
+    r = sim.run(trace)
+    assert r.completed + r.dropped == r.total
+    assert r.completed > 0.5 * r.total
 
 
 def test_poisson_failure_schedule():
