@@ -2,7 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV (derived = the figure's headline
 number) and writes per-figure row CSVs to experiments/benchmarks/.
+Figures run the comparison systems through the control-plane policy
+registry (serving/baselines.py:CONTROLLERS); ``--only`` selects a subset
+of figures by substring.
 """
+import argparse
 import csv
 import pathlib
 import time
@@ -12,9 +16,18 @@ OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "benchmarks"
 
 def main() -> None:
     from benchmarks.figures import ALL
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only figures whose name contains this")
+    args = ap.parse_args()
+    figures = {name: fn for name, fn in ALL.items()
+               if args.only is None or args.only in name}
+    if not figures:
+        raise SystemExit(f"no figure matches {args.only!r}; "
+                         f"known: {', '.join(ALL)}")
     OUT.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
-    for name, fn in ALL.items():
+    for name, fn in figures.items():
         t0 = time.perf_counter()
         rows, derived = fn()
         us = (time.perf_counter() - t0) * 1e6

@@ -7,9 +7,20 @@ Builds one toy UNet per tier of the chosen cascade, so 3-tier registries
 clusters split the workers into speed classes; the allocator plans over
 ``x[tier][class]`` and the report shows the per-class split.
 
+Two modes share one ControlPlane (serving/controlplane.py):
+
+  --mode sim      measured profiles feed the discrete-event simulator
+                  backend (default; the paper's own methodology)
+  --mode cluster  the ClusterBackend really executes every batch on the
+                  jitted stages: measured per-class profiles feed
+                  solve_heterogeneous_cascade re-planning every control
+                  tick, confidences come from the real discriminator
+
   PYTHONPATH=src python examples/serve_cascade.py
+  PYTHONPATH=src python examples/serve_cascade.py --mode cluster \
+      --cascade sdturbo --worker-classes a100:2:1.0,a10g:6:0.45
   PYTHONPATH=src python examples/serve_cascade.py \
-      --cascade sdxs3 --worker-classes a100:2:1.0,a10g:6:0.45
+      --cascade sdxs3 --controller diffserve --estimator sliding-window
 """
 import argparse
 import dataclasses
@@ -22,8 +33,10 @@ import numpy as np
 from repro.config.base import DiffusionConfig, as_cascade_spec
 from repro.core.cascade import DiffusionCascade
 from repro.models.unet import init_unet
-from repro.serving.baselines import make_profiles
-from repro.serving.cluster import ClusterRuntime
+from repro.serving.baselines import CONTROLLERS, assemble_bundle
+from repro.serving.cluster import (ClusterBackend, ClusterRuntime,
+                                   measured_worker_classes)
+from repro.serving.controlplane import ESTIMATORS
 from repro.serving.profiles import (CASCADES, class_costs_from_arg,
                                     default_serving, worker_classes_from_arg)
 from repro.serving.simulator import SimConfig, Simulator
@@ -31,6 +44,15 @@ from repro.serving.trace import azure_like_trace
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--cascade", default="sdturbo", choices=sorted(CASCADES))
+ap.add_argument("--mode", default="sim", choices=("sim", "cluster"),
+                help="sim: measured profiles drive the simulator backend; "
+                "cluster: the ClusterBackend really executes every batch")
+ap.add_argument("--controller", default="diffserve",
+                choices=sorted(CONTROLLERS),
+                help="control-plane policy bundle (serving/baselines.py)")
+ap.add_argument("--estimator", default=None, choices=sorted(ESTIMATORS),
+                help="demand estimator (default: the serving config's, "
+                "i.e. ewma)")
 ap.add_argument("--workers", type=int, default=8)
 ap.add_argument("--worker-classes", default=None,
                 help="name:count[:speed][@model=BASExMARG],... e.g. "
@@ -49,7 +71,9 @@ if args.cost_per_class and not wcs:
 costs = (class_costs_from_arg(args.cost_per_class)
          if args.cost_per_class else ())
 serving = default_serving(args.cascade, num_workers=args.workers,
-                          worker_classes=wcs, class_costs=costs)
+                          worker_classes=wcs, class_costs=costs,
+                          controller=args.controller,
+                          estimator=args.estimator or "ewma")
 spec = as_cascade_spec(serving.cascade)
 n_tiers = spec.num_tiers
 
@@ -83,21 +107,55 @@ tiers = tuple(dataclasses.replace(t, profile=prof[i])
 spec = dataclasses.replace(spec, tiers=tiers,
                            slo_s=max(10 * prof[-1].base_s, 1.0))
 serving = dataclasses.replace(serving, cascade=spec)
+if args.mode == "cluster" and wcs:
+    # measured per-class e(b) tables (once per class present in slices)
+    # replace the static GPU latency-scale table in the solver
+    class_profs = runtime.measure_class_profiles(batches=(1, 2))
+    serving = dataclasses.replace(
+        serving, worker_classes=measured_worker_classes(serving,
+                                                        class_profs))
+if args.mode == "cluster":
+    # every plan batch size must already be warm (measure_profile jitted
+    # b=1,2), so re-planning never stalls on a fresh XLA compile
+    serving = dataclasses.replace(serving, batch_choices=(1, 2))
+    runtime = ClusterRuntime(cascade, serving)
+
 # capacity in speed-weighted worker-equivalents (a10g:0.45 is not an a100)
 worker_eq = (sum(wc.count * wc.speed for wc in wcs) if wcs
              else serving.num_workers)
 cap = worker_eq / prof[0].base_s * 0.25
 trace = azure_like_trace(args.duration, seed=2).scale(max(cap / 8, 0.5),
                                                       max(cap, 1.0))
-sim = Simulator(serving, make_profiles(serving, 0),
-                SimConfig(seed=0, router="discriminator"),
-                confidence_fn=lambda n: np.asarray(cascade.confidence(
-                    jnp.asarray(np.random.default_rng(0).normal(
-                        size=(n, 16, 16, 3)).astype(np.float32)))))
-r = sim.run(trace)
+
+# one shared assembly path with run_controller: bundle fields (fixed
+# plan, allocator ablation mode, random-confidence RNG) cannot drift
+bundle, profiles, fixed, control, bundle_conf = assemble_bundle(
+    args.controller, trace, serving, seed=0, estimator=args.estimator)
+# query-agnostic bundles (Proteus) route on the bundle's random
+# confidences; the others score with the really-trained discriminator
+real_conf = lambda n: np.asarray(cascade.confidence(     # noqa: E731
+    jnp.asarray(np.random.default_rng(0).normal(
+        size=(n, 16, 16, 3)).astype(np.float32))))
+
+if args.mode == "cluster":
+    backend = ClusterBackend(
+        runtime, serving, profiles, seed=0, router=bundle.router,
+        arrival_stage=bundle.arrival_stage, confidence_fn=bundle_conf)
+    r = backend.serve(control, trace)
+else:
+    sim = Simulator(serving, profiles,
+                    SimConfig(seed=0, router=bundle.router,
+                              arrival_stage=bundle.arrival_stage,
+                              fixed_plan=fixed),
+                    control=control,
+                    confidence_fn=bundle_conf or real_conf)
+    r = sim.run(trace)
 
 report = {
+    "mode": args.mode,
     "cascade": args.cascade,
+    "controller": args.controller,
+    "estimator": args.estimator or serving.estimator,
     "tiers": [t.model for t in spec.tiers],
     "workers": serving.num_workers,
     "served": r.completed, "total": r.total,
@@ -110,6 +168,18 @@ if wcs:
                                           "speed": wc.speed} for wc in wcs}
     report["workers_by_class"] = r.workers_by_class
     report["class_mean_batch_latency_s"] = r.class_latency_summary()
+if args.mode == "cluster":
+    if wcs:
+        report["measured_class_scales"] = {
+            wc.name: {m: [round(sc.base, 3), round(sc.marginal, 3)]
+                      for m, sc in wc.profiles}
+            for wc in serving.worker_classes}
+    plans = backend.plan_timeline
+    report["control_ticks"] = len(plans)
+    report["distinct_plans"] = len({p[1:] for p in plans})
+    report["plan_timeline_head"] = [
+        {"t": round(t, 1), "workers": list(w), "batches": list(b)}
+        for t, w, b in plans[:8]]
 if costs and r.plan_cost_timeline:
     report["mean_cost_per_hour"] = round(r.mean_plan_cost_per_hour, 3)
 print(json.dumps(report, indent=1))

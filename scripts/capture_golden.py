@@ -1,0 +1,69 @@
+"""Capture seeded golden SimResult fields for the control-plane
+golden-equivalence suite (tests/test_controlplane.py).
+
+Run against the pre-refactor monolith to produce the GOLDEN dict, and
+re-run after any intentional behavior change to refresh it:
+
+    PYTHONPATH=src python scripts/capture_golden.py
+"""
+from __future__ import annotations
+
+import pprint
+
+from repro.config.base import WorkerClass
+from repro.serving.baselines import run_ablation, run_baseline
+from repro.serving.profiles import default_serving
+from repro.serving.simulator import SimConfig, Simulator
+from repro.serving.trace import azure_like_trace, static_trace
+from repro.testing.golden import sim_fingerprint as fingerprint
+
+
+def main():
+    golden = {}
+
+    # homogeneous DiffServe on a bursty trace
+    sv = default_serving("sdturbo", num_workers=16)
+    tr = azure_like_trace(120, seed=3).scale(4, 32)
+    golden["homogeneous"] = fingerprint(
+        run_baseline("diffserve", tr, sv, seed=0))
+
+    # heterogeneous DiffServe (per-class latency profiles in the solver)
+    wcs = (WorkerClass("a100", 2, 1.0), WorkerClass("a10g", 6, 0.45))
+    sv_het = default_serving("sdturbo", worker_classes=wcs)
+    tr_het = azure_like_trace(90, seed=5).scale(2, 16)
+    golden["heterogeneous"] = fingerprint(
+        run_baseline("diffserve", tr_het, sv_het, seed=1))
+
+    # fault injection: heartbeat detection + requeue under the control loop
+    tr_f = static_trace(10.0, 90)
+    sim = Simulator(sv, _profiles(sv),
+                    SimConfig(seed=0, failure_times=((20.0, 0, 25.0),
+                                                     (25.0, 1, 30.0))))
+    golden["fault_injection"] = fingerprint(sim.run(tr_f))
+
+    # fixed-plan / static baselines (never re-plan)
+    tr_b = azure_like_trace(90, seed=3).scale(4, 24)
+    for name in ("clipper-light", "clipper-heavy", "diffserve-static",
+                 "proteus"):
+        golden[name] = fingerprint(run_baseline(name, tr_b, sv, seed=0))
+
+    # allocator ablation (AllocatorOptions mode through the planner)
+    golden["static_threshold"] = fingerprint(
+        run_ablation("static_threshold", tr_b, sv, seed=0))
+
+    # 3-tier cascade (multi-boundary thresholds)
+    sv3 = default_serving("sdxs3", num_workers=12)
+    golden["three_tier"] = fingerprint(
+        run_baseline("diffserve", azure_like_trace(90, seed=7).scale(3, 20),
+                     sv3, seed=2))
+
+    pprint.pprint(golden, width=76, sort_dicts=True)
+
+
+def _profiles(sv):
+    from repro.serving.baselines import make_profiles
+    return make_profiles(sv, 0)
+
+
+if __name__ == "__main__":
+    main()

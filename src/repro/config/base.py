@@ -557,6 +557,12 @@ class ServingConfig:
     # optional $/hour per worker class: when set, the heterogeneous
     # solver breaks threshold ties by dollar cost instead of worker count
     class_costs: Tuple[Tuple[str, float], ...] = ()
+    # control-plane policy bundle + demand-estimator registry names
+    # (serving/baselines.py:CONTROLLERS, serving/controlplane.py:
+    # ESTIMATORS); resolved at ControlPlane build time, so configs stay
+    # pure data
+    controller: str = "diffserve"
+    estimator: str = "ewma"
 
     def __post_init__(self):
         if self.class_costs and not self.worker_classes:

@@ -69,7 +69,14 @@ class ResourceManager:
 
     # ------------------------------------------------------------------
     def plan(self, telemetry: Telemetry) -> AllocationPlan:
+        """Legacy entry point: estimate demand internally, then solve.
+        The control plane instead owns estimation (a ``DemandEstimator``
+        policy) and calls ``plan_for_demand`` directly."""
         demand = self.estimate_demand(telemetry.demand_qps)
+        return self.plan_for_demand(telemetry, demand)
+
+    def plan_for_demand(self, telemetry: Telemetry,
+                        demand: float) -> AllocationPlan:
         opts = self.options
         if self.serving.worker_classes:
             solver = solve_heterogeneous_cascade

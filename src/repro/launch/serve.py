@@ -19,7 +19,9 @@ import pathlib
 
 import numpy as np
 
-from repro.serving.baselines import BASELINES, run_baseline
+from repro.serving.baselines import (BASELINES, CONTROLLERS,
+                                     list_controllers, run_controller)
+from repro.serving.controlplane import ESTIMATORS
 from repro.serving.profiles import (CASCADES, class_costs_from_arg,
                                     default_serving, list_cascades,
                                     worker_classes_from_arg)
@@ -31,8 +33,17 @@ def main():
     ap.add_argument("--cascade", default="sdturbo", choices=sorted(CASCADES))
     ap.add_argument("--list-cascades", action="store_true",
                     help="print the registered cascades and exit")
+    ap.add_argument("--list-controllers", action="store_true",
+                    help="print the control-plane policy bundles and exit")
     ap.add_argument("--baseline", default="diffserve",
                     choices=list(BASELINES))
+    ap.add_argument("--controller", default=None,
+                    choices=sorted(CONTROLLERS),
+                    help="control-plane policy bundle (supersedes "
+                    "--baseline; also covers the §4.5 ablations)")
+    ap.add_argument("--estimator", default=None,
+                    choices=sorted(ESTIMATORS),
+                    help="demand estimator policy (default ewma)")
     ap.add_argument("--workers", type=int, default=16)
     ap.add_argument("--worker-classes", default=None,
                     help="heterogeneous cluster as "
@@ -61,6 +72,12 @@ def main():
             print(f"{name:10s} {chain:40s} {slo:5.1f}s")
         return
 
+    if args.list_controllers:
+        print(f"{'name':18s} description")
+        for name, desc in list_controllers():
+            print(f"{name:18s} {desc}")
+        return
+
     if args.trace_file:
         trace = load_trace_file(args.trace_file)
     elif args.static_qps is not None:
@@ -76,15 +93,20 @@ def main():
         ap.error("--cost-per-class requires --worker-classes")
     costs = (class_costs_from_arg(args.cost_per_class)
              if args.cost_per_class else ())
+    controller = args.controller or args.baseline
     serving = default_serving(args.cascade, num_workers=args.workers,
-                              worker_classes=wcs, class_costs=costs)
+                              worker_classes=wcs, class_costs=costs,
+                              controller=controller,
+                              estimator=args.estimator or "ewma")
     spec = serving.cascade
-    r = run_baseline(args.baseline, trace, serving, seed=args.seed)
+    r = run_controller(controller, trace, serving, seed=args.seed,
+                       estimator=args.estimator)
 
     report = {
         "cascade": args.cascade,
         "tiers": [t.model for t in spec.tiers],
-        "baseline": args.baseline,
+        "controller": controller,
+        "estimator": args.estimator or serving.estimator,
         "workers": serving.num_workers, "trace": trace.name,
         "total_queries": r.total, "completed": r.completed,
         "dropped": r.dropped, "slo_violation_ratio": round(r.violation_ratio, 4),

@@ -5,19 +5,37 @@ On real hardware each worker is a ``worker_tp_size``-chip slice of the
 CPU container the same code runs with 1 device and toy models — the point
 is the interface and the measured-profile path (``measure_profile`` builds
 per-tier e(b) tables by timing the real jitted cascade stages, replacing
-the paper's offline A100 profiling).
+the paper's offline A100 profiling; ``measure_class_profiles`` does it
+once per distinct worker class so heterogeneous clusters plan from
+measured per-class tables instead of the static GPU table).
+
+``ClusterBackend`` implements the control plane's ``ExecutorBackend``
+protocol (serving/controlplane.py) over a ``ClusterRuntime``: the same
+``ControlPlane`` that drives the simulator re-plans here every control
+period from live telemetry, while execution latencies are the measured
+wall times of the real jitted stages and confidences come from the real
+discriminator on the real tier outputs.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from typing import List, Optional
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.config.base import LatencyProfile, ServingConfig, WorkerClass
+from repro.config.base import (LatencyProfile, LatencyScale, ServingConfig,
+                               WorkerClass, as_cascade_spec)
 from repro.core.cascade import DiffusionCascade
+from repro.core.confidence import as_boundary_profiles
+from repro.core.milp import Telemetry
+from repro.serving.controlplane import (Census, ControlDecision,
+                                        ControlPlane, windowed_telemetry)
+from repro.serving.simulator import Query, SimResult
 
 
 @dataclasses.dataclass
@@ -46,7 +64,8 @@ class ClusterRuntime:
     def __init__(self, cascade: DiffusionCascade, serving: ServingConfig):
         self.cascade = cascade
         self.serving = serving
-        n = len(jax.devices())
+        devs = jax.devices()
+        n = len(devs)
         tp = max(serving.worker_tp_size, 1)
         # heterogeneous clusters: wid order follows the declared class
         # order, matching the simulator's worker numbering
@@ -54,39 +73,103 @@ class ClusterRuntime:
         for wc in serving.worker_classes:
             class_of += [wc] * wc.count
         class_of += [None] * (serving.num_workers - len(class_of))
+        # modular wrap: every slice gets exactly tp devices even when the
+        # window passes the end of the device list (a plain
+        # devs[o:o+tp] silently came up short there)
         self.slices: List[WorkerSlice] = [
             WorkerSlice(wid=i,
-                        devices=tuple(jax.devices()[(i * tp) % n:
-                                                    (i * tp) % n + tp]),
+                        devices=tuple(devs[(i * tp + j) % n]
+                                      for j in range(tp)),
                         class_name=class_of[i].name if class_of[i] else "",
                         speed=class_of[i].speed if class_of[i] else 1.0,
                         wc=class_of[i])
             for i in range(serving.num_workers)]
 
+    def class_devices(self, class_name: str) -> tuple:
+        """Devices backing the first slice of a worker class (profile
+        measurement runs there)."""
+        for sl in self.slices:
+            if sl.class_name == class_name:
+                return sl.devices
+        return ()
+
     def measure_profile(self, batches=(1, 2, 4), prompt_len: int = 8,
-                        repeats: int = 2) -> List[LatencyProfile]:
+                        repeats: int = 2,
+                        devices: tuple = ()) -> List[LatencyProfile]:
         """Time each real cascade stage → per-tier LatencyProfile fits
-        (tier order matches ``cascade.stages``)."""
+        (tier order matches ``cascade.stages``). ``devices`` pins the
+        measurement to a particular slice's hardware (per-class tables)."""
+        ctx = (jax.default_device(devices[0]) if devices
+               else contextlib.nullcontext())
         out = []
-        for cfg, fn, params in self.cascade.stage_fns():
-            ts = []
-            for b in batches:
-                toks = jnp.zeros((b, prompt_len), jnp.int32)
-                key = jax.random.PRNGKey(0)
-                fn(params, key, toks).block_until_ready()   # compile warmup
-                best = min(_time_call(fn, params, key, toks)
-                           for _ in range(repeats))
-                ts.append((b, best))
-            base = ts[0][1]
-            if len(ts) > 1:
-                marg = max((ts[-1][1] - base) / (ts[-1][0] - 1), 1e-4)
+        with ctx:
+            for cfg, fn, params in self.cascade.stage_fns():
+                ts = []
+                for b in batches:
+                    toks = jnp.zeros((b, prompt_len), jnp.int32)
+                    key = jax.random.PRNGKey(0)
+                    fn(params, key, toks).block_until_ready()  # compile warm
+                    best = min(_time_call(fn, params, key, toks)
+                               for _ in range(repeats))
+                    ts.append((b, best))
+                base = ts[0][1]
+                if len(ts) > 1:
+                    marg = max((ts[-1][1] - base) / (ts[-1][0] - 1), 1e-4)
+                else:
+                    marg = base * 0.5
+                out.append(LatencyProfile(base_s=base, marginal_s=marg))
+        return out
+
+    def measure_class_profiles(self, batches=(1, 2, 4), prompt_len: int = 8,
+                               repeats: int = 2
+                               ) -> Dict[str, List[LatencyProfile]]:
+        """Measured per-class e(b) tables: ``measure_profile`` once per
+        distinct worker class present in ``slices``, on that class's
+        devices. A declared class with no slice cannot be measured and
+        falls back to its static latency scales over the spec's reference
+        profiles (``wc.tier_profile``). Homogeneous clusters get a single
+        ``""`` entry."""
+        spec = as_cascade_spec(self.serving.cascade)
+        if not self.serving.worker_classes:
+            return {"": self.measure_profile(batches, prompt_len, repeats)}
+        present = {sl.class_name for sl in self.slices}
+        out: Dict[str, List[LatencyProfile]] = {}
+        for wc in self.serving.worker_classes:
+            if wc.name in present:
+                out[wc.name] = self.measure_profile(
+                    batches, prompt_len, repeats,
+                    devices=self.class_devices(wc.name))
             else:
-                marg = base * 0.5
-            out.append(LatencyProfile(base_s=base, marginal_s=marg))
+                out[wc.name] = [wc.tier_profile(t) for t in spec.tiers]
         return out
 
     def serve_batch(self, key, prompt_tokens, thresholds):
         return self.cascade.run_batch(key, prompt_tokens, thresholds)
+
+
+def measured_worker_classes(serving: ServingConfig,
+                            class_profiles: Dict[str, List[LatencyProfile]]
+                            ) -> Tuple[WorkerClass, ...]:
+    """Rewrite each worker class's per-model latency scales from measured
+    per-class e(b) tables (``measure_class_profiles`` output), so the
+    heterogeneous solver plans from measurements instead of the static
+    GPU table. Scales are measured/reference ratios against the spec's
+    tier profiles."""
+    spec = as_cascade_spec(serving.cascade)
+    out = []
+    for wc in serving.worker_classes:
+        profs = class_profiles[wc.name]
+        overrides, seen = [], set()
+        for tier, mp in zip(spec.tiers, profs):
+            if tier.model in seen:
+                continue
+            seen.add(tier.model)
+            overrides.append((tier.model, LatencyScale(
+                base=max(mp.base_s, 1e-9) / max(tier.profile.base_s, 1e-9),
+                marginal=max(mp.marginal_s, 1e-9)
+                / max(tier.profile.marginal_s, 1e-9))))
+        out.append(dataclasses.replace(wc, profiles=tuple(overrides)))
+    return tuple(out)
 
 
 def _time_call(fn, *args):
@@ -95,3 +178,328 @@ def _time_call(fn, *args):
     jax.tree.map(lambda x: x.block_until_ready()
                  if hasattr(x, "block_until_ready") else x, out)
     return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# The cluster executor backend
+# ---------------------------------------------------------------------------
+class ClusterBackend:
+    """``ExecutorBackend`` over a ``ClusterRuntime``.
+
+    Virtual-clock executor over real execution: arrivals replay a trace
+    in simulated time, but each batch actually runs the jitted cascade
+    stage (its measured wall time is the batch's service time) and each
+    boundary scores real outputs with the real discriminator. Per-tier
+    FIFO queues feed the slices the current plan assigned to each tier;
+    backlog left at a control-period boundary shows up in the telemetry
+    the ControlPlane re-plans from.
+    """
+
+    def __init__(self, runtime: ClusterRuntime, serving: ServingConfig,
+                 profiles, *, seed: int = 0, prompt_len: int = 8,
+                 model_load_s: float = 2.0, router: str = "discriminator",
+                 arrival_stage: int = 0, quality_window_s: float = 30.0,
+                 confidence_fn=None):
+        # model_load_s matches SimConfig's default so cross-backend
+        # comparisons charge role-switch reloads identically
+        self.runtime = runtime
+        self.serving = serving
+        self.router = router              # quality-model skill for FID*
+        self.arrival_stage = arrival_stage   # Clipper-Heavy enters at -1
+        self.quality_window_s = quality_window_s
+        # query-agnostic bundles (Proteus) override the real
+        # discriminator: f(n, boundary) -> confidences
+        self.confidence_fn = confidence_fn
+        self.spec = as_cascade_spec(serving.cascade)
+        self.num_tiers = self.spec.num_tiers
+        self.profiles = as_boundary_profiles(profiles,
+                                             self.spec.num_boundaries)
+        self.prompt_len = prompt_len
+        self.model_load_s = model_load_s
+        self.rng = np.random.default_rng(seed)
+        self._key = jax.random.PRNGKey(seed)
+        self.now = 0.0
+        self.thresholds: Tuple[float, ...] = \
+            (0.8,) * self.spec.num_boundaries
+        self.batches: Tuple[int, ...] = (1,) * self.num_tiers
+        self.queues: List[deque] = [deque() for _ in range(self.num_tiers)]
+        self.busy_until: Dict[int, float] = {sl.wid: 0.0
+                                             for sl in runtime.slices}
+        self._arrivals_window: deque = deque()
+        self._recent_depth: deque = deque()
+        self._stage_fns = runtime.cascade.stage_fns()
+        self.result = SimResult(
+            completed_per_tier=[0] * self.num_tiers,
+            tier_processed=[0] * self.num_tiers,
+            deferred_per_boundary=[0] * self.spec.num_boundaries,
+            workers_by_class={wc.name: wc.count
+                              for wc in serving.worker_classes})
+        # (t, per-tier workers, per-tier batches) of each applied plan —
+        # the live re-planning record cluster mode demonstrates
+        self.plan_timeline: List[Tuple[float, Tuple[int, ...],
+                                       Tuple[int, ...]]] = []
+
+    # ---------------- ExecutorBackend protocol ------------------------
+    def census(self) -> Census:
+        by_class: Dict[str, int] = {}
+        for sl in self.runtime.slices:
+            if sl.class_name:
+                by_class[sl.class_name] = by_class.get(sl.class_name, 0) + 1
+        return Census(now=self.now, active_slots=len(self.runtime.slices),
+                      live_workers=len(self.runtime.slices),
+                      live_by_class=tuple(sorted(by_class.items())))
+
+    def telemetry_window(self) -> Telemetry:
+        return windowed_telemetry(self.now, self.serving.control_period_s,
+                                  self._arrivals_window,
+                                  tuple(float(len(q)) for q in self.queues),
+                                  self.profiles, self.thresholds,
+                                  self.census())
+
+    def detect_faults(self) -> None:
+        """Slices have no failure injection (yet): heartbeat sweep is a
+        no-op in cluster mode."""
+
+    def submit(self, queries: Sequence[Query]) -> None:
+        for q in queries:
+            self.result.total += 1
+            self._arrivals_window.append(q.arrival)
+            q.stage = q.stage % self.num_tiers
+            q.enqueued_at = q.arrival
+            self.queues[q.stage].append(q)
+
+    def poll(self) -> SimResult:
+        return self.result
+
+    def apply_plan(self, decision: ControlDecision) -> None:
+        plan = decision.plan
+        self.thresholds = tuple(decision.thresholds)
+        self.result.record_decision(self.now, decision)
+        self.batches = tuple(plan.batches)
+        class_workers = getattr(plan, "class_workers", None)
+        if class_workers is not None and self.serving.worker_classes:
+            for wc in self.serving.worker_classes:
+                group = [sl for sl in self.runtime.slices
+                         if sl.class_name == wc.name]
+                want = [i for i, alloc in enumerate(class_workers)
+                        for _ in range(alloc.get(wc.name, 0))]
+                self._assign_group(group, want)
+        else:
+            want = [i for i, n in enumerate(plan.workers)
+                    for _ in range(n)]
+            self._assign_group(list(self.runtime.slices), want)
+        self.plan_timeline.append((self.now, tuple(plan.workers),
+                                   tuple(plan.batches)))
+
+    def _assign_group(self, group: List[WorkerSlice],
+                      want: List[Optional[int]]) -> None:
+        """Stable role matching (keep matching roles to avoid reload
+        churn); a role switch charges ``model_load_s`` to the slice's
+        virtual clock. Queues are per-tier, so reassignment strands no
+        work."""
+        want = list(want) + [None] * max(len(group) - len(want), 0)
+        remaining = list(want)
+        unassigned = []
+        for sl in group:
+            if sl.role in remaining:
+                remaining.remove(sl.role)
+            else:
+                unassigned.append(sl)
+        for sl, role in zip(unassigned, remaining):
+            if role is not None and sl.role != role and self.model_load_s:
+                self.busy_until[sl.wid] = (
+                    max(self.busy_until[sl.wid], self.now)
+                    + self.model_load_s)
+            sl.role = role
+
+    # ---------------- execution ---------------------------------------
+    def _run_stage(self, sl: WorkerSlice, tier: int,
+                   batch_n: int) -> Tuple[float, np.ndarray]:
+        """Really execute tier ``tier`` for a batch of ``batch_n`` on the
+        slice's own devices (so per-class wall times match the per-class
+        measured profiles the planner uses): returns (measured wall
+        seconds, outputs)."""
+        cfg, fn, params = self._stage_fns[tier]
+        toks = jnp.zeros((batch_n, self.prompt_len), jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        ctx = (jax.default_device(sl.devices[0]) if sl.devices
+               else contextlib.nullcontext())
+        with ctx:
+            t0 = time.perf_counter()
+            imgs = fn(params, k, toks)
+            imgs.block_until_ready()
+            return time.perf_counter() - t0, imgs
+
+    def _drain(self, t_end: float) -> None:
+        """Run batches on every slice whose virtual clock is inside the
+        period; deferred queries may hop tiers within the same period
+        when downstream slices still have clock budget."""
+        progress = True
+        while progress:
+            progress = False
+            for tier in range(self.num_tiers):
+                if not self.queues[tier]:
+                    continue
+                slices = sorted((sl for sl in self.runtime.slices
+                                 if sl.role == tier),
+                                key=lambda sl: self.busy_until[sl.wid])
+                for sl in slices:
+                    if not self.queues[tier]:
+                        break
+                    if self.busy_until[sl.wid] >= t_end:
+                        continue
+                    if self._run_batch_on(sl, tier, t_end):
+                        progress = True
+
+    def _run_batch_on(self, sl: WorkerSlice, tier: int,
+                      t_end: float) -> bool:
+        q = self.queues[tier]
+        cap = max(self.batches[tier], 1)
+        # take ready queries (arrived/deferred by t_end) without letting
+        # a not-yet-ready head block them: deferrals from concurrent
+        # slices land in non-monotonic enqueued_at order
+        batch: List[Query] = []
+        not_ready: List[Query] = []
+        while q and len(batch) < cap:
+            qq = q.popleft()
+            (batch if qq.enqueued_at <= t_end else not_ready).append(qq)
+        for qq in reversed(not_ready):
+            q.appendleft(qq)
+        if not batch:
+            return False
+        start = max(self.busy_until[sl.wid],
+                    max(b.enqueued_at for b in batch))
+        wall, imgs = self._run_stage(sl, tier, len(batch))
+        done_t = start + wall
+        self.busy_until[sl.wid] = done_t
+        if sl.class_name:
+            self.result.class_batch_latencies.setdefault(
+                sl.class_name, []).append((len(batch), wall))
+        if tier < self.num_tiers - 1:
+            confs = (self.confidence_fn(len(batch), tier)
+                     if self.confidence_fn is not None
+                     else self.runtime.cascade.confidence(imgs))
+            fresh = []
+            for qq, c in zip(batch, confs):
+                qq.confidence = float(c)
+                self.result.tier_processed[tier] += 1
+                if c < self.thresholds[tier]:
+                    qq.stage = tier + 1
+                    qq.deferred = True
+                    qq.enqueued_at = done_t
+                    self.result.deferred_per_boundary[tier] += 1
+                    self.queues[tier + 1].append(qq)
+                else:
+                    self._complete(qq, done_t)
+                fresh.append(float(c))
+            if fresh:
+                self.profiles[tier].update(fresh)   # online f(t) refresh
+        else:
+            for qq in batch:
+                self.result.tier_processed[tier] += 1
+                self._complete(qq, done_t)
+        return True
+
+    def _complete(self, q: Query, done_t: float) -> None:
+        q.done_at = done_t
+        self.result.completed += 1
+        self.result.completed_per_tier[q.stage] += 1
+        self.result.latencies.append(done_t - q.arrival)
+        if done_t > q.deadline:
+            self.result.violations += 1
+        if q.deferred:
+            self.result.deferred += 1
+        depth = q.stage / max(self.num_tiers - 1, 1)
+        self._recent_depth.append((done_t, depth))
+
+    # ---------------- the serve loop ----------------------------------
+    def serve(self, control: ControlPlane, trace,
+              quality_model=None) -> SimResult:
+        """Replay ``trace`` under ``control``: one tick per control
+        period, real execution in between — the full DiffServe loop
+        (estimate → solve → thresholds → enact) against measured
+        profiles."""
+        from repro.core.quality import QualityModel
+        quality = quality_model or QualityModel.from_cascade(self.spec)
+        arrivals = trace.arrivals(self.rng)
+        stage = self.arrival_stage % self.num_tiers
+        pending = deque(
+            Query(qid=i, arrival=float(t),
+                  deadline=float(t) + self.spec.slo_s,
+                  stage=stage, deferred=stage > 0)
+            for i, t in enumerate(arrivals))
+        control.tick(self, first=True)
+        period = self.serving.control_period_s
+        end_t = trace.duration_s + 4 * self.spec.slo_s
+        t = 0.0
+        while t < end_t:
+            t_end = t + period
+            batch = []
+            while pending and pending[0].arrival < t_end:
+                batch.append(pending.popleft())
+            self.submit(batch)
+            self.now = t_end
+            self._prune_window()
+            control.tick(self)
+            self._drain(t_end)
+            self._record_quality(quality, t_end)
+            t = t_end
+            if (not pending and not any(self.queues)):
+                break
+        # grace drain to exhaustion past the horizon (the simulator
+        # backend drains its event queue the same way). Each pass opens
+        # the window past every slice clock and every deferral time, so
+        # backlogged-but-servable work always progresses (a batch wall
+        # time above the control period must not read as a stall); only
+        # queues whose tier no slice holds are left over, dropped as
+        # violations
+        t_grace = end_t
+        while any(self.queues):
+            servable = any(
+                q and any(sl.role == tier for sl in self.runtime.slices)
+                for tier, q in enumerate(self.queues))
+            if not servable:
+                break
+            horizon = max(
+                max(self.busy_until.values(), default=t_grace),
+                max(qq.enqueued_at for q in self.queues for qq in q))
+            t_grace = max(t_grace, horizon) + period
+            before = self._progress_state()
+            self._drain(t_grace)
+            if self._progress_state() == before:
+                break              # safety valve against unforeseen stalls
+        for q in [qq for queue in self.queues for qq in queue]:
+            q.dropped = True
+            self.result.dropped += 1
+            self.result.violations += 1
+        for queue in self.queues:
+            queue.clear()
+        return self.result
+
+    def _progress_state(self):
+        """Drain-progress fingerprint: completions, backlog size, and
+        cascade depth all count (a pass that only defers queries deeper
+        is progress — they complete on a later pass)."""
+        return (self.result.completed,
+                sum(len(q) for q in self.queues),
+                sum(qq.stage for q in self.queues for qq in q))
+
+    def _prune_window(self):
+        """Bound the arrival window even when the planner never reads
+        telemetry (fixed-plan bundles): one control period of history is
+        all any consumer uses."""
+        horizon = self.now - self.serving.control_period_s
+        while self._arrivals_window and self._arrivals_window[0] < horizon:
+            self._arrivals_window.popleft()
+
+    def _record_quality(self, quality, t_end: float) -> None:
+        horizon = t_end - self.quality_window_s
+        while self._recent_depth and self._recent_depth[0][0] < horizon:
+            self._recent_depth.popleft()
+        if self._recent_depth:
+            p = float(np.mean([d for _, d in self._recent_depth]))
+            self.result.fid_timeline.append(
+                (t_end, quality.fid(p, self.router)))
+        done = max(self.result.completed + self.result.dropped, 1)
+        self.result.violation_timeline.append(
+            (t_end, self.result.violations / done))

@@ -4,9 +4,10 @@
   in-flight work, stats, RNG, deferral profile) with atomic writes; a
   restored run continues deterministically (property-tested).
 * ``FailureInjector`` — Poisson worker failures with repair times.
-* Failure *detection* is heartbeat-based in the controller (see
-  simulator._check_heartbeats); recovery re-enqueues lost queries and
-  re-solves the MILP with the reduced worker count.
+* Failure *detection* is heartbeat-based in the control plane (the
+  ScalingPolicy calls ``Simulator.detect_faults`` at tick start);
+  recovery re-enqueues lost queries and re-solves the MILP with the
+  reduced worker count.
 """
 from __future__ import annotations
 
@@ -34,7 +35,7 @@ def snapshot(sim: Simulator, path: str) -> None:
         "active_S": sim._active_S,
         "rng_state": sim.rng.bit_generator.state,
         "profile_scores": [list(p._scores) for p in sim.profiles],
-        "rm_demand": sim.rm._demand_ewma,
+        "control": sim.control.state_dict(),
     }
     d = os.path.dirname(os.path.abspath(path)) or "."
     os.makedirs(d, exist_ok=True)
@@ -65,7 +66,7 @@ def restore(sim: Simulator, path: str) -> Simulator:
     sim.rng.bit_generator.state = state["rng_state"]
     for p, scores in zip(sim.profiles, state["profile_scores"]):
         p._scores = scores
-    sim.rm._demand_ewma = state["rm_demand"]
+    sim.control.load_state(state["control"])
     return sim
 
 

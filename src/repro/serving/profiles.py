@@ -135,7 +135,13 @@ def list_cascades() -> List[Tuple[str, str, float, int]]:
 def default_serving(cascade: str = "sdturbo", num_workers: int = 16,
                     **kw) -> ServingConfig:
     """ServingConfig for a registered cascade. When ``worker_classes`` is
-    given, ``num_workers`` is derived from the class counts."""
+    given, ``num_workers`` is derived from the class counts.
+
+    ``controller`` / ``estimator`` kwargs select the control-plane policy
+    bundle and demand estimator by registry name
+    (serving/baselines.py:CONTROLLERS, serving/controlplane.py:ESTIMATORS)
+    — stored as plain strings so configs stay pure data and are resolved
+    when a ControlPlane is built."""
     wcs = kw.get("worker_classes") or ()
     if wcs:
         num_workers = sum(wc.count for wc in wcs)

@@ -12,6 +12,11 @@ defers it one tier deeper.
 
 Confidence scores come from the calibrated per-boundary DeferralProfiles
 (sim mode) or a real cascade (cluster mode via serving/cluster.py).
+
+The controller itself lives in serving/controlplane.py: the simulator is
+one ``ExecutorBackend`` (census / telemetry_window / apply_plan /
+detect_faults / submit / poll), and its control tick is a
+``ControlPlane.tick`` call.
 """
 from __future__ import annotations
 
@@ -21,7 +26,7 @@ import inspect
 import itertools
 import math
 from collections import deque
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -29,12 +34,12 @@ from repro.config.base import (LatencyProfile, ServingConfig,
                                as_cascade_spec)
 from repro.core.allocator import AllocatorOptions, ResourceManager
 from repro.core.confidence import DeferralProfile, as_boundary_profiles
-from repro.core.milp import Telemetry
+from repro.core.milp import AllocationPlan, Telemetry
 from repro.core.quality import QualityModel
+from repro.serving.controlplane import (Census, ControlDecision,
+                                        ControlPlane, build_control_plane,
+                                        windowed_telemetry)
 from repro.serving.trace import Trace
-
-# Tier-index aliases: tier 0 is the lightest model, -1 the final (heaviest).
-LIGHT, HEAVY = 0, -1
 
 
 @dataclasses.dataclass
@@ -81,8 +86,10 @@ class SimConfig:
     #   (t_fail, worker_id, repair_duration_s)
     hedging: bool = True
     scale_events: Tuple[Tuple[float, int], ...] = ()   # (t, new_S) elastic
-    arrival_stage: int = LIGHT        # Clipper-Heavy sends straight to -1
-    fixed_plan: Optional[object] = None   # static baselines: never re-plan
+    arrival_stage: int = 0            # Clipper-Heavy sends straight to -1
+    # static baselines: never re-plan (wrapped as a FixedPlanPolicy when
+    # the simulator builds its default control plane)
+    fixed_plan: Optional[AllocationPlan] = None
 
 
 @dataclasses.dataclass
@@ -147,6 +154,17 @@ class SimResult:
                 for cls, v in sorted(self.class_batch_latencies.items())
                 if v}
 
+    def record_decision(self, now: float, decision) -> None:
+        """Log one control decision (shared by every backend so the
+        decision timelines cannot diverge across backends)."""
+        plan = decision.plan
+        self.solve_ms.append(plan.solve_ms)
+        self.threshold_timeline.append(
+            (now, decision.thresholds[0] if decision.thresholds else 1.0))
+        self.thresholds_timeline.append((now, tuple(decision.thresholds)))
+        if getattr(plan, "cost", None) is not None:
+            self.plan_cost_timeline.append((now, plan.cost))
+
 
 def _per_boundary_fn(fn: Optional[Callable]) -> Optional[Callable]:
     """Wrap a confidence callable so it is always called as f(n, boundary);
@@ -169,7 +187,8 @@ class Simulator:
                  Optional[SimConfig] = None,
                  allocator_options: Optional[AllocatorOptions] = None,
                  confidence_fn: Optional[Callable] = None,
-                 quality_model: Optional[QualityModel] = None):
+                 quality_model: Optional[QualityModel] = None,
+                 control: Optional[ControlPlane] = None):
         self.serving = serving
         self.spec = as_cascade_spec(serving.cascade)
         self.cascade = self.spec            # legacy alias
@@ -178,8 +197,22 @@ class Simulator:
         self.rng = np.random.default_rng(self.sim.seed)
         self.profiles = as_boundary_profiles(profile,
                                              self.spec.num_boundaries)
-        self.rm = ResourceManager(self.spec, serving, self.profiles,
-                                  allocator_options)
+        if control is None:
+            # default bundle: serving.estimator + solver re-planning (or
+            # sim.fixed_plan frozen) + plan-thresholds + heartbeat faults.
+            # Shares self.profiles so online f(t) refreshes reach the
+            # planner.
+            control = build_control_plane(
+                self.spec, serving, self.profiles,
+                allocator_options=allocator_options,
+                fixed_plan=self.sim.fixed_plan)
+        elif allocator_options is not None:
+            raise ValueError(
+                "allocator_options is consumed when the Simulator builds "
+                "its default ControlPlane; with an explicit `control` it "
+                "would be silently ignored — bake the options into the "
+                "control plane's planner instead")
+        self.control = control
         self.confidence_fn = _per_boundary_fn(confidence_fn)
         self.quality = quality_model or QualityModel.from_cascade(self.spec)
 
@@ -230,17 +263,21 @@ class Simulator:
     def threshold(self) -> float:
         return self.thresholds[0] if self.thresholds else 1.0
 
+    @property
+    def rm(self) -> Optional[ResourceManager]:
+        """The control plane's solver wrapper (None for fixed-plan
+        bundles) — legacy accessor."""
+        return self.control.rm
+
     # ------------------------------------------------------------------
     def push(self, t, kind, payload=None):
         heapq.heappush(self._events, (t, kind, next(self._eid), payload))
 
     def run(self, trace: Trace) -> SimResult:
         arrivals = trace.arrivals(self.rng)
-        self.result.total = len(arrivals)
-        for i, t in enumerate(arrivals):
-            self.push(float(t), self.ARRIVAL,
-                      Query(qid=i, arrival=float(t),
-                            deadline=float(t) + self.spec.slo_s))
+        self.submit(Query(qid=i, arrival=float(t),
+                          deadline=float(t) + self.spec.slo_s)
+                    for i, t in enumerate(arrivals))
         self.push(0.0, self.CONTROL)
         for (tf, wid, dur) in self.sim.failure_times:
             self.push(tf, self.FAIL, (wid, dur))
@@ -463,43 +500,48 @@ class Simulator:
         self._recent_defer.append((self.now, depth))
         self._window_done += 1
 
-    # ------------------------------------------------------------------
-    def _telemetry(self) -> Telemetry:
-        horizon = self.now - self.serving.control_period_s
-        while self._arrivals_window and self._arrivals_window[0] < horizon:
-            self._arrivals_window.popleft()
-        qps = len(self._arrivals_window) / max(self.serving.control_period_s,
-                                               1e-9)
-        queues = tuple(float(sum(len(w.queue) for w in self._live(i)))
-                       for i in range(self.num_tiers))
-        arrivals = [qps]
-        for b in range(self.spec.num_boundaries):
-            arrivals.append(arrivals[-1]
-                            * self.profiles[b].f(self.thresholds[b]))
+    # ---------------- ExecutorBackend protocol ------------------------
+    def submit(self, queries: Iterable[Query]) -> None:
+        """Enqueue queries as arrival events (counted into the total)."""
+        for q in queries:
+            self.result.total += 1
+            self.push(q.arrival, self.ARRIVAL, q)
+
+    def poll(self) -> SimResult:
+        """Progress snapshot: the live result counters."""
+        return self.result
+
+    def census(self) -> Census:
         live = [w for w in self.workers.values()
                 if w.alive and w.wid < self._active_S]
         by_class: Dict[str, int] = {}
         for w in live:
             if w.wclass:
                 by_class[w.wclass] = by_class.get(w.wclass, 0) + 1
-        return Telemetry(demand_qps=qps, queues=queues,
-                         arrivals=tuple(arrivals),
-                         live_workers=len(live),
-                         live_by_class=tuple(sorted(by_class.items())))
+        return Census(now=self.now, active_slots=self._active_S,
+                      live_workers=len(live),
+                      live_by_class=tuple(sorted(by_class.items())))
+
+    def telemetry_window(self) -> Telemetry:
+        queues = tuple(float(sum(len(w.queue) for w in self._live(i)))
+                       for i in range(self.num_tiers))
+        return windowed_telemetry(self.now, self.serving.control_period_s,
+                                  self._arrivals_window, queues,
+                                  self.profiles, self.thresholds,
+                                  self.census())
 
     def _apply_plan_now(self, first=False):
-        if self.sim.fixed_plan is not None:
-            plan = self.sim.fixed_plan
-        else:
-            tel = self._telemetry() if not first else Telemetry(
-                demand_qps=1.0, live_workers=self._active_S)
-            plan = self.rm.plan(tel)
-        self.result.solve_ms.append(plan.solve_ms)
-        self.thresholds = tuple(plan.thresholds)
-        self.result.threshold_timeline.append((self.now, self.threshold))
-        self.result.thresholds_timeline.append((self.now, self.thresholds))
-        if getattr(plan, "cost", None) is not None:
-            self.result.plan_cost_timeline.append((self.now, plan.cost))
+        """One control tick: the ControlPlane plans and calls back into
+        ``apply_plan`` with the decision."""
+        self.control.tick(self, first=first)
+
+    def apply_plan(self, decision: ControlDecision):
+        """Enact a control decision: record it, set live thresholds, and
+        (re)assign worker roles/batches (stable matching; reassigned
+        workers' orphaned queues re-route after all roles settle)."""
+        plan = decision.plan
+        self.thresholds = tuple(decision.thresholds)
+        self.result.record_decision(self.now, decision)
         live = [w for w in self.workers.values()
                 if w.alive and w.wid < self._active_S]
         class_workers = getattr(plan, "class_workers", None)
@@ -567,9 +609,12 @@ class Simulator:
                 self.result.violations += 1
 
     def _on_control(self):
-        self._check_heartbeats()       # failure detection (heartbeat timeout)
         if self.now > 0:
-            self._apply_plan_now()
+            self._apply_plan_now()     # tick: fault sweep + plan + apply
+        else:
+            # t=0 tick plans nothing (the initial plan ran before the
+            # event pump) but still sweeps heartbeats, as before
+            self.detect_faults()
         self._record_quality()
         if self.sim.hedging:
             self._hedge_stragglers()
@@ -643,7 +688,8 @@ class Simulator:
         self._active_S = new_s
 
     # failure detection happens on control ticks via heartbeat timeout
-    def _check_heartbeats(self):
+    # (called by the control plane's ScalingPolicy at tick start)
+    def detect_faults(self):
         for w in self.workers.values():
             if not w.alive and (w.queue or w.in_flight):
                 self._detect_and_requeue(w)

@@ -22,6 +22,13 @@ class Trace:
     def duration_s(self) -> float:
         return float(len(self.qps))
 
+    def rate_at(self, t: float) -> float:
+        """True demand rate at time ``t`` (clamped to the trace window;
+        the oracle demand estimator reads this)."""
+        if len(self.qps) == 0:
+            return 0.0
+        return float(self.qps[min(max(int(t), 0), len(self.qps) - 1)])
+
     def scale(self, min_qps: float, max_qps: float) -> "Trace":
         """Shape-preserving affine rescale into [min_qps, max_qps]."""
         lo, hi = float(self.qps.min()), float(self.qps.max())

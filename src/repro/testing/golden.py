@@ -1,0 +1,33 @@
+"""Golden fingerprints for behavior-preservation suites.
+
+One canonical definition of which ``SimResult`` fields a
+behavior-preserving refactor must keep bit-identical for a fixed seed —
+shared by scripts/capture_golden.py (regeneration) and
+tests/test_controlplane.py (assertion) so the two cannot drift.
+"""
+from __future__ import annotations
+
+
+def sim_fingerprint(r) -> dict:
+    """Seeded-deterministic SimResult fields (counters + threshold
+    timelines; solve_ms is wall-clock and excluded)."""
+    return {
+        "completed": r.completed,
+        "dropped": r.dropped,
+        "violations": r.violations,
+        "total": r.total,
+        "deferred": r.deferred,
+        "hedged": r.hedged,
+        "requeued_on_failure": r.requeued_on_failure,
+        "completed_per_tier": list(r.completed_per_tier),
+        "tier_processed": list(r.tier_processed),
+        "deferred_per_boundary": list(r.deferred_per_boundary),
+        "mean_fid": round(r.mean_fid, 9),
+        "latency_sum": round(float(sum(r.latencies)), 6),
+        "threshold_ticks": len(r.threshold_timeline),
+        "threshold_sum": round(float(sum(v for _, v
+                                         in r.threshold_timeline)), 9),
+        "threshold_first": round(r.threshold_timeline[0][1], 9),
+        "threshold_last": round(r.threshold_timeline[-1][1], 9),
+        "workers_by_class": dict(r.workers_by_class),
+    }

@@ -1,0 +1,376 @@
+"""Control-plane tests: seeded golden equivalence (the ControlPlane-driven
+simulator reproduces the pre-refactor monolith's SimResult fields
+bit-for-bit), the policy protocols (estimators, planners, thresholds,
+scaling), the registry bundles, and the ExecutorBackend protocol.
+
+The GOLDEN fingerprints were captured from the pre-refactor monolith
+(commit fd841f5) with scripts/capture_golden.py; regenerate them with
+that script only for *intentional* behavior changes.
+"""
+import pytest
+
+from repro.config.base import WorkerClass
+from repro.core.allocator import ResourceManager
+from repro.core.milp import AllocationPlan, Telemetry
+from repro.serving.baselines import (ABLATIONS, BASELINES, CONTROLLERS,
+                                     list_controllers, make_profiles,
+                                     run_ablation, run_baseline,
+                                     run_controller)
+from repro.serving.controlplane import (ESTIMATORS, EwmaEstimator,
+                                        ExecutorBackend, FixedPlanPolicy,
+                                        OracleEstimator, PlanThresholds,
+                                        SlidingWindowEstimator, SolverPlanner,
+                                        StaticThresholds, build_control_plane,
+                                        make_estimator)
+from repro.serving.profiles import default_serving
+from repro.serving.simulator import Query, SimConfig, Simulator
+from repro.serving.trace import azure_like_trace, static_trace
+from repro.testing.golden import sim_fingerprint as fingerprint
+
+# ---------------------------------------------------------------------------
+# Golden equivalence: captured from the pre-refactor monolith
+# ---------------------------------------------------------------------------
+GOLDEN = {
+    'clipper-heavy': {'completed': 653, 'completed_per_tier': [0, 653],
+                      'deferred': 653, 'deferred_per_boundary': [0],
+                      'dropped': 571, 'hedged': 5,
+                      'latency_sum': 1205.60562, 'mean_fid': 18.55,
+                      'requeued_on_failure': 0, 'threshold_first': 1.0,
+                      'threshold_last': 1.0, 'threshold_sum': 56.0,
+                      'threshold_ticks': 56, 'tier_processed': [0, 653],
+                      'total': 1224, 'violations': 573,
+                      'workers_by_class': {}},
+    'clipper-light': {'completed': 1224, 'completed_per_tier': [1224, 0],
+                      'deferred': 0, 'deferred_per_boundary': [0],
+                      'dropped': 0, 'hedged': 1,
+                      'latency_sum': 145.441224, 'mean_fid': 22.6,
+                      'requeued_on_failure': 0, 'threshold_first': 0.0,
+                      'threshold_last': 0.0, 'threshold_sum': 0.0,
+                      'threshold_ticks': 56, 'tier_processed': [1224, 0],
+                      'total': 1224, 'violations': 0,
+                      'workers_by_class': {}},
+    'diffserve-static': {'completed': 1099,
+                         'completed_per_tier': [637, 462],
+                         'deferred': 462, 'deferred_per_boundary': [587],
+                         'dropped': 125, 'hedged': 3,
+                         'latency_sum': 1084.736771,
+                         'mean_fid': 18.979409699,
+                         'requeued_on_failure': 0,
+                         'threshold_first': 0.603439595,
+                         'threshold_last': 0.603439595,
+                         'threshold_sum': 33.79261734,
+                         'threshold_ticks': 56,
+                         'tier_processed': [1224, 462], 'total': 1224,
+                         'violations': 125, 'workers_by_class': {}},
+    'fault_injection': {'completed': 768, 'completed_per_tier': [235, 533],
+                        'deferred': 533, 'deferred_per_boundary': [607],
+                        'dropped': 96, 'hedged': 6,
+                        'latency_sum': 1794.44091,
+                        'mean_fid': 18.144940526,
+                        'requeued_on_failure': 4,
+                        'threshold_first': 1.0, 'threshold_last': 1.0,
+                        'threshold_sum': 51.161997065,
+                        'threshold_ticks': 56,
+                        'tier_processed': [842, 533], 'total': 864,
+                        'violations': 102, 'workers_by_class': {}},
+    'heterogeneous': {'completed': 735, 'completed_per_tier': [722, 13],
+                      'deferred': 13, 'deferred_per_boundary': [26],
+                      'dropped': 52, 'hedged': 0,
+                      'latency_sum': 1814.424487,
+                      'mean_fid': 22.345210934, 'requeued_on_failure': 0,
+                      'threshold_first': 1.0, 'threshold_last': 1.0,
+                      'threshold_sum': 19.543103132, 'threshold_ticks': 56,
+                      'tier_processed': [748, 13], 'total': 787,
+                      'violations': 59,
+                      'workers_by_class': {'a100': 2, 'a10g': 6}},
+    'homogeneous': {'completed': 1568, 'completed_per_tier': [777, 791],
+                    'deferred': 791, 'deferred_per_boundary': [856],
+                    'dropped': 72, 'hedged': 8,
+                    'latency_sum': 2868.054529, 'mean_fid': 18.577633196,
+                    'requeued_on_failure': 0, 'threshold_first': 1.0,
+                    'threshold_last': 1.0, 'threshold_sum': 55.601505787,
+                    'threshold_ticks': 71, 'tier_processed': [1633, 791],
+                    'total': 1640, 'violations': 81,
+                    'workers_by_class': {}},
+    'proteus': {'completed': 1162, 'completed_per_tier': [608, 554],
+                'deferred': 554, 'deferred_per_boundary': [616],
+                'dropped': 62, 'hedged': 6, 'latency_sum': 1770.92366,
+                'mean_fid': 20.139974016, 'requeued_on_failure': 0,
+                'threshold_first': 1.0, 'threshold_last': 1.0,
+                'threshold_sum': 39.256464045, 'threshold_ticks': 56,
+                'tier_processed': [1224, 554], 'total': 1224,
+                'violations': 66, 'workers_by_class': {}},
+    'static_threshold': {'completed': 1157,
+                         'completed_per_tier': [971, 186],
+                         'deferred': 186, 'deferred_per_boundary': [253],
+                         'dropped': 67, 'hedged': 6,
+                         'latency_sum': 936.413878,
+                         'mean_fid': 20.362587509,
+                         'requeued_on_failure': 0, 'threshold_first': 0.7,
+                         'threshold_last': 0.7, 'threshold_sum': 24.5,
+                         'threshold_ticks': 56,
+                         'tier_processed': [1224, 186], 'total': 1224,
+                         'violations': 68, 'workers_by_class': {}},
+    'three_tier': {'completed': 677, 'completed_per_tier': [0, 298, 379],
+                   'deferred': 677, 'deferred_per_boundary': [701, 403],
+                   'dropped': 24, 'hedged': 4,
+                   'latency_sum': 1337.418134, 'mean_fid': 17.99370977,
+                   'requeued_on_failure': 0, 'threshold_first': 1.0,
+                   'threshold_last': 1.0, 'threshold_sum': 56.0,
+                   'threshold_ticks': 56, 'tier_processed': [701, 701, 379],
+                   'total': 701, 'violations': 26, 'workers_by_class': {}},
+}
+
+
+def _golden_run(case):
+    sv = default_serving("sdturbo", num_workers=16)
+    if case == "homogeneous":
+        return run_baseline("diffserve",
+                            azure_like_trace(120, seed=3).scale(4, 32),
+                            sv, seed=0)
+    if case == "heterogeneous":
+        wcs = (WorkerClass("a100", 2, 1.0), WorkerClass("a10g", 6, 0.45))
+        return run_baseline("diffserve",
+                            azure_like_trace(90, seed=5).scale(2, 16),
+                            default_serving("sdturbo", worker_classes=wcs),
+                            seed=1)
+    if case == "fault_injection":
+        sim = Simulator(sv, make_profiles(sv, 0),
+                        SimConfig(seed=0,
+                                  failure_times=((20.0, 0, 25.0),
+                                                 (25.0, 1, 30.0))))
+        return sim.run(static_trace(10.0, 90))
+    if case == "static_threshold":
+        return run_ablation("static_threshold",
+                            azure_like_trace(90, seed=3).scale(4, 24),
+                            sv, seed=0)
+    if case == "three_tier":
+        return run_baseline("diffserve",
+                            azure_like_trace(90, seed=7).scale(3, 20),
+                            default_serving("sdxs3", num_workers=12),
+                            seed=2)
+    # fixed-plan / static baselines share one trace
+    return run_baseline(case, azure_like_trace(90, seed=3).scale(4, 24),
+                        sv, seed=0)
+
+
+@pytest.mark.parametrize("case", sorted(GOLDEN))
+def test_golden_equivalence(case):
+    """The ControlPlane-driven simulator backend reproduces the
+    pre-refactor monolith's seeded results exactly — homogeneous,
+    heterogeneous, fault-injection, fixed-plan baselines, ablations,
+    and a 3-tier cascade."""
+    assert fingerprint(_golden_run(case)) == GOLDEN[case]
+
+
+# ---------------------------------------------------------------------------
+# Policy protocols
+# ---------------------------------------------------------------------------
+def test_ewma_matches_resource_manager():
+    sv = default_serving("sdturbo", num_workers=4)
+    rm = ResourceManager(sv.cascade, sv, make_profiles(sv, 0))
+    est = EwmaEstimator(sv.ewma_alpha)
+    for q in (1.0, 5.0, 3.0, 8.0, 2.0):
+        assert est.estimate(q) == pytest.approx(rm.estimate_demand(q))
+
+
+def test_sliding_window_estimator():
+    est = SlidingWindowEstimator(window=3)
+    assert est.estimate(3.0) == 3.0
+    assert est.estimate(6.0) == 4.5
+    assert est.estimate(9.0) == 6.0
+    assert est.estimate(12.0) == 9.0      # 3.0 fell out of the window
+
+
+def test_oracle_estimator_reads_trace():
+    tr = static_trace(7.5, 30)
+    est = OracleEstimator(tr)
+    assert est.estimate(0.0, now=3.0) == 7.5
+    assert est.estimate(999.0, now=29.9) == 7.5     # observation ignored
+    bursty = azure_like_trace(60, seed=1).scale(1, 10)
+    est2 = OracleEstimator(bursty)
+    assert est2.estimate(0.0, now=12.0) == float(bursty.qps[12])
+    assert est2.estimate(0.0, now=1e9) == float(bursty.qps[-1])  # clamped
+
+
+def test_estimator_registry():
+    sv = default_serving("sdturbo", num_workers=4)
+    assert isinstance(make_estimator("ewma", sv), EwmaEstimator)
+    assert isinstance(make_estimator("sliding-window", sv),
+                      SlidingWindowEstimator)
+    tr = static_trace(2.0, 10)
+    assert isinstance(make_estimator("oracle", sv, tr), OracleEstimator)
+    with pytest.raises(ValueError):
+        make_estimator("oracle", sv)          # oracle needs its trace
+    with pytest.raises(KeyError):
+        make_estimator("kalman", sv)
+    assert set(ESTIMATORS) == {"ewma", "sliding-window", "oracle"}
+
+
+def test_fixed_plan_policy_never_replans():
+    plan = AllocationPlan(workers=(2, 2), batches=(1, 1),
+                          thresholds=(0.5,), expected_latency=1.0,
+                          feasible=True)
+    pol = FixedPlanPolicy(plan)
+    assert pol.needs_telemetry is False
+    assert pol.plan(Telemetry(demand_qps=99.0), 99.0) is plan
+
+
+def test_threshold_policies():
+    plan = AllocationPlan(workers=(2, 1, 1), batches=(1, 1, 1),
+                          thresholds=(0.4, 0.6), expected_latency=1.0,
+                          feasible=True)
+    tel = Telemetry(demand_qps=1.0)
+    assert PlanThresholds().select(plan, tel) == (0.4, 0.6)
+    assert StaticThresholds(0.7).select(plan, tel) == (0.7, 0.7)
+
+
+def test_build_control_plane_shapes():
+    sv = default_serving("sdturbo", num_workers=4)
+    profiles = make_profiles(sv, 0)
+    cp = build_control_plane(sv.cascade, sv, profiles)
+    assert isinstance(cp.planner, SolverPlanner)
+    assert isinstance(cp.estimator, EwmaEstimator)
+    assert cp.rm is cp.planner.rm
+    plan = AllocationPlan(workers=(4, 0), batches=(1, 1),
+                          thresholds=(0.0,), expected_latency=0.1,
+                          feasible=True)
+    cp2 = build_control_plane(sv.cascade, sv, profiles, fixed_plan=plan)
+    assert isinstance(cp2.planner, FixedPlanPolicy)
+    assert cp2.rm is None
+
+
+def test_control_plane_state_roundtrip():
+    sv = default_serving("sdturbo", num_workers=4)
+    cp = build_control_plane(sv.cascade, sv, make_profiles(sv, 0))
+    cp.estimator.estimate(5.0)
+    cp.rm._aimd_batches = [2, 4]
+    state = cp.state_dict()
+    cp2 = build_control_plane(sv.cascade, sv, make_profiles(sv, 0))
+    cp2.load_state(state)
+    assert cp2.estimator._value == cp.estimator._value
+    assert cp2.rm._aimd_batches == [2, 4]
+
+
+def test_state_dict_snapshot_does_not_alias_live_state():
+    """An in-memory snapshot must not drift as the live estimator keeps
+    observing (sliding-window deque aliasing)."""
+    sv = default_serving("sdturbo", num_workers=4)
+    cp = build_control_plane(sv.cascade, sv, make_profiles(sv, 0),
+                             estimator="sliding-window")
+    cp.estimator.estimate(2.0)
+    state = cp.state_dict()
+    cp.estimator.estimate(100.0)          # live keeps moving
+    cp2 = build_control_plane(sv.cascade, sv, make_profiles(sv, 0),
+                              estimator="sliding-window")
+    cp2.load_state(state)
+    assert list(cp2.estimator._obs) == [2.0]
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+def test_registry_covers_baselines_and_ablations():
+    assert set(BASELINES) <= set(CONTROLLERS)
+    assert set(ABLATIONS) <= set(CONTROLLERS)
+    names = dict(list_controllers())
+    assert all(names[n] for n in CONTROLLERS)    # every bundle described
+    assert CONTROLLERS["diffserve"].dynamic
+    assert not CONTROLLERS["clipper-light"].dynamic
+    assert CONTROLLERS["clipper-heavy"].arrival_stage == -1
+    assert CONTROLLERS["proteus"].uniform_profile
+    assert CONTROLLERS["aimd_batching"].allocator_mode == "aimd_batching"
+
+
+def test_unknown_controller_raises():
+    sv = default_serving("sdturbo", num_workers=4)
+    with pytest.raises(KeyError):
+        run_controller("nope", static_trace(1.0, 10), sv)
+
+
+def test_controller_defaults_to_serving_config():
+    """run_controller(None, ...) resolves the bundle from
+    ServingConfig.controller (the registry threaded through configs)."""
+    tr = static_trace(4.0, 30)
+    sv = default_serving("sdturbo", num_workers=4,
+                         controller="clipper-light")
+    r = run_controller(None, tr, sv, seed=0)
+    r_explicit = run_baseline("clipper-light", tr,
+                              default_serving("sdturbo", num_workers=4),
+                              seed=0)
+    assert fingerprint(r) == fingerprint(r_explicit)
+
+
+def test_estimator_choice_changes_planning():
+    """Different demand estimators produce different control behavior on
+    a bursty trace (the seam actually matters)."""
+    tr = azure_like_trace(60, seed=3).scale(2, 24)
+    sv = default_serving("sdturbo", num_workers=8)
+    r_ewma = run_controller("diffserve", tr, sv, seed=0, estimator="ewma")
+    r_oracle = run_controller("diffserve", tr, sv, seed=0,
+                              estimator="oracle")
+    assert (r_ewma.threshold_timeline != r_oracle.threshold_timeline
+            or r_ewma.completed != r_oracle.completed)
+    # both still serve sanely
+    assert r_oracle.completed > 0.7 * r_oracle.total
+    assert r_ewma.completed > 0.7 * r_ewma.total
+
+
+# ---------------------------------------------------------------------------
+# ExecutorBackend protocol (simulator side)
+# ---------------------------------------------------------------------------
+def test_simulator_is_executor_backend():
+    sv = default_serving("sdturbo", num_workers=2)
+    sim = Simulator(sv, make_profiles(sv, 0), SimConfig(seed=0))
+    assert isinstance(sim, ExecutorBackend)
+
+
+def test_simulator_submit_poll():
+    sv = default_serving("sdturbo", num_workers=2)
+    sim = Simulator(sv, make_profiles(sv, 0), SimConfig(seed=0))
+    sim._apply_plan_now(first=True)
+    sim.submit([Query(qid=0, arrival=0.5, deadline=5.5),
+                Query(qid=1, arrival=1.0, deadline=6.0)])
+    assert sim.poll().total == 2
+    sim._run_until(30.0)
+    sim._drain_unfinished()
+    r = sim.poll()
+    assert r.completed + r.dropped == 2
+
+
+def test_census_reflects_failures_and_scaling():
+    sv = default_serving("sdturbo", num_workers=4)
+    sim = Simulator(sv, make_profiles(sv, 0), SimConfig(seed=0))
+    c = sim.census()
+    assert (c.active_slots, c.live_workers) == (4, 4)
+    sim.workers[0].alive = False
+    sim._on_scale(3)
+    c = sim.census()
+    assert c.active_slots == 3
+    assert c.live_workers == 2        # wid 0 dead, wid 3 descaled
+
+
+def test_tick_first_seeds_unit_demand():
+    """The first tick plans for nominal unit demand over all slots, as
+    the monolith did."""
+    sv = default_serving("sdturbo", num_workers=4)
+    sim = Simulator(sv, make_profiles(sv, 0), SimConfig(seed=0))
+    decision = sim.control.tick(sim, first=True)
+    assert sim.control.estimator._value == 1.0
+    assert decision.plan.feasible
+    assert sim.thresholds == tuple(decision.thresholds)
+
+
+def test_explicit_control_plane_wins():
+    """An explicitly passed ControlPlane overrides the default bundle —
+    here a fixed plan pinning everything to tier 0."""
+    sv = default_serving("sdturbo", num_workers=2)
+    profiles = make_profiles(sv, 0)
+    plan = AllocationPlan(workers=(2, 0), batches=(1, 1),
+                          thresholds=(0.0,), expected_latency=0.1,
+                          feasible=True)
+    cp = build_control_plane(sv.cascade, sv, profiles, fixed_plan=plan)
+    sim = Simulator(sv, profiles, SimConfig(seed=0), control=cp)
+    r = sim.run(static_trace(2.0, 30))
+    assert r.completed > 0
+    assert r.completed_per_tier[1] == 0      # nothing ever deferred
