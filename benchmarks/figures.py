@@ -204,6 +204,54 @@ def fig9_slo_sensitivity() -> Tuple[List[dict], float]:
 
 
 # ---------------------------------------------------------------------------
+# Cascade frontier — auto-constructed cascade search vs every fixed cascade
+# ---------------------------------------------------------------------------
+def cascade_frontier() -> Tuple[List[dict], float]:
+    """Quality (FID*) vs latency-SLO violations vs $ across demand
+    levels: the per-epoch ``CascadeSearchPlanner`` (candidates = the
+    coco512 family's pruned frontier, including the auto-built
+    ``sdxs+sd-turbo`` chain nobody hand-registered) against each fixed
+    cascade under the same dynamic controller. derived = number of
+    demand levels where the search Pareto-dominates *every* fixed
+    cascade (<= on all three metrics, < on at least one, vs each)."""
+    from repro.serving.profiles import GPU_CLASS_COSTS
+    fixed = ("sdturbo", "sdxs", "sdxs3")
+    pool = fixed + ("auto:coco512:sdxs+sd-turbo",)
+    hourly = 16 * GPU_CLASS_COSTS["a100"]        # homogeneous A100 fleet
+    rows = []
+    dominated_levels = 0
+    for qps in (12.0, 24.0, 48.0, 72.0):
+        trace = static_trace(qps, 180)
+        metrics = {}
+        for name in fixed:
+            r = run_baseline("diffserve", trace,
+                             default_serving(name, num_workers=16), seed=0)
+            metrics[name] = (r, 0)
+        sv = default_serving("sdturbo", num_workers=16,
+                             candidate_cascades=pool)
+        ra = run_controller("cascade-search", trace, sv, seed=0)
+        metrics["cascade-search"] = (ra, ra.cascade_switches)
+        points = {}
+        for name, (r, switches) in metrics.items():
+            cost_1k = (hourly / 3600.0 * trace.duration_s
+                       / max(r.completed, 1) * 1000.0)
+            points[name] = (round(r.mean_fid, 3),
+                            round(r.violation_ratio, 4),
+                            round(cost_1k, 4))
+            rows.append({"demand_qps": qps, "system": name,
+                         "fid": points[name][0],
+                         "slo_violation": points[name][1],
+                         "cost_per_1k_queries": points[name][2],
+                         "completed": r.completed,
+                         "cascade_switches": switches})
+        auto = points["cascade-search"]
+        dominated_levels += all(
+            all(a <= b for a, b in zip(auto, points[n]))
+            and auto != points[n] for n in fixed)
+    return rows, float(dominated_levels)
+
+
+# ---------------------------------------------------------------------------
 # Estimator sweep — demand-estimator policies under the same controller
 # ---------------------------------------------------------------------------
 def estimator_sweep() -> Tuple[List[dict], float]:
@@ -248,6 +296,7 @@ ALL = {
     "fig7_discriminator": fig7_discriminator,
     "fig8_allocator_ablation": fig8_allocator_ablation,
     "fig9_slo_sensitivity": fig9_slo_sensitivity,
+    "cascade_frontier": cascade_frontier,
     "estimator_sweep": estimator_sweep,
     "milp_overhead": milp_overhead,
 }

@@ -1,17 +1,19 @@
 """Benchmark harness: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (derived = the figure's headline
-number) and writes per-figure row CSVs to experiments/benchmarks/.
-Figures run the comparison systems through the control-plane policy
-registry (serving/baselines.py:CONTROLLERS); ``--only`` selects a subset
-of figures by substring.
+number) and writes per-figure row CSVs to experiments/benchmarks/out/
+(a gitignored artifact directory — benchmark outputs are never
+committed). Figures run the comparison systems through the control-plane
+policy registry (serving/baselines.py:CONTROLLERS); ``--only`` selects a
+subset of figures by substring.
 """
 import argparse
 import csv
 import pathlib
 import time
 
-OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "benchmarks"
+OUT = (pathlib.Path(__file__).resolve().parents[1]
+       / "experiments" / "benchmarks" / "out")
 
 
 def main() -> None:

@@ -21,6 +21,10 @@ Two modes share one ControlPlane (serving/controlplane.py):
       --cascade sdturbo --worker-classes a100:2:1.0,a10g:6:0.45
   PYTHONPATH=src python examples/serve_cascade.py \
       --cascade sdxs3 --controller diffserve --estimator sliding-window
+  PYTHONPATH=src python examples/serve_cascade.py --mode cluster \
+      --cascade sdxs3 --controller cascade-search
+      # per-epoch cascade search over the measured spec's sub-chains:
+      # the backend may switch cascades mid-run (staged slice reload)
 """
 import argparse
 import dataclasses
@@ -182,4 +186,8 @@ if args.mode == "cluster":
         for t, w, b in plans[:8]]
 if costs and r.plan_cost_timeline:
     report["mean_cost_per_hour"] = round(r.mean_plan_cost_per_hour, 3)
+if r.cascade_timeline:
+    report["cascade_switches"] = r.cascade_switches
+    report["cascade_timeline"] = [[round(t, 1), n]
+                                  for t, n in r.cascade_timeline]
 print(json.dumps(report, indent=1))

@@ -1,17 +1,28 @@
 """Capture seeded golden SimResult fields for the control-plane
-golden-equivalence suite (tests/test_controlplane.py).
+golden-equivalence suite (tests/test_controlplane.py) and the
+builder-parity suite (tests/test_autocascade.py).
 
 Run against the pre-refactor monolith to produce the GOLDEN dict, and
 re-run after any intentional behavior change to refresh it:
 
     PYTHONPATH=src python scripts/capture_golden.py
+
+Every case resolves its cascade through the ``CASCADES`` registry, which
+since the autocascade refactor is built by ``CascadeBuilder`` over the
+builtin ``VariantCatalog`` — so these fingerprints *are* the
+builder-parity goldens: any builder/catalog change that alters a pinned
+spec shows up here. ``cascade_search_pinned`` additionally pins the
+``CascadeSearchPlanner`` restricted to a single candidate to the plain
+``SolverPlanner`` behavior (it must equal the ``homogeneous`` case
+bit-for-bit; the capture asserts it).
 """
 from __future__ import annotations
 
 import pprint
 
 from repro.config.base import WorkerClass
-from repro.serving.baselines import run_ablation, run_baseline
+from repro.serving.baselines import (run_ablation, run_baseline,
+                                     run_controller)
 from repro.serving.profiles import default_serving
 from repro.serving.simulator import SimConfig, Simulator
 from repro.serving.trace import azure_like_trace, static_trace
@@ -56,6 +67,17 @@ def main():
     golden["three_tier"] = fingerprint(
         run_baseline("diffserve", azure_like_trace(90, seed=7).scale(3, 20),
                      sv3, seed=2))
+
+    # builder parity: CascadeSearchPlanner restricted to one pinned
+    # catalog query must reproduce the SolverPlanner homogeneous golden
+    # bit-for-bit (tests/test_autocascade.py asserts the same)
+    sv_pin = default_serving("sdturbo", num_workers=16,
+                             candidate_cascades=("sdturbo",))
+    golden["cascade_search_pinned"] = fingerprint(
+        run_controller("cascade-search", tr, sv_pin, seed=0))
+    assert golden["cascade_search_pinned"] == golden["homogeneous"], \
+        "search planner restricted to one cascade diverged from the " \
+        "SolverPlanner golden"
 
     pprint.pprint(golden, width=76, sort_dicts=True)
 

@@ -563,6 +563,14 @@ class ServingConfig:
     # pure data
     controller: str = "diffserve"
     estimator: str = "ewma"
+    # cascade auto-construction (serving/autocascade.py): the variant
+    # catalog source ("builtin" or a JSON file path) and the cascade
+    # names the per-epoch search may switch between (registry names,
+    # catalog pinned names, or "auto:<family>:<m1>+<m2>" chains; empty
+    # means the default pool derived from the active cascade). Stored as
+    # plain strings — resolved when the search planner is assembled.
+    catalog: str = "builtin"
+    candidate_cascades: Tuple[str, ...] = ()
 
     def __post_init__(self):
         if self.class_costs and not self.worker_classes:

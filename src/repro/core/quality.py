@@ -11,12 +11,25 @@ router skill, calibrated to the paper's reported statistics:
   * router skill: discriminator > random > pickscore/clipscore (Fig. 1a).
 For a two-tier cascade p is the deferred fraction; for an N-tier cascade
 p is the mean normalized depth (final tier = 1) of served queries.
+
+Boundary quality model — ``BoundaryQualityModel`` fits one cascade
+boundary from calibration confidence scores plus the adjacent tiers' FID
+anchors: it maps a discriminator-confidence threshold t to the deferred
+mass f(t) *and* the expected quality Q(t) of serving at that threshold.
+It is the learned object behind cascade auto-construction
+(serving/autocascade.py): the builder fits one per boundary, the search
+planner scores candidate cascades on the resulting quality/$ frontier,
+and ``deferral_profile()`` is the single construction path for the
+control plane's online ``DeferralProfile`` state (the profile's scores
+are exactly the model's calibration scores, so fitting then profiling is
+bit-identical to the legacy direct construction).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import math
-from typing import Optional
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -111,3 +124,101 @@ def pickscore_like(rng: np.random.Generator, n: int):
     """Per-query light-minus-heavy quality deltas with the paper's Fig. 1b
     shape: 20-40% of queries have delta >= 0 ("easy")."""
     return rng.normal(loc=-0.35, scale=0.7, size=n)
+
+
+# ---------------------------------------------------------------------------
+# Fitted per-boundary quality model (cascade auto-construction)
+# ---------------------------------------------------------------------------
+# Default dip coefficient for boundaries without a paper-reported best-mix
+# anchor: the paper's three cascades put the best-mix FID 0.08-0.16x of the
+# first/final anchor spread below the final tier; 0.12 is the midpoint.
+BEST_MIX_DIP_COEF = 0.12
+DEFAULT_BEST_MIX_FRAC = 0.65
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundaryQualityModel:
+    """One fitted cascade boundary: calibration confidence scores plus the
+    adjacent tiers' FID anchors.
+
+    ``fid_keep`` is the quality when the boundary keeps everything at the
+    emitting tier; ``fid_defer`` when everything crosses to the deeper
+    side. ``fid(t)`` composes the empirical deferral CDF with the
+    calibrated mix-quality dip (``QualityModel``), so a threshold maps
+    directly to expected quality — the object a threshold policy or a
+    cascade search can optimize over without re-simulating.
+    """
+    scores: Tuple[float, ...]            # sorted calibration confidences
+    fid_keep: float
+    fid_defer: float
+    fid_best_mix: float
+    best_mix_defer_frac: float = DEFAULT_BEST_MIX_FRAC
+
+    def __post_init__(self):
+        if not self.scores:
+            raise ValueError("need at least one calibration score")
+
+    @classmethod
+    def fit(cls, scores: Sequence[float], *, fid_keep: float,
+            fid_defer: float, fid_best_mix: Optional[float] = None,
+            best_mix_defer_frac: float = DEFAULT_BEST_MIX_FRAC
+            ) -> "BoundaryQualityModel":
+        """Fit from calibration confidences. Without a reported best-mix
+        anchor, the dip is the ``BEST_MIX_DIP_COEF`` prior over the
+        anchor spread (a *good* router beats serving everything deep)."""
+        if fid_best_mix is None:
+            spread = abs(fid_keep - fid_defer)
+            fid_best_mix = min(fid_keep, fid_defer) \
+                - BEST_MIX_DIP_COEF * spread
+        return cls(scores=tuple(sorted(float(s) for s in scores)),
+                   fid_keep=float(fid_keep), fid_defer=float(fid_defer),
+                   fid_best_mix=float(fid_best_mix),
+                   best_mix_defer_frac=float(best_mix_defer_frac))
+
+    # ------- deferral side -------
+    def defer_fraction(self, t: float) -> float:
+        """f(t): calibration mass strictly below the threshold."""
+        return bisect.bisect_left(self.scores, t) / len(self.scores)
+
+    def threshold_for(self, frac: float) -> float:
+        """Largest t with f(t) <= frac (right-continuous inverse)."""
+        frac = min(max(frac, 0.0), 1.0)
+        k = int(frac * len(self.scores))
+        if k >= len(self.scores):
+            return 1.0
+        return self.scores[k]
+
+    def easy_fraction(self, confident: float = 0.8) -> float:
+        """Mass the discriminator scores 'easy' (kept) at a confident
+        threshold — the statistic CascadeSpec.easy_fractions records."""
+        return 1.0 - self.defer_fraction(confident)
+
+    def deferral_profile(self) -> "DeferralProfile":
+        """A fresh online ``DeferralProfile`` seeded with exactly the
+        calibration scores (the control plane mutates it; the fitted
+        model stays frozen). This is *the* construction path — backends
+        and the planner share the object it returns."""
+        from repro.core.confidence import DeferralProfile
+        return DeferralProfile(list(self.scores))
+
+    # ------- quality side -------
+    def _quality_model(self) -> QualityModel:
+        return QualityModel(fid_all_light=self.fid_keep,
+                            fid_all_heavy=self.fid_defer,
+                            fid_best_mix=self.fid_best_mix,
+                            best_mix_p=self.best_mix_defer_frac)
+
+    def fid(self, t: float, router: str = "discriminator") -> float:
+        """Expected quality of running this boundary at threshold t."""
+        return self._quality_model().fid(self.defer_fraction(t), router)
+
+    def frontier(self, grid: int = 21, router: str = "discriminator"
+                 ) -> List[Tuple[float, float, float]]:
+        """(t, f(t), FID(t)) on a threshold grid — the boundary's
+        quality/deferral trade-off curve."""
+        out = []
+        for t in np.linspace(0.0, 1.0, max(grid, 2)):
+            f = self.defer_fraction(float(t))
+            out.append((float(t), f,
+                        self._quality_model().fid(f, router)))
+        return out

@@ -10,6 +10,11 @@ fed to the same solver.
       --baseline diffserve --workers 16 --trace-min 4 --trace-max 32
   PYTHONPATH=src python -m repro.launch.serve --list-cascades
   PYTHONPATH=src python -m repro.launch.serve --cascade sdxs3 --workers 24
+  PYTHONPATH=src python -m repro.launch.serve --list-frontier
+  PYTHONPATH=src python -m repro.launch.serve --auto-cascade \
+      --trace-min 4 --trace-max 32       # per-epoch cascade search
+  PYTHONPATH=src python -m repro.launch.serve --catalog my_pool.json \
+      --cascade auto:coco512:sdxs+sdv1.5
 """
 from __future__ import annotations
 
@@ -19,20 +24,36 @@ import pathlib
 
 import numpy as np
 
+from repro.serving.autocascade import CascadeBuilder, load_catalog
 from repro.serving.baselines import (BASELINES, CONTROLLERS,
                                      list_controllers, run_controller)
 from repro.serving.controlplane import ESTIMATORS
-from repro.serving.profiles import (CASCADES, class_costs_from_arg,
-                                    default_serving, list_cascades,
+from repro.serving.profiles import (class_costs_from_arg, default_serving,
+                                    list_cascades, resolve_cascade,
                                     worker_classes_from_arg)
 from repro.serving.trace import azure_like_trace, load_trace_file, static_trace
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cascade", default="sdturbo", choices=sorted(CASCADES))
+    ap.add_argument("--cascade", default="sdturbo",
+                    help="a registered cascade name (see --list-cascades), "
+                    "a pinned name of --catalog, or an auto-chain "
+                    "auto:<family>:<model>+<model>+...")
+    ap.add_argument("--catalog", default=None,
+                    help="variant catalog: 'builtin' (default) or a JSON "
+                    "file path (families/variants/pinned; see "
+                    "serving/autocascade.py)")
+    ap.add_argument("--auto-cascade", action="store_true",
+                    help="per-epoch cascade search: the controller may "
+                    "switch the serving cascade under load (candidates = "
+                    "the catalog family's pruned frontier; supersedes "
+                    "--controller/--baseline)")
     ap.add_argument("--list-cascades", action="store_true",
                     help="print the registered cascades and exit")
+    ap.add_argument("--list-frontier", action="store_true",
+                    help="print the builder's quality/latency cascade "
+                    "frontier per catalog family and exit")
     ap.add_argument("--list-controllers", action="store_true",
                     help="print the control-plane policy bundles and exit")
     ap.add_argument("--baseline", default="diffserve",
@@ -78,6 +99,22 @@ def main():
             print(f"{name:18s} {desc}")
         return
 
+    catalog = load_catalog(args.catalog or "builtin")
+    builder = CascadeBuilder(catalog)
+
+    if args.list_frontier:
+        print(f"{'name':32s} {'tiers':34s} {'kind':7s} {'SLO':>6s} "
+              f"{'bestFID':>8s} {'minLat':>7s} {'frontier':8s}")
+        for fam in catalog.families():
+            for s in builder.frontier(fam):
+                chain = " -> ".join(s.models)
+                kind = "pinned" if s.pinned else "auto"
+                keep = "dominated" if s.dominated else "yes"
+                print(f"{s.spec.name:32s} {chain:34s} {kind:7s} "
+                      f"{s.spec.slo_s:5.1f}s {s.best_fid:8.2f} "
+                      f"{s.base_latency_s:6.3f}s {keep:8s}")
+        return
+
     if args.trace_file:
         trace = load_trace_file(args.trace_file)
     elif args.static_qps is not None:
@@ -93,12 +130,31 @@ def main():
         ap.error("--cost-per-class requires --worker-classes")
     costs = (class_costs_from_arg(args.cost_per_class)
              if args.cost_per_class else ())
+    try:
+        spec = resolve_cascade(args.cascade, catalog)
+    except KeyError as e:
+        ap.error(str(e.args[0] if e.args else e))
     controller = args.controller or args.baseline
-    serving = default_serving(args.cascade, num_workers=args.workers,
+    candidates = ()
+    if args.auto_cascade:
+        controller = "cascade-search"
+        # candidates: the catalog family's pruned frontier (same SLO as
+        # the active cascade, so in-flight deadlines survive a switch)
+        fam = None
+        if args.cascade in catalog.pinned_names():
+            fam = catalog.pinned(args.cascade).family
+        elif args.cascade.startswith("auto:"):
+            fam = args.cascade.split(":", 2)[1]
+        if fam is not None:
+            candidates = tuple(
+                n for n, c in sorted(builder.build_family(fam).items())
+                if abs(c.slo_s - spec.slo_s) < 1e-9)
+    serving = default_serving(spec, num_workers=args.workers,
                               worker_classes=wcs, class_costs=costs,
                               controller=controller,
-                              estimator=args.estimator or "ewma")
-    spec = serving.cascade
+                              estimator=args.estimator or "ewma",
+                              catalog=args.catalog or "builtin",
+                              candidate_cascades=candidates)
     r = run_controller(controller, trace, serving, seed=args.seed,
                        estimator=args.estimator)
 
@@ -125,6 +181,10 @@ def main():
         "threshold_timeline": r.threshold_timeline[:: max(
             len(r.threshold_timeline) // 50, 1)],
     }
+    if r.cascade_timeline:
+        report["cascade_switches"] = r.cascade_switches
+        report["cascade_timeline"] = [
+            [round(t, 1), n] for t, n in r.cascade_timeline]
     if wcs:
         report["worker_classes"] = {
             wc.name: {"count": wc.count, "speed": wc.speed,

@@ -23,10 +23,12 @@ import numpy as np
 
 from repro.config.base import ServingConfig, as_cascade_spec
 from repro.core.allocator import AllocatorOptions
-from repro.core.confidence import (DeferralProfile,
-                                   synthetic_confidence_scores)
+from repro.core.confidence import DeferralProfile
 from repro.core.milp import (AllocationPlan, solve_cascade,
                              solve_heterogeneous_cascade)
+from repro.serving.autocascade import (CascadeSearchPlanner,
+                                       default_candidates,
+                                       fit_boundary_models)
 from repro.serving.controlplane import build_control_plane
 from repro.serving.simulator import SimConfig, Simulator, SimResult
 from repro.serving.trace import Trace
@@ -38,21 +40,28 @@ ABLATIONS = ("static_threshold", "aimd_batching", "no_queuing_model")
 
 def make_profile(serving: ServingConfig, seed: int = 0,
                  uniform: bool = False, boundary: int = 0) -> DeferralProfile:
-    """One boundary's offline deferral profile (boundary 0 by default)."""
-    rng = np.random.default_rng(seed + 7919 * boundary)
+    """One boundary's offline deferral profile (boundary 0 by default):
+    the fitted ``BoundaryQualityModel``'s calibration scores seeded into
+    an online ``DeferralProfile`` (core/quality.py is the single
+    construction path; the scores are bit-identical to the legacy direct
+    construction)."""
     if uniform:                      # Proteus: random routing => f(t) = t
+        rng = np.random.default_rng(seed + 7919 * boundary)
         return DeferralProfile(rng.random(5000))
     spec = as_cascade_spec(serving.cascade)
-    return DeferralProfile(synthetic_confidence_scores(
-        rng, 5000, spec.easy_fraction_at(boundary)))
+    return fit_boundary_models(spec, seed)[boundary].deferral_profile()
 
 
 def make_profiles(serving: ServingConfig, seed: int = 0,
                   uniform: bool = False) -> Tuple[DeferralProfile, ...]:
-    """One DeferralProfile per cascade boundary."""
+    """One DeferralProfile per cascade boundary (all boundaries fitted
+    in one pass)."""
     spec = as_cascade_spec(serving.cascade)
-    return tuple(make_profile(serving, seed, uniform, b)
-                 for b in range(spec.num_boundaries))
+    if uniform:
+        return tuple(make_profile(serving, seed, True, b)
+                     for b in range(spec.num_boundaries))
+    return tuple(m.deferral_profile()
+                 for m in fit_boundary_models(spec, seed))
 
 
 # ---------------------------------------------------------------------------
@@ -140,6 +149,9 @@ class ControllerBundle:
     random_confidence: bool = False   # query-agnostic (random) routing
     allocator_mode: Optional[str] = None
     plan_fn: Optional[Callable] = None
+    # per-epoch cascade search: the planner re-runs the cascade builder
+    # against estimated demand and may switch the serving cascade
+    cascade_search: bool = False
 
     @property
     def dynamic(self) -> bool:
@@ -164,6 +176,10 @@ CONTROLLERS = {
     "diffserve": ControllerBundle(
         "diffserve", "the paper: query-aware cascade + dynamic solver "
         "re-planning every tick"),
+    "cascade-search": ControllerBundle(
+        "cascade-search", "diffserve + per-epoch cascade search over the "
+        "variant catalog: may switch the serving cascade under load",
+        cascade_search=True),
     # §4.5 resource-allocation ablations, as first-class bundles
     "static_threshold": ControllerBundle(
         "static_threshold", "ablation: re-plans allocation but pins the "
@@ -186,6 +202,48 @@ def list_controllers():
 # Running a bundle
 # ---------------------------------------------------------------------------
 _UNSET = object()
+
+
+def search_candidates(serving: ServingConfig, spec=None
+                      ) -> "dict[str, object]":
+    """The cascade-search candidate set for a ServingConfig: explicit
+    ``candidate_cascades`` registry/catalog names when given, else the
+    default pool (registry cascades sharing the active spec's SLO and
+    final model, plus its sub-chains). The active cascade is always a
+    candidate — and always by its own spec *object*, which may carry
+    measured profiles."""
+    from repro.serving.profiles import CASCADES, resolve_cascade
+    spec = spec if spec is not None else as_cascade_spec(serving.cascade)
+    if serving.candidate_cascades:
+        out = {spec.name: spec}
+        for n in serving.candidate_cascades:
+            if n != spec.name:
+                out[n] = resolve_cascade(n, serving.catalog)
+        return out
+    return default_candidates(spec, serving, registry=CASCADES)
+
+
+def _search_planner(bundle: ControllerBundle, serving: ServingConfig,
+                    spec, profiles, seed: int,
+                    allocator_options: Optional[AllocatorOptions]
+                    ) -> CascadeSearchPlanner:
+    """Assemble the per-epoch cascade-search planner: the active
+    candidate shares the backend's DeferralProfile objects (online f(t)
+    refreshes flow into the search); the others get their own fitted
+    calibration profiles."""
+    candidates = search_candidates(serving, spec)
+    profiles_by = {}
+    for n, cand in candidates.items():
+        if n == spec.name:
+            profiles_by[n] = tuple(profiles)
+        else:
+            profiles_by[n] = make_profiles(
+                dataclasses.replace(serving, cascade=cand), seed,
+                uniform=bundle.uniform_profile)
+    return CascadeSearchPlanner(serving, candidates, profiles_by,
+                                active=spec.name,
+                                allocator_options=allocator_options,
+                                router=bundle.router)
 
 
 def assemble_bundle(name: Optional[str], trace: Trace,
@@ -217,9 +275,13 @@ def assemble_bundle(name: Optional[str], trace: Trace,
         confidence_fn = lambda n_, b_: rng.random(n_)   # noqa: E731
     if allocator_options is None and bundle.allocator_mode:
         allocator_options = AllocatorOptions(mode=bundle.allocator_mode)
+    planner = (_search_planner(bundle, serving, spec, profiles, seed,
+                               allocator_options)
+               if bundle.cascade_search else None)
     control = build_control_plane(
         spec, serving, profiles, allocator_options=allocator_options,
-        fixed_plan=fixed_plan, estimator=estimator, trace=trace)
+        fixed_plan=fixed_plan, estimator=estimator, trace=trace,
+        planner=planner)
     return bundle, profiles, fixed_plan, control, confidence_fn
 
 

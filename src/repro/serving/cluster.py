@@ -40,7 +40,13 @@ from repro.serving.simulator import Query, SimResult
 
 @dataclasses.dataclass
 class WorkerSlice:
-    """A TP slice of the pod assigned to one cascade tier."""
+    """A TP slice of the pod assigned to one cascade tier.
+
+    ``alive`` is ground truth (fault injection flips it); the control
+    plane only ever learns about it through the *heartbeat*: an alive
+    slice beats every serve period, and ``ClusterBackend.detect_faults``
+    quarantines slices whose last beat is stale (paper §3.3 failure
+    handling)."""
     wid: int
     role: Optional[int] = None        # tier index; None while loading
     devices: tuple = ()
@@ -48,6 +54,8 @@ class WorkerSlice:
     speed: float = 1.0                # throughput multiplier vs reference
     # full class spec (per-model latency scales); None = homogeneous
     wc: Optional[WorkerClass] = None
+    alive: bool = True
+    last_heartbeat: float = 0.0
 
     def expected_latency(self, profile: LatencyProfile, batch: int,
                          model: str = "") -> float:
@@ -199,9 +207,11 @@ class ClusterBackend:
                  profiles, *, seed: int = 0, prompt_len: int = 8,
                  model_load_s: float = 2.0, router: str = "discriminator",
                  arrival_stage: int = 0, quality_window_s: float = 30.0,
-                 confidence_fn=None):
+                 confidence_fn=None,
+                 failure_times: Tuple[Tuple[float, int, float], ...] = ()):
         # model_load_s matches SimConfig's default so cross-backend
-        # comparisons charge role-switch reloads identically
+        # comparisons charge role-switch reloads identically;
+        # failure_times matches SimConfig's (t_fail, wid, repair_s) shape
         self.runtime = runtime
         self.serving = serving
         self.router = router              # quality-model skill for FID*
@@ -227,7 +237,20 @@ class ClusterBackend:
                                              for sl in runtime.slices}
         self._arrivals_window: deque = deque()
         self._recent_depth: deque = deque()
-        self._stage_fns = runtime.cascade.stage_fns()
+        # executable stages keyed by model name: a mid-run cascade switch
+        # re-selects stages for the new spec's tiers (staged slice
+        # reload); only models with a loaded stage are switchable
+        stage_fns = runtime.cascade.stage_fns()
+        self._stages_by_model = {t.model: stage_fns[i]
+                                 for i, t in enumerate(self.spec.tiers)
+                                 if i < len(stage_fns)}
+        self._stage_fns = list(stage_fns)
+        # failure domain: injected crash/repair events in virtual time;
+        # quarantine is what detect_faults *discovered* via heartbeats
+        self._fault_events: List[Tuple[float, str, int]] = sorted(
+            [(t, "fail", wid) for (t, wid, _r) in failure_times]
+            + [(t + r, "recover", wid) for (t, wid, r) in failure_times])
+        self._quarantined: set = set()
         self.result = SimResult(
             completed_per_tier=[0] * self.num_tiers,
             tier_processed=[0] * self.num_tiers,
@@ -240,13 +263,26 @@ class ClusterBackend:
                                        Tuple[int, ...]]] = []
 
     # ---------------- ExecutorBackend protocol ------------------------
+    def _live_slices(self) -> List[WorkerSlice]:
+        """Slices the control plane may plan over: everything not yet
+        quarantined. A crashed-but-undetected slice still counts — the
+        controller only knows what the heartbeat sweep has discovered."""
+        return [sl for sl in self.runtime.slices
+                if sl.wid not in self._quarantined]
+
+    def _schedulable(self, sl: WorkerSlice) -> bool:
+        """Slices execution may land batches on (ground truth: a crashed
+        slice runs nothing even before detection)."""
+        return sl.alive and sl.wid not in self._quarantined
+
     def census(self) -> Census:
+        live = self._live_slices()
         by_class: Dict[str, int] = {}
-        for sl in self.runtime.slices:
+        for sl in live:
             if sl.class_name:
                 by_class[sl.class_name] = by_class.get(sl.class_name, 0) + 1
         return Census(now=self.now, active_slots=len(self.runtime.slices),
-                      live_workers=len(self.runtime.slices),
+                      live_workers=len(live),
                       live_by_class=tuple(sorted(by_class.items())))
 
     def telemetry_window(self) -> Telemetry:
@@ -257,8 +293,48 @@ class ClusterBackend:
                                   self.census())
 
     def detect_faults(self) -> None:
-        """Slices have no failure injection (yet): heartbeat sweep is a
-        no-op in cluster mode."""
+        """Heartbeat sweep (``HeartbeatScaling`` calls this at tick
+        start): quarantine slices whose last beat is older than the
+        heartbeat timeout — strip their role so no batch lands on them
+        and the census excludes them (the next plan reallocates around
+        the failure). Work queued at a tier the dead slice was the only
+        server of is counted as requeued (it waits for the re-plan).
+        A quarantined slice that heartbeats again (repair) rejoins with
+        no role — the planner reassigns it, paying the model reload."""
+        timeout = self.serving.heartbeat_timeout_s
+        for sl in self.runtime.slices:
+            stale = (self.now - sl.last_heartbeat) > timeout
+            if sl.wid in self._quarantined:
+                if not stale:          # fresh beats: repaired, rejoin
+                    self._quarantined.discard(sl.wid)
+                    sl.role = None
+                continue
+            if stale:
+                self._quarantined.add(sl.wid)
+                role, sl.role = sl.role, None
+                if role is not None and not any(
+                        o.role == role and self._schedulable(o)
+                        for o in self.runtime.slices):
+                    # its tier lost the last server: that backlog is
+                    # displaced until the next plan restores capacity
+                    self.result.requeued_on_failure += \
+                        len(self.queues[role]) if role < len(self.queues) \
+                        else 0
+
+    def _advance_faults(self, now: float) -> None:
+        """Apply injected crash/repair events up to ``now`` and beat the
+        heartbeats of alive slices (called once per serve period)."""
+        while self._fault_events and self._fault_events[0][0] <= now:
+            _t, kind, wid = self._fault_events.pop(0)
+            sl = self.runtime.slices[wid]
+            if kind == "fail":
+                sl.alive = False
+            else:
+                sl.alive = True
+                sl.role = None         # model state lost; reload on assign
+        for sl in self.runtime.slices:
+            if sl.alive:
+                sl.last_heartbeat = now
 
     def submit(self, queries: Sequence[Query]) -> None:
         for q in queries:
@@ -273,23 +349,78 @@ class ClusterBackend:
 
     def apply_plan(self, decision: ControlDecision) -> None:
         plan = decision.plan
+        new_spec = getattr(decision, "cascade", None)
+        if new_spec is not None and new_spec != self.spec:
+            self._switch_cascade(new_spec,
+                                 getattr(decision, "profiles", None))
         self.thresholds = tuple(decision.thresholds)
         self.result.record_decision(self.now, decision)
         self.batches = tuple(plan.batches)
+        live = self._live_slices()
         class_workers = getattr(plan, "class_workers", None)
         if class_workers is not None and self.serving.worker_classes:
             for wc in self.serving.worker_classes:
-                group = [sl for sl in self.runtime.slices
-                         if sl.class_name == wc.name]
+                group = [sl for sl in live if sl.class_name == wc.name]
                 want = [i for i, alloc in enumerate(class_workers)
                         for _ in range(alloc.get(wc.name, 0))]
                 self._assign_group(group, want)
         else:
             want = [i for i, n in enumerate(plan.workers)
                     for _ in range(n)]
-            self._assign_group(list(self.runtime.slices), want)
+            self._assign_group(live, want)
         self.plan_timeline.append((self.now, tuple(plan.workers),
                                    tuple(plan.batches)))
+
+    def _switch_cascade(self, new_spec, new_profiles=None) -> None:
+        """Mid-run cascade switch with a *staged* slice reload: a slice
+        whose model the new cascade still serves keeps serving it at its
+        new tier position (warm, no stall); a slice on a vanished model
+        drops its role and pays ``model_load_s`` when the plan assigns
+        one. Per-tier queues remap by model name; backlog on vanished
+        models re-enters at the proportional depth. Every tier of the
+        new cascade must have a loaded jitted stage
+        (``executable_models``)."""
+        from repro.serving.autocascade import (grow_tier_accounting,
+                                               tier_remap)
+        missing = [t.model for t in new_spec.tiers
+                   if t.model not in self._stages_by_model]
+        if missing:
+            raise ValueError(
+                f"cannot switch to cascade {new_spec.name!r}: no loaded "
+                f"stage for models {missing}; executable: "
+                f"{sorted(self._stages_by_model)}")
+        new_n = new_spec.num_tiers
+        remap, kept = tier_remap(self.spec, new_spec)
+        new_queues: List[deque] = [deque() for _ in range(new_n)]
+        for i, q in enumerate(self.queues):
+            for qq in q:
+                qq.stage = remap(i)
+                new_queues[qq.stage].append(qq)
+        self.queues = new_queues
+        for sl in self.runtime.slices:
+            if sl.role is None:
+                continue
+            if kept(sl.role):
+                sl.role = remap(sl.role)
+            else:
+                sl.role = None         # variant change: staged reload
+        self.spec = new_spec
+        self.num_tiers = new_n
+        self._stage_fns = [self._stages_by_model[t.model]
+                           for t in new_spec.tiers]
+        if new_profiles is not None:
+            self.profiles = as_boundary_profiles(new_profiles,
+                                                 new_spec.num_boundaries)
+        else:
+            self.profiles = as_boundary_profiles(self.profiles,
+                                                 new_spec.num_boundaries)
+        grow_tier_accounting(self.result, new_n)
+
+    @property
+    def executable_models(self) -> Tuple[str, ...]:
+        """Models with a loaded jitted stage (switch candidates must stay
+        within this pool)."""
+        return tuple(sorted(self._stages_by_model))
 
     def _assign_group(self, group: List[WorkerSlice],
                       want: List[Optional[int]]) -> None:
@@ -341,7 +472,8 @@ class ClusterBackend:
                 if not self.queues[tier]:
                     continue
                 slices = sorted((sl for sl in self.runtime.slices
-                                 if sl.role == tier),
+                                 if sl.role == tier
+                                 and self._schedulable(sl)),
                                 key=lambda sl: self.busy_until[sl.wid])
                 for sl in slices:
                     if not self.queues[tier]:
@@ -420,7 +552,12 @@ class ClusterBackend:
         (estimate → solve → thresholds → enact) against measured
         profiles."""
         from repro.core.quality import QualityModel
-        quality = quality_model or QualityModel.from_cascade(self.spec)
+        # a cascade-searching planner may only switch within the loaded
+        # stage pool: drop unenactable candidates up front, so the search
+        # can never commit a switch apply_plan would refuse mid-run
+        restrict = getattr(control.planner, "restrict_to_models", None)
+        if restrict is not None:
+            restrict(self._stages_by_model)
         arrivals = trace.arrivals(self.rng)
         stage = self.arrival_stage % self.num_tiers
         pending = deque(
@@ -428,6 +565,7 @@ class ClusterBackend:
                   deadline=float(t) + self.spec.slo_s,
                   stage=stage, deferred=stage > 0)
             for i, t in enumerate(arrivals))
+        self._advance_faults(0.0)
         control.tick(self, first=True)
         period = self.serving.control_period_s
         end_t = trace.duration_s + 4 * self.spec.slo_s
@@ -439,10 +577,15 @@ class ClusterBackend:
                 batch.append(pending.popleft())
             self.submit(batch)
             self.now = t_end
+            self._advance_faults(t_end)
             self._prune_window()
             control.tick(self)
             self._drain(t_end)
-            self._record_quality(quality, t_end)
+            # the default quality model follows the *active* cascade
+            # across mid-run switches; an explicit one stays pinned
+            self._record_quality(
+                quality_model or QualityModel.from_cascade(self.spec),
+                t_end)
             t = t_end
             if (not pending and not any(self.queues)):
                 break
@@ -456,7 +599,8 @@ class ClusterBackend:
         t_grace = end_t
         while any(self.queues):
             servable = any(
-                q and any(sl.role == tier for sl in self.runtime.slices)
+                q and any(sl.role == tier and self._schedulable(sl)
+                          for sl in self.runtime.slices)
                 for tier, q in enumerate(self.queues))
             if not servable:
                 break

@@ -51,9 +51,21 @@ class Census:
 
 @dataclasses.dataclass(frozen=True)
 class ControlDecision:
-    """One control tick's output, handed to the backend to enact."""
+    """One control tick's output, handed to the backend to enact.
+
+    ``cascade``/``profiles`` are set by cascade-searching planners
+    (serving/autocascade.py:CascadeSearchPlanner): a non-None ``cascade``
+    that differs from the backend's current spec instructs the backend
+    to *switch the serving cascade* mid-run (tier remap + model reloads)
+    and adopt ``profiles`` as its live per-boundary deferral state (the
+    planner shares the same objects, so online f(t) refreshes keep
+    flowing). ``None`` (every non-searching planner) means "keep the
+    current cascade" — existing behavior, bit-identical.
+    """
     plan: AllocationPlan
     thresholds: Tuple[float, ...]
+    cascade: Optional[object] = None          # CascadeSpec | None
+    profiles: Optional[Tuple[DeferralProfile, ...]] = None
 
 
 @runtime_checkable
@@ -298,9 +310,14 @@ class ControlPlane:
         else:
             tel, demand = Telemetry(demand_qps=0.0), 0.0
         plan = self.planner.plan(tel, demand)
+        chosen = getattr(self.planner, "chosen_cascade", None)
+        chosen_profiles = getattr(self.planner, "chosen_profiles", None)
         decision = ControlDecision(plan=plan,
                                    thresholds=self.thresholds.select(plan,
-                                                                     tel))
+                                                                     tel),
+                                   cascade=chosen,
+                                   profiles=tuple(chosen_profiles)
+                                   if chosen_profiles is not None else None)
         backend.apply_plan(decision)
         return decision
 
@@ -335,12 +352,15 @@ def build_control_plane(spec, serving: ServingConfig,
                         fixed_plan: Optional[AllocationPlan] = None,
                         estimator: "DemandEstimator | str | None" = None,
                         trace=None,
+                        planner: Optional[PlannerPolicy] = None,
                         thresholds: Optional[ThresholdPolicy] = None,
                         scaling: Optional[ScalingPolicy] = None
                         ) -> ControlPlane:
     """The default DiffServe control plane: EWMA estimation (or the
     ``serving.estimator`` registry name), solver re-planning (or a fixed
-    plan), plan-thresholds, heartbeat fault detection.
+    plan, or an explicit ``planner`` policy such as a
+    ``CascadeSearchPlanner``), plan-thresholds, heartbeat fault
+    detection.
 
     ``profiles`` must be the backend's own ``DeferralProfile`` objects so
     online f(t) refreshes flow into the planner."""
@@ -348,8 +368,12 @@ def build_control_plane(spec, serving: ServingConfig,
         estimator = serving.estimator
     if isinstance(estimator, str):
         estimator = make_estimator(estimator, serving, trace)
-    if fixed_plan is not None:
-        planner: PlannerPolicy = FixedPlanPolicy(fixed_plan)
+    if planner is not None:
+        if fixed_plan is not None:
+            raise ValueError("pass either an explicit planner or a "
+                             "fixed_plan, not both")
+    elif fixed_plan is not None:
+        planner = FixedPlanPolicy(fixed_plan)
     else:
         planner = SolverPlanner(ResourceManager(spec, serving, profiles,
                                                 allocator_options))

@@ -8,29 +8,26 @@ Batch scaling: diffusion latency grows near-linearly in batch with a
 sub-linear startup term (profiled marginal costs below reproduce the
 paper's 4.6x SDXL-vs-Lightning gap at batch 16).
 
-The registry holds the paper's three two-tier cascades plus deeper
-N-tier pipelines (HADIS/Argus-style variant pools) — a cascade is just a
-``CascadeSpec``; register more by adding an entry here.
+The cascades themselves are auto-constructed: the variant pool lives in
+``serving/autocascade.py`` (``VariantCatalog``), and ``CASCADES`` is the
+set of *pinned* catalog queries resolved through ``CascadeBuilder`` —
+every legacy name resolves to a bit-identical ``CascadeSpec`` (pinned by
+tests/test_autocascade.py and the control-plane golden suite). Register
+more cascades by extending the builtin catalog, loading a ``--catalog``
+JSON file, or letting the builder enumerate the quality/latency frontier
+(``--auto-cascade`` / ``--list-frontier``).
 """
 from __future__ import annotations
 
 from typing import Dict, List, Sequence, Tuple
 
-from repro.config.base import (CascadeSpec, LatencyProfile, ServingConfig,
+from repro.config.base import (CascadeSpec, ServingConfig,
                                TierSpec, WorkerClass, parse_class_costs,
                                parse_worker_classes)
-
-# model -> e(b) = base + marginal*(b-1)
-MODEL_PROFILES: Dict[str, LatencyProfile] = {
-    "sd-turbo": LatencyProfile(0.10, 0.055),
-    "sdxs": LatencyProfile(0.05, 0.028),
-    "sdv1.5": LatencyProfile(1.78, 0.95),
-    "sdxl-lightning": LatencyProfile(0.50, 0.30),
-    "sdxl": LatencyProfile(6.00, 3.40),
-}
-
-DISCRIMINATOR_LATENCY_S = {"efficientnet_s": 0.010, "resnet34": 0.002,
-                           "vit_b16": 0.005}
+from repro.serving.autocascade import (DISCRIMINATOR_LATENCY_S,  # noqa: F401
+                                       MODEL_PROFILES, CascadeBuilder,
+                                       VariantCatalog, builtin_catalog,
+                                       load_catalog)
 
 # Diffusion-workload latency multipliers vs the A100-80GB the
 # MODEL_PROFILES were measured on (paper §5's heterogeneous clusters):
@@ -95,33 +92,37 @@ def make_cascade(name: str, models: Sequence[str], *, slo_s: float,
                        easy_fractions=tuple(easy_fractions))
 
 
-CASCADES: Dict[str, CascadeSpec] = {
-    # Cascade 1: SD-Turbo -> SDv1.5, SLO 5 s, MS-COCO 512x512
-    "sdturbo": make_cascade(
-        "sdturbo", ("sd-turbo", "sdv1.5"), slo_s=5.0,
-        fid_per_tier=(22.6, 18.55), fid_best_mix=17.9,
-        best_mix_defer_frac=0.65, easy_fractions=(0.35,)),
-    # Cascade 2: SDXS -> SDv1.5, SLO 5 s
-    "sdxs": make_cascade(
-        "sdxs", ("sdxs", "sdv1.5"), slo_s=5.0,
-        fid_per_tier=(24.1, 18.55), fid_best_mix=18.1,
-        best_mix_defer_frac=0.70, easy_fractions=(0.25,)),
-    # Cascade 3: SDXL-Lightning -> SDXL, SLO 15 s, DiffusionDB 1024x1024
-    "sdxlltn": make_cascade(
-        "sdxlltn", ("sdxl-lightning", "sdxl"), slo_s=15.0,
-        fid_per_tier=(27.3, 21.0), fid_best_mix=20.3,
-        best_mix_defer_frac=0.60, easy_fractions=(0.30,)),
-    # 3-tier: SDXS -> SD-Turbo -> SDv1.5, SLO 5 s (512x512 variant pool)
-    "sdxs3": make_cascade(
-        "sdxs3", ("sdxs", "sd-turbo", "sdv1.5"), slo_s=5.0,
-        fid_per_tier=(24.1, 22.6, 18.55), fid_best_mix=17.9,
-        best_mix_defer_frac=0.65, easy_fractions=(0.25, 0.35)),
-    # 3-tier: SDXS -> SDXL-Lightning -> SDXL, SLO 15 s (1024x1024 pool)
-    "sdxl3": make_cascade(
-        "sdxl3", ("sdxs", "sdxl-lightning", "sdxl"), slo_s=15.0,
-        fid_per_tier=(28.4, 27.3, 21.0), fid_best_mix=20.3,
-        best_mix_defer_frac=0.60, easy_fractions=(0.20, 0.30)),
-}
+# The registry: pinned catalog queries resolved through the builder —
+# "sdturbo" (SD-Turbo -> SDv1.5, SLO 5 s, MS-COCO 512), "sdxs",
+# "sdxlltn" (SDXL-Lightning -> SDXL, SLO 15 s, DiffusionDB 1024), plus
+# the 3-tier variant pools "sdxs3" / "sdxl3". Parity with the legacy
+# hand-built specs is pinned by tests/test_autocascade.py.
+CASCADES: Dict[str, CascadeSpec] = CascadeBuilder(builtin_catalog()).registry()
+
+
+def resolve_cascade(name: str,
+                    catalog: "VariantCatalog | str | None" = None
+                    ) -> CascadeSpec:
+    """Resolve a cascade name: a pinned query of ``catalog`` (a
+    ``VariantCatalog``, a ``--catalog`` source string, or None for the
+    builtin), the legacy ``CASCADES`` registry, or an auto-chain name of
+    the form ``auto:<family>:<model>+<model>+...``."""
+    if isinstance(catalog, VariantCatalog):
+        cat = catalog
+    else:
+        cat = load_catalog(catalog or "builtin")
+    builder = CascadeBuilder(cat)
+    if name in cat.pinned_names():
+        return builder.build_pinned(name)
+    if name in CASCADES:
+        return CASCADES[name]
+    if name.startswith("auto:"):
+        bits = name.split(":", 2)
+        if len(bits) == 3 and bits[2]:
+            return builder.build(bits[1], bits[2].split("+"))
+    raise KeyError(f"unknown cascade {name!r}; known "
+                   f"{sorted(set(CASCADES) | set(cat.pinned_names()))} "
+                   f"or auto:<family>:<m1>+<m2>+...")
 
 
 def list_cascades() -> List[Tuple[str, str, float, int]]:
@@ -132,10 +133,12 @@ def list_cascades() -> List[Tuple[str, str, float, int]]:
             for name, c in sorted(CASCADES.items())]
 
 
-def default_serving(cascade: str = "sdturbo", num_workers: int = 16,
-                    **kw) -> ServingConfig:
-    """ServingConfig for a registered cascade. When ``worker_classes`` is
-    given, ``num_workers`` is derived from the class counts.
+def default_serving(cascade: "str | CascadeSpec" = "sdturbo",
+                    num_workers: int = 16, **kw) -> ServingConfig:
+    """ServingConfig for a registered cascade name (or an already-built
+    ``CascadeSpec``, e.g. a catalog/auto-chain resolution). When
+    ``worker_classes`` is given, ``num_workers`` is derived from the
+    class counts.
 
     ``controller`` / ``estimator`` kwargs select the control-plane policy
     bundle and demand estimator by registry name
@@ -145,5 +148,5 @@ def default_serving(cascade: str = "sdturbo", num_workers: int = 16,
     wcs = kw.get("worker_classes") or ()
     if wcs:
         num_workers = sum(wc.count for wc in wcs)
-    return ServingConfig(cascade=CASCADES[cascade],
-                         num_workers=num_workers, **kw)
+    spec = CASCADES[cascade] if isinstance(cascade, str) else cascade
+    return ServingConfig(cascade=spec, num_workers=num_workers, **kw)

@@ -123,6 +123,15 @@ class SimResult:
     # (t, $/hour) of each applied plan (cost-weighted objective runs)
     plan_cost_timeline: List[Tuple[float, float]] = \
         dataclasses.field(default_factory=list)
+    # (t, cascade name) whenever a cascade-searching planner's choice
+    # changes (first entry = the initial choice); empty for fixed-cascade
+    # controllers
+    cascade_timeline: List[Tuple[float, str]] = \
+        dataclasses.field(default_factory=list)
+
+    @property
+    def cascade_switches(self) -> int:
+        return max(len(self.cascade_timeline) - 1, 0)
 
     @property
     def violation_ratio(self) -> float:
@@ -164,6 +173,11 @@ class SimResult:
         self.thresholds_timeline.append((now, tuple(decision.thresholds)))
         if getattr(plan, "cost", None) is not None:
             self.plan_cost_timeline.append((now, plan.cost))
+        cascade = getattr(decision, "cascade", None)
+        if cascade is not None and (
+                not self.cascade_timeline
+                or self.cascade_timeline[-1][1] != cascade.name):
+            self.cascade_timeline.append((now, cascade.name))
 
 
 def _per_boundary_fn(fn: Optional[Callable]) -> Optional[Callable]:
@@ -214,6 +228,9 @@ class Simulator:
                 "control plane's planner instead")
         self.control = control
         self.confidence_fn = _per_boundary_fn(confidence_fn)
+        # a caller-supplied quality model is pinned; the default follows
+        # the active cascade across mid-run switches
+        self._default_quality = quality_model is None
         self.quality = quality_model or QualityModel.from_cascade(self.spec)
 
         self.workers: Dict[int, Worker] = {}
@@ -247,9 +264,15 @@ class Simulator:
         # rebuild LatencyScale/LatencyProfile objects every call
         self._class_tier: Dict[Tuple[str, int],
                                Tuple[LatencyProfile, float]] = {}
+        self._build_class_tier()
+
+    def _build_class_tier(self):
+        """(Re)build the per-(class, tier) scaled-latency cache for the
+        active cascade (constant between cascade switches)."""
+        self._class_tier = {}
         for role, tier in enumerate(self.spec.tiers):
             disc = tier.disc_latency_s if role < self.num_tiers - 1 else 0.0
-            for wc in serving.worker_classes:
+            for wc in self.serving.worker_classes:
                 self._class_tier[(wc.name, role)] = (
                     wc.tier_profile(tier),
                     disc * wc.scale_for(tier.model).base)
@@ -536,10 +559,17 @@ class Simulator:
         self.control.tick(self, first=first)
 
     def apply_plan(self, decision: ControlDecision):
-        """Enact a control decision: record it, set live thresholds, and
-        (re)assign worker roles/batches (stable matching; reassigned
-        workers' orphaned queues re-route after all roles settle)."""
+        """Enact a control decision: switch the serving cascade when the
+        planner chose a different one, record the decision, set live
+        thresholds, and (re)assign worker roles/batches (stable matching;
+        reassigned workers' orphaned queues re-route after all roles
+        settle)."""
         plan = decision.plan
+        switch_orphans: List[Query] = []
+        new_spec = getattr(decision, "cascade", None)
+        if new_spec is not None and new_spec != self.spec:
+            switch_orphans = self._switch_cascade(
+                new_spec, getattr(decision, "profiles", None))
         self.thresholds = tuple(decision.thresholds)
         self.result.record_decision(self.now, decision)
         live = [w for w in self.workers.values()
@@ -549,7 +579,7 @@ class Simulator:
             # heterogeneous plan: each worker class gets its own per-tier
             # role quota so slow hardware lands on the tiers the solver
             # picked for it
-            orphans: List[Query] = []
+            orphans: List[Query] = list(switch_orphans)
             for wc in self.serving.worker_classes:
                 live_c = [w for w in live if w.wclass == wc.name]
                 want_c: List[Optional[int]] = [
@@ -560,11 +590,68 @@ class Simulator:
         else:
             want: List[Optional[int]] = [
                 i for i, n in enumerate(plan.workers) for _ in range(n)]
-            self._settle_orphans(self._assign_roles(live, want))
+            self._settle_orphans(switch_orphans
+                                 + self._assign_roles(live, want))
         for w in live:
             if w.role is not None:
                 w.batch_size = plan.batches[w.role]
             self._maybe_start(w)
+
+    def _switch_cascade(self, new_spec,
+                        new_profiles=None) -> List[Query]:
+        """Mid-run cascade switch (CascadeSearchPlanner decisions): remap
+        tiers between the old and new cascade by model name — a tier
+        whose model the new cascade still serves keeps its position (and
+        its workers stay warm); a vanished model maps queries to the
+        proportional depth and forces its workers through a model reload
+        (role ``None`` -> the plan's assignment charges ``model_load_s``,
+        so every *variant change* pays the load). Returns orphaned
+        queued work for the caller to settle once the new plan's roles
+        land. Conservation: every query is remapped exactly once (hedged
+        duplicates share the object) and orphans re-route or drop
+        through ``_settle_orphans``."""
+        from repro.serving.autocascade import (grow_tier_accounting,
+                                               tier_remap)
+        old = self.spec
+        new_n = new_spec.num_tiers
+        remap, kept = tier_remap(old, new_spec)
+        self.spec = new_spec
+        self.cascade = new_spec
+        self.num_tiers = new_n
+        if new_profiles is not None:
+            # adopt the planner's per-boundary profiles (shared objects:
+            # online f(t) refreshes keep flowing into the search)
+            self.profiles = as_boundary_profiles(new_profiles,
+                                                 new_spec.num_boundaries)
+        else:
+            self.profiles = as_boundary_profiles(self.profiles,
+                                                 new_spec.num_boundaries)
+        if self._default_quality:
+            self.quality = QualityModel.from_cascade(new_spec)
+        self._build_class_tier()
+        grow_tier_accounting(self.result, new_n)
+        # remap every un-finished query exactly once (hedged duplicates
+        # appear in two queues but share the Query object)
+        seen = set()
+        orphans: List[Query] = []
+        for w in self.workers.values():
+            for q in list(w.queue) + list(w.in_flight):
+                if id(q) in seen:
+                    continue
+                seen.add(id(q))
+                if q.done_at is None and not q.dropped:
+                    q.stage = remap(q.stage)
+            if w.batch_role is not None:
+                w.batch_role = remap(w.batch_role)
+            if w.role is not None:
+                if kept(w.role):
+                    w.role = remap(w.role)
+                else:
+                    # variant change: this worker must reload a model
+                    orphans.extend(w.queue)
+                    w.queue.clear()
+                    w.role = None
+        return orphans
 
     def _assign_roles(self, live: List[Worker],
                       want: List[Optional[int]]) -> List[Query]:

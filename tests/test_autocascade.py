@@ -1,0 +1,428 @@
+"""Cascade auto-construction tests: builder parity with the legacy
+hand-built registry (every ``CASCADES`` name resolves through
+``VariantCatalog``/``CascadeBuilder`` to a bit-identical spec, and the
+seeded golden suite still holds through it), the fitted
+``BoundaryQualityModel`` construction path, catalog queries, Pareto
+pruning, the ``CascadeSearchPlanner``'s pinned-to-fixed equivalence with
+``SolverPlanner``, and mid-run cascade switches (tier remap
+conservation + model-load charges) in the simulator backend.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.config.base import CascadeSpec, LatencyProfile, TierSpec
+from repro.core.confidence import DeferralProfile, synthetic_confidence_scores
+from repro.core.milp import AllocationPlan, Telemetry
+from repro.core.quality import (BEST_MIX_DIP_COEF, BoundaryQualityModel)
+from repro.serving.autocascade import (CascadeBuilder, CascadeSearchPlanner,
+                                       CatalogFamily, ModelVariant,
+                                       VariantCatalog, builtin_catalog,
+                                       default_candidates, expected_depth,
+                                       fit_boundary_models, subchain_specs)
+from repro.serving.baselines import (make_profiles, run_baseline,
+                                     run_controller)
+from repro.serving.controlplane import (ControlDecision, ControlPlane,
+                                        EwmaEstimator, build_control_plane)
+from repro.serving.profiles import CASCADES, default_serving, resolve_cascade
+from repro.serving.simulator import Query, SimConfig, Simulator
+from repro.serving.trace import azure_like_trace, static_trace
+from repro.testing.golden import sim_fingerprint as fingerprint
+
+
+# ---------------------------------------------------------------------------
+# Builder parity: the registry is a set of pinned catalog queries
+# ---------------------------------------------------------------------------
+def test_registry_resolves_through_builder_bit_identically():
+    reg = CascadeBuilder(builtin_catalog()).registry()
+    assert set(reg) == set(CASCADES)
+    for name, spec in reg.items():
+        assert spec == CASCADES[name]
+
+
+def test_pinned_specs_match_legacy_hand_built_values():
+    """The paper numbers the legacy hand-built registry carried, pinned
+    against the catalog resolution (golden parity at the spec level)."""
+    c = CASCADES["sdturbo"]
+    assert [t.model for t in c.tiers] == ["sd-turbo", "sdv1.5"]
+    assert c.tiers[0].profile == LatencyProfile(0.10, 0.055)
+    assert (c.tiers[0].disc_latency_s, c.tiers[1].disc_latency_s) \
+        == (0.010, 0.0)
+    assert (c.slo_s, c.fid_per_tier, c.fid_best_mix,
+            c.best_mix_defer_frac, c.easy_fractions) \
+        == (5.0, (22.6, 18.55), 17.9, 0.65, (0.35,))
+    c3 = CASCADES["sdxs3"]
+    assert [t.model for t in c3.tiers] == ["sdxs", "sd-turbo", "sdv1.5"]
+    assert (c3.fid_per_tier, c3.easy_fractions) \
+        == ((24.1, 22.6, 18.55), (0.25, 0.35))
+    cx = CASCADES["sdxl3"]
+    assert (cx.slo_s, cx.fid_per_tier) == (15.0, (28.4, 27.3, 21.0))
+
+
+def test_resolve_cascade_names():
+    assert resolve_cascade("sdturbo") == CASCADES["sdturbo"]
+    auto = resolve_cascade("auto:coco512:sdxs+sdv1.5")
+    assert [t.model for t in auto.tiers] == ["sdxs", "sdv1.5"]
+    assert auto.fid_per_tier == (24.1, 18.55)
+    # fitted best-mix prior: dip below the best anchor over the spread
+    assert auto.fid_best_mix == pytest.approx(
+        18.55 - BEST_MIX_DIP_COEF * (24.1 - 18.55))
+    with pytest.raises(KeyError):
+        resolve_cascade("nope")
+    with pytest.raises(KeyError):
+        resolve_cascade("auto:coco512:sdxs+unknown-model")
+
+
+# ---------------------------------------------------------------------------
+# BoundaryQualityModel: the fitted construction path
+# ---------------------------------------------------------------------------
+def test_deferral_profile_construction_is_bit_identical_to_legacy():
+    """make_profiles (the control plane's profile source) now routes
+    through the fitted model; the scores must equal the legacy direct
+    DeferralProfile(synthetic_confidence_scores(...)) construction."""
+    for name in ("sdturbo", "sdxs3"):
+        sv = default_serving(name)
+        spec = sv.cascade
+        for seed in (0, 5):
+            legacy = []
+            for b in range(spec.num_boundaries):
+                rng = np.random.default_rng(seed + 7919 * b)
+                legacy.append(DeferralProfile(synthetic_confidence_scores(
+                    rng, 5000, spec.easy_fraction_at(b))))
+            new = make_profiles(sv, seed)
+            models = fit_boundary_models(spec, seed)
+            for lp, np_, m in zip(legacy, new, models):
+                assert lp._scores == np_._scores
+                assert lp._scores == list(m.deferral_profile()._scores)
+
+
+def test_boundary_model_quality_anchors():
+    m = BoundaryQualityModel.fit(np.linspace(0.0, 1.0, 1001),
+                                 fid_keep=22.6, fid_defer=18.55,
+                                 fid_best_mix=17.9,
+                                 best_mix_defer_frac=0.65)
+    # endpoints sit at the anchors up to the dip's bell-shaped skirts
+    # (existing QualityModel behavior: the mix dip never vanishes fully)
+    assert m.fid(0.0) == pytest.approx(22.6, abs=0.25)
+    assert m.fid(1.5) == pytest.approx(18.55, abs=0.25)
+    # a skill-1.0 router hits the best-mix anchor at the best-mix point
+    t_best = m.threshold_for(0.65)
+    assert m.defer_fraction(t_best) == pytest.approx(0.65, abs=1e-3)
+    assert m.fid(t_best) == pytest.approx(17.9, abs=0.02)
+    # a bad router pays the dip instead of harvesting it
+    assert m.fid(t_best, router="clipscore") > m.fid(t_best)
+    pts = m.frontier(grid=11)
+    assert len(pts) == 11
+    assert pts[0][1] == 0.0 and pts[-1][2] == pytest.approx(18.55, abs=0.25)
+    assert m.easy_fraction() == pytest.approx(0.2, abs=1e-2)
+
+
+def test_fit_uses_dip_prior_without_best_mix_anchor():
+    m = BoundaryQualityModel.fit([0.5, 0.6], fid_keep=24.0, fid_defer=20.0)
+    assert m.fid_best_mix == pytest.approx(20.0 - BEST_MIX_DIP_COEF * 4.0)
+    with pytest.raises(ValueError):
+        BoundaryQualityModel.fit([], fid_keep=1.0, fid_defer=1.0)
+
+
+def test_expected_depth():
+    half = DeferralProfile([0.25] * 5 + [0.75] * 5)    # f(0.5) = 0.5
+    assert expected_depth(2, (half,), (0.0,)) == 0.0
+    assert expected_depth(2, (half,), (0.5,)) == pytest.approx(0.5)
+    assert expected_depth(2, (half,), (1.1,)) == pytest.approx(1.0)
+    # 3 tiers, both boundaries defer half: depth = .5*0 + .25*.5 + .25*1
+    assert expected_depth(3, (half, half), (0.5, 0.5)) \
+        == pytest.approx(0.5 * 0 + 0.25 * 0.5 + 0.25 * 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Catalog queries
+# ---------------------------------------------------------------------------
+def test_catalog_json_roundtrip():
+    cat = VariantCatalog.from_json({
+        "families": {"fam": {"slo_s": 3.0}},
+        "variants": [
+            {"name": "a", "family": "fam", "base_s": 0.1,
+             "marginal_s": 0.01, "fid": 25.0, "easy_fraction": 0.4},
+            {"name": "b", "family": "fam", "base_s": 1.0,
+             "marginal_s": 0.5, "fid": 19.0}],
+        "pinned": {"ab": {"family": "fam", "chain": ["a", "b"],
+                          "fid_best_mix": 18.5,
+                          "best_mix_defer_frac": 0.6}}})
+    spec = CascadeBuilder(cat).build_pinned("ab")
+    assert [t.model for t in spec.tiers] == ["a", "b"]
+    assert spec.slo_s == 3.0
+    assert spec.fid_per_tier == (25.0, 19.0)
+    assert spec.easy_fractions == (0.4,)
+    assert spec.fid_best_mix == 18.5
+
+
+def test_catalog_validation():
+    fam = CatalogFamily("f", 5.0)
+    v = ModelVariant("a", "f", LatencyProfile(0.1, 0.01), 20.0)
+    with pytest.raises(ValueError):
+        VariantCatalog((fam,), (ModelVariant("a", "ghost",
+                                             LatencyProfile(0.1, 0.01),
+                                             20.0),))
+    with pytest.raises(ValueError):
+        VariantCatalog((fam,), (v, v))                 # duplicate variant
+    with pytest.raises(KeyError):
+        VariantCatalog((fam,), (v,)).variant("f", "missing")
+
+
+def test_catalog_with_measured_profiles():
+    cat = builtin_catalog().with_profiles(
+        {"sdxs": LatencyProfile(0.2, 0.1)})
+    for fam in ("coco512", "diffdb1024"):
+        assert cat.variant(fam, "sdxs").profile == LatencyProfile(0.2, 0.1)
+    # unmeasured variants keep the reference profile
+    assert cat.variant("coco512", "sdv1.5").profile \
+        == builtin_catalog().variant("coco512", "sdv1.5").profile
+
+
+def test_catalog_from_spec_roundtrip():
+    spec = CASCADES["sdxs3"]
+    cat = VariantCatalog.from_spec(spec)
+    built = CascadeBuilder(cat).build_pinned("sdxs3")
+    assert built == spec
+
+
+# ---------------------------------------------------------------------------
+# Enumeration + Pareto pruning
+# ---------------------------------------------------------------------------
+def test_chains_are_latency_ordered_and_quality_decreasing():
+    b = CascadeBuilder(builtin_catalog())
+    chains = b.chains("coco512")
+    assert ("sdxs", "sd-turbo", "sdv1.5") in chains
+    assert ("sd-turbo", "sdv1.5") in chains
+    cat = b.catalog
+    for chain in chains:
+        vs = [cat.variant("coco512", m) for m in chain]
+        assert all(x.profile.base_s <= y.profile.base_s
+                   for x, y in zip(vs, vs[1:]))
+        assert all(x.fid > y.fid for x, y in zip(vs, vs[1:]))
+
+
+def test_frontier_prunes_dominated_chains_but_keeps_pinned():
+    b = CascadeBuilder(builtin_catalog())
+    frontier = b.frontier("coco512")
+    names = {s.spec.name: s for s in frontier}
+    assert {"sdturbo", "sdxs", "sdxs3"} <= set(names)
+    assert any(not s.pinned for s in frontier)        # auto chains exist
+    family = b.build_family("coco512")
+    # every pinned (registry) name always resolves, dominated or not
+    assert {"sdturbo", "sdxs", "sdxs3"} <= set(family)
+    # anything pruned was a dominated auto chain
+    dropped = {s.spec.name for s in frontier} - set(family)
+    assert all(names[n].dominated and not names[n].pinned for n in dropped)
+
+
+def test_subchain_specs():
+    subs = subchain_specs(CASCADES["sdxs3"])
+    chains = {tuple(t.model for t in s.tiers) for s in subs.values()}
+    assert chains == {("sdxs", "sdv1.5"), ("sd-turbo", "sdv1.5")}
+    for s in subs.values():
+        assert s.slo_s == CASCADES["sdxs3"].slo_s
+        assert s.tiers[-1].disc_latency_s == 0.0
+        assert s.tiers[0].disc_latency_s == 0.010
+        assert len(s.fid_per_tier) == len(s.tiers)
+        assert len(s.easy_fractions) == s.num_boundaries
+
+
+def test_default_candidates_pool():
+    pool = default_candidates(CASCADES["sdturbo"], registry=CASCADES)
+    # same SLO + same final model registry cascades, deduped by chain
+    assert set(pool) == {"sdturbo", "sdxs", "sdxs3"}
+    assert pool["sdturbo"] is CASCADES["sdturbo"]
+    pool3 = default_candidates(CASCADES["sdxs3"], registry=CASCADES)
+    assert "sdxlltn" not in pool3                     # different SLO pool
+
+
+# ---------------------------------------------------------------------------
+# CascadeSearchPlanner: pinned-to-fixed equivalence with SolverPlanner
+# ---------------------------------------------------------------------------
+def test_single_candidate_bit_identical_to_solver_planner_golden():
+    """The golden homogeneous configuration (test_controlplane.GOLDEN),
+    driven by the search planner restricted to one cascade, reproduces
+    the SolverPlanner result bit-for-bit."""
+    from test_controlplane import GOLDEN
+    sv = default_serving("sdturbo", num_workers=16,
+                         candidate_cascades=("sdturbo",))
+    r = run_controller("cascade-search",
+                       azure_like_trace(120, seed=3).scale(4, 32),
+                       sv, seed=0)
+    assert fingerprint(r) == GOLDEN["homogeneous"]
+
+
+def test_search_planner_rejects_mixed_slo_candidates():
+    sv = default_serving("sdturbo", num_workers=4)
+    profiles = {n: make_profiles(dataclasses.replace(sv,
+                                                     cascade=CASCADES[n]), 0)
+                for n in ("sdturbo", "sdxlltn")}
+    with pytest.raises(ValueError):
+        CascadeSearchPlanner(sv, {n: CASCADES[n] for n in profiles},
+                             profiles, active="sdturbo")
+    with pytest.raises(ValueError):
+        CascadeSearchPlanner(sv, {"sdturbo": CASCADES["sdturbo"]},
+                             {"sdturbo": profiles["sdturbo"]},
+                             active="missing")
+
+
+def test_search_switches_cascades_and_conserves_queries():
+    """Full catalog pool under a demand ramp: the planner switches the
+    serving cascade mid-run; query accounting stays conserved across the
+    tier remaps and the report records the switch timeline."""
+    sv = default_serving("sdturbo", num_workers=16,
+                         candidate_cascades=(
+                             "sdturbo", "sdxs", "sdxs3",
+                             "auto:coco512:sdxs+sd-turbo"))
+    r = run_controller("cascade-search", static_trace(48.0, 90), sv, seed=0)
+    assert r.completed + r.dropped == r.total
+    assert r.cascade_switches >= 1
+    assert len(r.cascade_timeline) == r.cascade_switches + 1
+    assert r.completed > 0.8 * r.total
+    # tier accounting grew to the deepest cascade served
+    assert len(r.completed_per_tier) >= 2
+    assert sum(r.completed_per_tier) == r.completed
+
+
+# ---------------------------------------------------------------------------
+# Mid-run switch mechanics (simulator backend)
+# ---------------------------------------------------------------------------
+def _fixed_cp(sv, profiles, plan):
+    return build_control_plane(sv.cascade, sv, profiles, fixed_plan=plan)
+
+
+def _plan(workers, batches, thresholds):
+    return AllocationPlan(workers=workers, batches=batches,
+                          thresholds=thresholds, expected_latency=1.0,
+                          feasible=True)
+
+
+def test_switch_charges_model_load_only_on_variant_change():
+    """sdturbo -> sdxs: tier 0 changes model (reload), tier 1 keeps
+    sdv1.5 (warm, no charge)."""
+    sv = default_serving("sdturbo", num_workers=4)
+    profiles = make_profiles(sv, 0)
+    plan = _plan((2, 2), (1, 1), (0.5,))
+    sim = Simulator(sv, profiles, SimConfig(seed=0),
+                    control=_fixed_cp(sv, profiles, plan))
+    sim.apply_plan(ControlDecision(plan=plan, thresholds=(0.5,)))
+    tier0 = [w for w in sim.workers.values() if w.role == 0]
+    tier1 = [w for w in sim.workers.values() if w.role == 1]
+    load0 = {w.wid: w.loading_until for w in tier0 + tier1}
+
+    sim.now = 10.0
+    spec_b = CASCADES["sdxs"]
+    prof_b = make_profiles(dataclasses.replace(sv, cascade=spec_b), 0)
+    sim.apply_plan(ControlDecision(plan=plan, thresholds=(0.4,),
+                                   cascade=spec_b, profiles=prof_b))
+    assert sim.spec == spec_b
+    assert sim.thresholds == (0.4,)
+    for w in tier0:        # sd-turbo -> sdxs: variant change, reload
+        assert w.loading_until == 10.0 + sim.sim.model_load_s
+    for w in tier1:        # sdv1.5 kept: warm, no new charge
+        assert w.loading_until == load0[w.wid]
+    # profiles adopted from the decision (shared objects)
+    assert sim.profiles[0] is prof_b[0]
+
+
+def test_switch_remaps_tiers_by_model_name():
+    """sdturbo (sd-turbo, sdv1.5) -> sdxs3 (sdxs, sd-turbo, sdv1.5):
+    kept models move to their new tier positions, with queued work and
+    accounting arrays following."""
+    sv = default_serving("sdturbo", num_workers=4)
+    profiles = make_profiles(sv, 0)
+    plan_a = _plan((2, 2), (1, 1), (0.5,))
+    sim = Simulator(sv, profiles, SimConfig(seed=0),
+                    control=_fixed_cp(sv, profiles, plan_a))
+    sim.apply_plan(ControlDecision(plan=plan_a, thresholds=(0.5,)))
+    # park a query on a tier-1 (sdv1.5) worker's queue
+    w1 = next(w for w in sim.workers.values() if w.role == 1)
+    q = Query(qid=0, arrival=0.0, deadline=99.0, stage=1)
+    w1.queue.append(q)
+
+    spec_b = CASCADES["sdxs3"]
+    prof_b = make_profiles(dataclasses.replace(sv, cascade=spec_b), 0)
+    plan_b = _plan((2, 1, 1), (1, 1, 1), (0.5, 0.5))
+    sim.now = 4.0
+    sim.apply_plan(ControlDecision(plan=plan_b, thresholds=(0.5, 0.5),
+                                   cascade=spec_b, profiles=prof_b))
+    assert sim.num_tiers == 3
+    assert q.stage == 2                       # sdv1.5 is tier 2 now
+    assert not q.dropped
+    assert len(sim.result.completed_per_tier) == 3
+    assert len(sim.result.deferred_per_boundary) == 2
+    # old sd-turbo workers now serve tier 1, old sdv1.5 workers tier 2
+    roles = sorted(w.role for w in sim.workers.values()
+                   if w.role is not None)
+    assert roles == sorted(
+        i for i, n in enumerate(plan_b.workers) for _ in range(n))
+
+
+def test_scripted_switch_run_conserves_and_completes():
+    """End-to-end: a scripted planner switches sdturbo -> sdxs3 -> sdxs
+    mid-run; conservation holds and queries complete in the new tiers."""
+    sv = default_serving("sdturbo", num_workers=6)
+    profiles = make_profiles(sv, 0)
+    specs = {
+        "sdturbo": (CASCADES["sdturbo"], profiles,
+                    _plan((3, 3), (2, 2), (0.6,))),
+        "sdxs3": (CASCADES["sdxs3"],
+                  make_profiles(dataclasses.replace(
+                      sv, cascade=CASCADES["sdxs3"]), 0),
+                  _plan((2, 2, 2), (2, 2, 2), (0.6, 0.6))),
+        "sdxs": (CASCADES["sdxs"],
+                 make_profiles(dataclasses.replace(
+                     sv, cascade=CASCADES["sdxs"]), 0),
+                 _plan((3, 3), (2, 2), (0.6,))),
+    }
+
+    class Scripted:
+        needs_telemetry = True
+
+        def __init__(self):
+            self.calls = 0
+
+        def plan(self, telemetry, demand):
+            self.calls += 1
+            name = ("sdturbo" if self.calls <= 4
+                    else "sdxs3" if self.calls <= 9 else "sdxs")
+            spec, profs, plan = specs[name]
+            self.chosen_cascade = spec
+            self.chosen_profiles = profs
+            return plan
+
+    control = ControlPlane(estimator=EwmaEstimator(0.6), planner=Scripted())
+    sim = Simulator(sv, profiles, SimConfig(seed=0), control=control)
+    r = sim.run(static_trace(4.0, 40))
+    assert r.completed + r.dropped == r.total
+    assert r.total > 0
+    assert r.completed > 0.7 * r.total
+    assert [n for _, n in r.cascade_timeline] == ["sdturbo", "sdxs3",
+                                                  "sdxs"]
+    assert len(r.completed_per_tier) == 3     # grew for the 3-tier phase
+    assert sum(r.completed_per_tier) == r.completed
+    assert sum(r.tier_processed) >= r.completed
+
+
+def test_switch_to_unrelated_models_reroutes_proportionally():
+    """A switch where no model survives: queries land at the
+    proportional depth and every worker reloads."""
+    sv = default_serving("sdturbo", num_workers=4)
+    profiles = make_profiles(sv, 0)
+    plan = _plan((2, 2), (1, 1), (0.5,))
+    sim = Simulator(sv, profiles, SimConfig(seed=0),
+                    control=_fixed_cp(sv, profiles, plan))
+    sim.apply_plan(ControlDecision(plan=plan, thresholds=(0.5,)))
+    spec_b = dataclasses.replace(
+        CASCADES["sdxlltn"], slo_s=5.0,
+        tiers=tuple(dataclasses.replace(t) for t in
+                    CASCADES["sdxlltn"].tiers))
+    prof_b = make_profiles(dataclasses.replace(sv, cascade=spec_b), 0)
+    sim.now = 6.0
+    sim.apply_plan(ControlDecision(plan=plan, thresholds=(0.5,),
+                                   cascade=spec_b, profiles=prof_b))
+    for w in sim.workers.values():
+        if w.role is not None:
+            assert w.loading_until == 6.0 + sim.sim.model_load_s

@@ -1,6 +1,9 @@
 """Cluster-mode tests: TP-slice device assignment (modular wrap), the
-measured per-class profile path, and the ClusterBackend running the full
-control loop (re-planning from measured profiles) on this CPU container.
+measured per-class profile path, the ClusterBackend running the full
+control loop (re-planning from measured profiles) on this CPU container,
+mid-run cascade switches (staged slice reload), and the per-slice
+heartbeat failure domain (fault injection -> detection -> re-planning ->
+recovery).
 """
 import dataclasses
 
@@ -10,11 +13,15 @@ import pytest
 
 from repro.config.base import (DiffusionConfig, LatencyProfile, LatencyScale,
                                TierSpec, WorkerClass, as_cascade_spec)
+from repro.core.milp import AllocationPlan
+from repro.serving.autocascade import subchain_specs
 from repro.serving.baselines import make_profiles
 from repro.serving.cluster import (ClusterBackend, ClusterRuntime,
                                    measured_worker_classes)
-from repro.serving.controlplane import ExecutorBackend, build_control_plane
-from repro.serving.profiles import default_serving
+from repro.serving.controlplane import (ControlDecision, ExecutorBackend,
+                                        build_control_plane)
+from repro.serving.profiles import CASCADES, default_serving
+from repro.serving.simulator import Query
 from repro.serving.trace import static_trace
 
 
@@ -114,8 +121,11 @@ class _StubCascade:
     """Minimal cascade for backend-mechanics tests (execution itself is
     monkeypatched)."""
 
+    def __init__(self, n: int = 2):
+        self.n = n
+
     def stage_fns(self):
-        return [(None, None, None), (None, None, None)]
+        return [(None, None, None)] * self.n
 
     def confidence(self, imgs):
         return np.ones(len(imgs))
@@ -150,6 +160,136 @@ def test_grace_drain_completes_slow_batches():
     assert r.dropped == 0              # servable backlog is never dropped
     assert r.completed == r.total
     assert max(backend.busy_until.values()) > 30.0   # grace path ran
+
+
+# ---------------------------------------------------------------------------
+# Mid-run cascade switch: staged slice reload
+# ---------------------------------------------------------------------------
+def test_cluster_switch_cascade_staged_reload():
+    """sdxs3 -> its (sdxs, sdv1.5) sub-chain: slices whose model
+    survives keep serving it warm at its new tier position; the
+    sd-turbo slice reloads (model_load_s on its virtual clock); per-tier
+    queues remap with no lost queries."""
+    sv = default_serving("sdxs3", num_workers=3)
+    rt = ClusterRuntime(_StubCascade(3), sv)
+    profiles = make_profiles(sv, 0)
+    plan3 = AllocationPlan(workers=(1, 1, 1), batches=(1, 1, 1),
+                           thresholds=(0.5, 0.5), expected_latency=1.0,
+                           feasible=True)
+    backend = ClusterBackend(rt, sv, profiles, seed=0)
+    backend.apply_plan(ControlDecision(plan=plan3, thresholds=(0.5, 0.5)))
+    assert sorted(sl.role for sl in rt.slices) == [0, 1, 2]
+    by_role = {sl.role: sl for sl in rt.slices}
+    busy0 = dict(backend.busy_until)      # initial loads already charged
+    backend.queues[1].append(Query(qid=0, arrival=0.0, deadline=9.0,
+                                   stage=1))
+    backend.queues[2].append(Query(qid=1, arrival=0.0, deadline=9.0,
+                                   stage=2))
+
+    sub = subchain_specs(sv.cascade)["sdxs3:sdxs+sdv1.5"]
+    prof2 = make_profiles(dataclasses.replace(sv, cascade=sub), 0)
+    plan2 = AllocationPlan(workers=(2, 1), batches=(1, 1),
+                           thresholds=(0.5,), expected_latency=1.0,
+                           feasible=True)
+    backend.now = 4.0
+    backend.apply_plan(ControlDecision(plan=plan2, thresholds=(0.5,),
+                                       cascade=sub, profiles=prof2))
+    assert backend.num_tiers == 2
+    assert backend.thresholds == (0.5,)
+    # warm moves: sdxs stays tier 0, sdv1.5 moves 2 -> 1, no new charge
+    assert by_role[0].role == 0
+    assert by_role[2].role == 1
+    assert backend.busy_until[by_role[0].wid] == busy0[by_role[0].wid]
+    assert backend.busy_until[by_role[2].wid] == busy0[by_role[2].wid]
+    # the sd-turbo slice's model vanished: reassigned + staged reload
+    assert by_role[1].role == 0
+    assert backend.busy_until[by_role[1].wid] == \
+        max(busy0[by_role[1].wid], 4.0) + backend.model_load_s
+    # queues remapped, nothing lost: sd-turbo backlog re-enters at the
+    # proportional depth, sdv1.5 backlog follows its model
+    assert sum(len(q) for q in backend.queues) == 2
+    assert len(backend.queues[1]) >= 1
+    assert len(backend.result.completed_per_tier) == 3   # grow-only
+    # switching outside the executable pool is refused
+    with pytest.raises(ValueError):
+        backend._switch_cascade(CASCADES["sdxlltn"])
+
+
+def test_cluster_serve_restricts_search_to_loaded_stages():
+    """A cascade-searching planner driving the cluster backend loses the
+    candidates whose models have no loaded stage before the first tick —
+    the search can never commit a switch apply_plan would refuse."""
+    from repro.serving.autocascade import CascadeSearchPlanner
+    from repro.serving.controlplane import ControlPlane, EwmaEstimator
+
+    sv = default_serving("sdturbo", num_workers=2)
+    rt = ClusterRuntime(_StubCascade(), sv)      # stages: sd-turbo, sdv1.5
+    profiles = make_profiles(sv, 0)
+    cands = {n: CASCADES[n] for n in ("sdturbo", "sdxs", "sdxs3")}
+    prof_by = {n: (profiles if n == "sdturbo" else
+                   make_profiles(dataclasses.replace(sv, cascade=c), 0))
+               for n, c in cands.items()}
+    planner = CascadeSearchPlanner(sv, cands, prof_by, active="sdturbo")
+    control = ControlPlane(estimator=EwmaEstimator(0.6), planner=planner)
+    backend = ClusterBackend(rt, sv, profiles, seed=0, model_load_s=0.0,
+                             confidence_fn=lambda n, b: np.ones(n))
+    backend._run_stage = lambda sl, tier, n: (0.05, np.zeros((n, 1, 1, 1)))
+    r = backend.serve(control, static_trace(1.0, 10))
+    # sdxs/sdxs3 need an 'sdxs' stage the runtime never loaded
+    assert set(planner.candidates) == {"sdturbo"}
+    assert r.completed + r.dropped == r.total
+
+
+# ---------------------------------------------------------------------------
+# Failure domain: per-slice heartbeat liveness
+# ---------------------------------------------------------------------------
+def test_cluster_heartbeat_fault_detection_and_recovery():
+    """Fault injection end-to-end: a crashed slice stops heartbeating,
+    detect_faults quarantines it (census shrinks -> the planner re-plans
+    around the failure), and after repair it rejoins. Query accounting
+    stays conserved throughout."""
+    sv = default_serving("sdturbo", num_workers=3)
+    rt = ClusterRuntime(_StubCascade(), sv)
+    profiles = make_profiles(sv, 0)
+    control = build_control_plane(sv.cascade, sv, profiles)
+    backend = ClusterBackend(rt, sv, profiles, seed=0, model_load_s=0.0,
+                             confidence_fn=lambda n, b: np.ones(n),
+                             failure_times=((5.0, 0, 14.0),))
+    backend._run_stage = lambda sl, tier, n: (0.05, np.zeros((n, 1, 1, 1)))
+    r = backend.serve(control, static_trace(2.0, 40))
+
+    assert r.total > 0
+    assert r.completed + r.dropped == r.total          # conservation
+    assert r.completed == r.total                      # survivors absorb
+    worker_sums = [sum(w) for _, w, _ in backend.plan_timeline]
+    assert min(worker_sums) <= 2        # re-planned around the failure
+    assert worker_sums[-1] == 3         # ... and back after repair
+    assert rt.slices[0].alive
+    assert not backend._quarantined     # rejoined after repair
+
+
+def test_cluster_heartbeat_detection_without_repair():
+    """A crash with no repair stays quarantined: census reports the
+    shrunken fleet and the dead slice never executes again."""
+    sv = default_serving("sdturbo", num_workers=2)
+    rt = ClusterRuntime(_StubCascade(), sv)
+    profiles = make_profiles(sv, 0)
+    control = build_control_plane(sv.cascade, sv, profiles)
+    backend = ClusterBackend(rt, sv, profiles, seed=0, model_load_s=0.0,
+                             confidence_fn=lambda n, b: np.ones(n),
+                             failure_times=((4.0, 1, 1e9),))
+    executed = []
+    backend._run_stage = lambda sl, tier, n: (
+        executed.append((backend.now, sl.wid)),
+        (0.05, np.zeros((n, 1, 1, 1))))[1]
+    r = backend.serve(control, static_trace(1.0, 30))
+
+    assert r.completed + r.dropped == r.total
+    assert 1 in backend._quarantined
+    assert backend.census().live_workers == 1
+    # after the heartbeat timeout elapsed, the dead slice ran nothing
+    deadline = 4.0 + sv.heartbeat_timeout_s + 2 * sv.control_period_s
+    assert all(wid != 1 for t, wid in executed if t > deadline)
 
 
 # ---------------------------------------------------------------------------
