@@ -9,11 +9,49 @@ subset of figures by substring.
 """
 import argparse
 import csv
+import json
 import pathlib
 import time
 
 OUT = (pathlib.Path(__file__).resolve().parents[1]
        / "experiments" / "benchmarks" / "out")
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def bench_serving(out_path: pathlib.Path) -> dict:
+    """The serving perf fingerprint CI tracks (BENCH_serving.json at the
+    repo root): control-tick wall time, simulator event throughput, and
+    the end-to-end violation rate of the default controller on a pinned
+    seed/trace — so 'makes a hot path measurably faster' is checkable
+    against the previous run's JSON artifact."""
+    import numpy as np
+
+    from repro.serving.baselines import run_controller
+    from repro.serving.profiles import default_serving
+    from repro.serving.trace import azure_like_trace
+
+    trace = azure_like_trace(360, seed=3).scale(4, 32)
+    serving = default_serving("sdturbo", num_workers=16)
+    t0 = time.perf_counter()
+    r = run_controller("diffserve", trace, serving, seed=0)
+    wall = time.perf_counter() - t0
+    solve = np.asarray(r.solve_ms if r.solve_ms else [0.0])
+    payload = {
+        "pinned": {"trace": trace.name, "trace_seed": 3, "sim_seed": 0,
+                   "cascade": "sdturbo", "workers": 16,
+                   "controller": "diffserve"},
+        "control_tick_ms_mean": round(float(solve.mean()), 4),
+        "control_tick_ms_p99": round(float(np.percentile(solve, 99)), 4),
+        "control_ticks": int(len(r.solve_ms)),
+        "sim_events_processed": int(r.events_processed),
+        "sim_events_per_s": round(r.events_processed / max(wall, 1e-9)),
+        "sim_wall_s": round(wall, 3),
+        "violation_ratio": round(r.violation_ratio, 6),
+        "completed": r.completed,
+        "total": r.total,
+    }
+    out_path.write_text(json.dumps(payload, indent=1) + "\n")
+    return payload
 
 
 def main() -> None:
@@ -21,7 +59,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run only figures whose name contains this")
+    ap.add_argument("--bench-serving", action="store_true",
+                    help="write the serving perf fingerprint to "
+                    "BENCH_serving.json at the repo root and exit")
     args = ap.parse_args()
+    if args.bench_serving:
+        payload = bench_serving(ROOT / "BENCH_serving.json")
+        print(json.dumps(payload, indent=1))
+        return
     figures = {name: fn for name, fn in ALL.items()
                if args.only is None or args.only in name}
     if not figures:

@@ -571,8 +571,25 @@ class ServingConfig:
     # plain strings — resolved when the search planner is assembled.
     catalog: str = "builtin"
     candidate_cascades: Tuple[str, ...] = ()
+    # predictive autoscaling (serving/autoscaler.py:SCALERS,
+    # serving/forecast.py:FORECASTERS): the scaling-policy and demand-
+    # forecaster registry names, the forecast horizon (0 => one control
+    # epoch + model_load_s lead), the per-tier warm pool of pre-loaded
+    # standby workers, and whether the first control tick provisions for
+    # the trace's known t=0 rate instead of the blind nominal 1.0 qps.
+    scaler: str = "heartbeat"
+    forecaster: str = "holt-winters"
+    forecast_horizon_s: float = 0.0
+    warm_pool: int = 0
+    warm_start_demand: bool = False
 
     def __post_init__(self):
+        if self.forecast_horizon_s < 0:
+            raise ValueError(f"forecast_horizon_s must be >= 0, got "
+                             f"{self.forecast_horizon_s}")
+        if self.warm_pool < 0:
+            raise ValueError(f"warm_pool must be >= 0, got "
+                             f"{self.warm_pool}")
         if self.class_costs and not self.worker_classes:
             raise ValueError("class_costs requires worker_classes")
         if not self.worker_classes:

@@ -25,9 +25,11 @@ import pathlib
 import numpy as np
 
 from repro.serving.autocascade import CascadeBuilder, load_catalog
+from repro.serving.autoscaler import SCALERS, provisioned_cost
 from repro.serving.baselines import (BASELINES, CONTROLLERS,
                                      list_controllers, run_controller)
 from repro.serving.controlplane import ESTIMATORS
+from repro.serving.forecast import FORECASTERS
 from repro.serving.profiles import (class_costs_from_arg, default_serving,
                                     list_cascades, resolve_cascade,
                                     worker_classes_from_arg)
@@ -65,6 +67,23 @@ def main():
     ap.add_argument("--estimator", default=None,
                     choices=sorted(ESTIMATORS),
                     help="demand estimator policy (default ewma)")
+    ap.add_argument("--scaler", default=None, choices=sorted(SCALERS),
+                    help="scaling policy (serving/autoscaler.py): "
+                    "heartbeat (default, fixed fleet) / reactive / "
+                    "predictive / predictive-oracle / null")
+    ap.add_argument("--forecaster", default=None,
+                    choices=sorted(FORECASTERS),
+                    help="demand forecaster behind the predictive scaler "
+                    "(default holt-winters)")
+    ap.add_argument("--forecast-horizon", type=float, default=0.0,
+                    help="forecast lead seconds (0 = one control epoch "
+                    "+ model-load time)")
+    ap.add_argument("--warm-pool", type=int, default=0,
+                    help="per-tier pre-loaded standby workers the scaler "
+                    "keeps warm ahead of ramps")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="provision the first control tick for the "
+                    "trace's known t=0 rate instead of nominal 1 qps")
     ap.add_argument("--workers", type=int, default=16)
     ap.add_argument("--worker-classes", default=None,
                     help="heterogeneous cluster as "
@@ -99,8 +118,13 @@ def main():
             print(f"{name:18s} {desc}")
         return
 
+    wcs = (worker_classes_from_arg(args.worker_classes)
+           if args.worker_classes else ())
     catalog = load_catalog(args.catalog or "builtin")
-    builder = CascadeBuilder(catalog)
+    # the declared hardware mix steers candidate scoring, so the
+    # frontier/auto-cascade pick chains per hardware mix (pinned-name
+    # resolution is mix-independent and stays bit-identical)
+    builder = CascadeBuilder(catalog, worker_classes=wcs)
 
     if args.list_frontier:
         print(f"{'name':32s} {'tiers':34s} {'kind':7s} {'SLO':>6s} "
@@ -124,8 +148,6 @@ def main():
     else:
         trace = azure_like_trace(args.duration, seed=3).scale(
             args.trace_min, args.trace_max)
-    wcs = (worker_classes_from_arg(args.worker_classes)
-           if args.worker_classes else ())
     if args.cost_per_class and not wcs:
         ap.error("--cost-per-class requires --worker-classes")
     costs = (class_costs_from_arg(args.cost_per_class)
@@ -149,12 +171,22 @@ def main():
             candidates = tuple(
                 n for n, c in sorted(builder.build_family(fam).items())
                 if abs(c.slo_s - spec.slo_s) < 1e-9)
+    if args.forecast_horizon < 0:
+        ap.error(f"--forecast-horizon must be >= 0, got "
+                 f"{args.forecast_horizon}")
+    if args.warm_pool < 0:
+        ap.error(f"--warm-pool must be >= 0, got {args.warm_pool}")
     serving = default_serving(spec, num_workers=args.workers,
                               worker_classes=wcs, class_costs=costs,
                               controller=controller,
                               estimator=args.estimator or "ewma",
                               catalog=args.catalog or "builtin",
-                              candidate_cascades=candidates)
+                              candidate_cascades=candidates,
+                              scaler=args.scaler or "heartbeat",
+                              forecaster=args.forecaster or "holt-winters",
+                              forecast_horizon_s=args.forecast_horizon,
+                              warm_pool=args.warm_pool,
+                              warm_start_demand=args.warm_start)
     r = run_controller(controller, trace, serving, seed=args.seed,
                        estimator=args.estimator)
 
@@ -181,6 +213,17 @@ def main():
         "threshold_timeline": r.threshold_timeline[:: max(
             len(r.threshold_timeline) // 50, 1)],
     }
+    if args.scaler and args.scaler not in ("heartbeat", "null"):
+        caps = [n for _, n in r.capacity_timeline]
+        report["scaler"] = args.scaler
+        report["forecaster"] = args.forecaster or serving.forecaster
+        report["warm_pool"] = serving.warm_pool
+        report["capacity_changes"] = max(len(r.capacity_timeline) - 1, 0)
+        report["capacity_min_max"] = ([min(caps), max(caps)]
+                                      if caps else None)
+        report["provisioned_node_hours"] = round(
+            provisioned_cost(r.capacity_timeline, trace.duration_s, 1.0),
+            4)
     if r.cascade_timeline:
         report["cascade_switches"] = r.cascade_switches
         report["cascade_timeline"] = [

@@ -361,12 +361,19 @@ class CascadeBuilder:
 
     def __init__(self, catalog: VariantCatalog, *, calib_seed: int = 0,
                  calib_n: int = 5000, curve_grid: int = 9,
-                 max_depth: int = 3):
+                 max_depth: int = 3, worker_classes: Sequence = ()):
         self.catalog = catalog
         self.calib_seed = int(calib_seed)
         self.calib_n = int(calib_n)
         self.curve_grid = int(curve_grid)
         self.max_depth = int(max_depth)
+        # declared hardware mix (config.base:WorkerClass): when given,
+        # candidate scoring weights each tier's unit latency by the
+        # fleet's per-class latency scales, so the frontier/pruning pick
+        # chains per hardware mix (ROADMAP: per-class profiled latency
+        # in the catalog search). Empty keeps the reference-A100 scoring
+        # bit-identical (the pinned registry is built with no classes).
+        self.worker_classes = tuple(worker_classes)
 
     # ------- spec construction -------
     def build(self, family: str, chain: Sequence[str], *,
@@ -434,6 +441,19 @@ class CascadeBuilder:
                     out.append(tuple(v.name for v in combo))
         return out
 
+    def _unit_latency(self, tier, last: bool) -> float:
+        """Batch-1 tier latency for candidate scoring: fleet-weighted
+        over the declared worker classes' per-model latency scales when
+        a hardware mix is known, else the reference profile."""
+        disc = 0.0 if last else tier.disc_latency_s
+        if not self.worker_classes:
+            return tier.profile.exec_latency(1) + disc
+        total = sum(wc.count for wc in self.worker_classes)
+        return sum(
+            wc.count * (wc.tier_profile(tier).exec_latency(1)
+                        + disc * wc.scale_for(tier.model).base)
+            for wc in self.worker_classes) / max(total, 1)
+
     def _curve(self, spec: CascadeSpec) -> Tuple[Tuple[float, float], ...]:
         """(expected latency/query, expected FID) as every boundary sweeps
         a shared target defer fraction — the chain's achievable frontier
@@ -448,8 +468,7 @@ class CascadeBuilder:
             reach, lat = 1.0, 0.0
             stop = []
             for i, tier in enumerate(spec.tiers):
-                lat += reach * (tier.profile.exec_latency(1)
-                                + (tier.disc_latency_s if i < n - 1 else 0.0))
+                lat += reach * self._unit_latency(tier, last=i == n - 1)
                 if i < n - 1:
                     stop.append(reach * (1.0 - fs[i]))
                     reach *= fs[i]

@@ -152,6 +152,12 @@ class ControllerBundle:
     # per-epoch cascade search: the planner re-runs the cascade builder
     # against estimated demand and may switch the serving cascade
     cascade_search: bool = False
+    # scaling-policy registry name (serving/autoscaler.py:SCALERS)
+    # overriding ``serving.scaler``; None keeps the config's choice
+    scaler: Optional[str] = None
+    # per-tier warm-pool standbys the scaler keeps pre-loaded (only
+    # meaningful with an elastic scaler)
+    warm_pool: Optional[int] = None
 
     @property
     def dynamic(self) -> bool:
@@ -180,6 +186,16 @@ CONTROLLERS = {
         "cascade-search", "diffserve + per-epoch cascade search over the "
         "variant catalog: may switch the serving cascade under load",
         cascade_search=True),
+    # reactive-vs-predictive elastic provisioning (serving/autoscaler.py)
+    "diffserve-reactive": ControllerBundle(
+        "diffserve-reactive", "diffserve + reactive elastic scaling: "
+        "capacity sized to the trailing EWMA rate, zero look-ahead",
+        scaler="reactive"),
+    "diffserve-predictive": ControllerBundle(
+        "diffserve-predictive", "diffserve + predictive autoscaling: "
+        "Holt-Winters forecast horizon covering the control epoch + "
+        "model-load lead, per-tier warm pools", scaler="predictive",
+        warm_pool=1),
     # §4.5 resource-allocation ablations, as first-class bundles
     "static_threshold": ControllerBundle(
         "static_threshold", "ablation: re-plans allocation but pins the "
@@ -263,6 +279,10 @@ def assemble_bundle(name: Optional[str], trace: Trace,
     except KeyError:
         raise KeyError(f"unknown controller {name!r}; "
                        f"known {sorted(CONTROLLERS)}") from None
+    if bundle.scaler is not None and serving.scaler != bundle.scaler:
+        serving = dataclasses.replace(serving, scaler=bundle.scaler)
+    if bundle.warm_pool is not None and not serving.warm_pool:
+        serving = dataclasses.replace(serving, warm_pool=bundle.warm_pool)
     spec = as_cascade_spec(serving.cascade)
     profiles = make_profiles(serving, seed, uniform=bundle.uniform_profile)
     if fixed_plan is _UNSET:

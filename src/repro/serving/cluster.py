@@ -251,6 +251,13 @@ class ClusterBackend:
             [(t, "fail", wid) for (t, wid, _r) in failure_times]
             + [(t + r, "recover", wid) for (t, wid, r) in failure_times])
         self._quarantined: set = set()
+        # staged decommission (autoscaler scale-down): a decommissioned
+        # slice leaves the schedulable pool but its slot object stays in
+        # runtime.slices (wids index that list), ready for re-activation
+        # on a later scale-up; per-tier queues mean no work strands
+        self._decommissioned: set = set()
+        # per-tier warm-pool targets (autoscaler prewarm): () disables
+        self._warm_targets: Tuple[int, ...] = ()
         self.result = SimResult(
             completed_per_tier=[0] * self.num_tiers,
             tier_processed=[0] * self.num_tiers,
@@ -268,12 +275,14 @@ class ClusterBackend:
         quarantined. A crashed-but-undetected slice still counts — the
         controller only knows what the heartbeat sweep has discovered."""
         return [sl for sl in self.runtime.slices
-                if sl.wid not in self._quarantined]
+                if sl.wid not in self._quarantined
+                and sl.wid not in self._decommissioned]
 
     def _schedulable(self, sl: WorkerSlice) -> bool:
         """Slices execution may land batches on (ground truth: a crashed
         slice runs nothing even before detection)."""
-        return sl.alive and sl.wid not in self._quarantined
+        return (sl.alive and sl.wid not in self._quarantined
+                and sl.wid not in self._decommissioned)
 
     def census(self) -> Census:
         live = self._live_slices()
@@ -281,7 +290,8 @@ class ClusterBackend:
         for sl in live:
             if sl.class_name:
                 by_class[sl.class_name] = by_class.get(sl.class_name, 0) + 1
-        return Census(now=self.now, active_slots=len(self.runtime.slices),
+        active = len(self.runtime.slices) - len(self._decommissioned)
+        return Census(now=self.now, active_slots=active,
                       live_workers=len(live),
                       live_by_class=tuple(sorted(by_class.items())))
 
@@ -359,14 +369,19 @@ class ClusterBackend:
         live = self._live_slices()
         class_workers = getattr(plan, "class_workers", None)
         if class_workers is not None and self.serving.worker_classes:
-            for wc in self.serving.worker_classes:
+            extras = self._warm_extras([
+                sum(alloc.values()) for alloc in class_workers])
+            n_cls = len(self.serving.worker_classes)
+            for ci, wc in enumerate(self.serving.worker_classes):
                 group = [sl for sl in live if sl.class_name == wc.name]
                 want = [i for i, alloc in enumerate(class_workers)
                         for _ in range(alloc.get(wc.name, 0))]
+                want += extras[ci::n_cls]
                 self._assign_group(group, want)
         else:
             want = [i for i, n in enumerate(plan.workers)
                     for _ in range(n)]
+            want += self._warm_extras(plan.workers)
             self._assign_group(live, want)
         self.plan_timeline.append((self.now, tuple(plan.workers),
                                    tuple(plan.batches)))
@@ -421,6 +436,82 @@ class ClusterBackend:
         """Models with a loaded jitted stage (switch candidates must stay
         within this pool)."""
         return tuple(sorted(self._stages_by_model))
+
+    # ---------------- elastic provisioning (autoscaler) ----------------
+    def _warm_extras(self, planned: List[int]) -> List[Optional[int]]:
+        """Tier roles beyond the plan that keep warm-pool standbys
+        loaded (mirrors the simulator backend; empty targets extend
+        nothing, so runs without an autoscaler are untouched)."""
+        if not self._warm_targets:
+            return []
+        return [i
+                for i, tgt in enumerate(self._warm_targets)
+                if i < self.num_tiers
+                for _ in range(max(tgt - (planned[i]
+                                          if i < len(planned) else 0), 0))]
+
+    def prewarm(self, tier_counts: Tuple[int, ...]) -> None:
+        """Autoscaler hook: desired per-tier slice totals *including*
+        warm standbys, enacted at the next ``apply_plan`` by extending
+        the role want list — the standby's ``model_load_s`` is charged
+        to its virtual clock when it joins the pool, before the ramp."""
+        self._warm_targets = tuple(int(n) for n in tier_counts)
+
+    def set_capacity(self, new_s: int) -> None:
+        """Staged slice provision/decommission mid-run.
+
+        Scale-up re-activates decommissioned slices first (role ``None``
+        — the next plan reassigns them, paying the model reload), then
+        appends fresh slices with the modular device wrap and declared
+        class mix of the initial fleet. Scale-down decommissions the
+        highest-wid active slices: they leave the schedulable pool while
+        every other slice keeps serving warm (staged, like PR 5's
+        cascade reload); their tier queues are shared, so no work
+        strands."""
+        new_s = max(int(new_s), 0)
+        active = len(self.runtime.slices) - len(self._decommissioned)
+        if new_s == active:
+            return
+        if new_s > active:
+            grow = new_s - active
+            for wid in sorted(self._decommissioned):
+                if grow == 0:
+                    break
+                self._decommissioned.discard(wid)
+                self.runtime.slices[wid].role = None
+                grow -= 1
+            if grow > 0:
+                devs = jax.devices()
+                n = len(devs)
+                tp = max(self.serving.worker_tp_size, 1)
+                mix = ([wc for wc in self.serving.worker_classes
+                        for _ in range(wc.count)]
+                       or [None])
+                for _ in range(grow):
+                    wid = len(self.runtime.slices)
+                    wc = mix[wid % len(mix)]
+                    sl = WorkerSlice(
+                        wid=wid,
+                        devices=tuple(devs[(wid * tp + j) % n]
+                                      for j in range(tp)),
+                        class_name=wc.name if wc else "",
+                        speed=wc.speed if wc else 1.0,
+                        wc=wc, last_heartbeat=self.now)
+                    self.runtime.slices.append(sl)
+                    self.busy_until[wid] = self.now
+        else:
+            for sl in sorted(self.runtime.slices,
+                             key=lambda s: -s.wid):
+                if active <= new_s:
+                    break
+                if sl.wid in self._decommissioned:
+                    continue
+                self._decommissioned.add(sl.wid)
+                sl.role = None
+                active -= 1
+        self.result.capacity_timeline.append(
+            (self.now, len(self.runtime.slices)
+             - len(self._decommissioned)))
 
     def _assign_group(self, group: List[WorkerSlice],
                       want: List[Optional[int]]) -> None:
@@ -566,6 +657,8 @@ class ClusterBackend:
                   stage=stage, deferred=stage > 0)
             for i, t in enumerate(arrivals))
         self._advance_faults(0.0)
+        self.result.capacity_timeline.append(
+            (0.0, len(self.runtime.slices) - len(self._decommissioned)))
         control.tick(self, first=True)
         period = self.serving.control_period_s
         end_t = trace.duration_s + 4 * self.spec.slo_s

@@ -295,18 +295,31 @@ class ControlPlane:
         default_factory=PlanThresholds)
     scaling: ScalingPolicy = dataclasses.field(
         default_factory=HeartbeatScaling)
+    # known starting demand (Trace.rate_at(0) on replay paths): the first
+    # tick provisions for it instead of the blind nominal 1.0 qps, fixing
+    # cold-start under-provisioning on traces that start hot. None keeps
+    # the legacy nominal (bit-identical goldens).
+    initial_demand: Optional[float] = None
 
     def tick(self, backend: ExecutorBackend,
              first: bool = False) -> ControlDecision:
         census = backend.census()
         self.scaling.on_tick(backend, census)
         if self.planner.needs_telemetry:
-            # the first tick runs before any arrivals: plan for nominal
-            # unit demand over the full provisioned slot count
-            tel = (Telemetry(demand_qps=1.0,
+            # the first tick runs before any arrivals: plan for the known
+            # starting demand when the trace was given, else nominal unit
+            # demand, over the full provisioned slot count
+            tel = (Telemetry(demand_qps=(1.0 if self.initial_demand is None
+                                         else float(self.initial_demand)),
                              live_workers=census.active_slots)
                    if first else backend.telemetry_window())
             demand = self.estimator.estimate(tel.demand_qps, now=census.now)
+            # a predictive scaler substitutes its forecast at enactment
+            # time for the trailing estimate (absent on the classic
+            # heartbeat/null policies -> unchanged demand)
+            forecast = getattr(self.scaling, "plan_demand", None)
+            if forecast is not None:
+                demand = forecast(demand, census.now)
         else:
             tel, demand = Telemetry(demand_qps=0.0), 0.0
         plan = self.planner.plan(tel, demand)
@@ -363,7 +376,14 @@ def build_control_plane(spec, serving: ServingConfig,
     detection.
 
     ``profiles`` must be the backend's own ``DeferralProfile`` objects so
-    online f(t) refreshes flow into the planner."""
+    online f(t) refreshes flow into the planner.
+
+    ``scaling`` resolves from the ``serving.scaler`` registry name
+    (serving/autoscaler.py:SCALERS) when not given explicitly; the
+    default name is "heartbeat", the classic fault sweep. When
+    ``serving.warm_start_demand`` is set and the trace is known, the
+    first tick provisions for ``trace.rate_at(0)`` instead of the
+    nominal 1.0 qps."""
     if estimator is None:
         estimator = serving.estimator
     if isinstance(estimator, str):
@@ -377,6 +397,20 @@ def build_control_plane(spec, serving: ServingConfig,
     else:
         planner = SolverPlanner(ResourceManager(spec, serving, profiles,
                                                 allocator_options))
+    if scaling is None:
+        name = getattr(serving, "scaler", "heartbeat") or "heartbeat"
+        if name == "heartbeat":
+            scaling = HeartbeatScaling()
+        elif name == "null":
+            scaling = NullScaling()
+        else:
+            # lazy: autoscaler imports this module for the classic policies
+            from repro.serving.autoscaler import make_scaler
+            scaling = make_scaler(name, serving, trace)
+    initial_demand = None
+    if getattr(serving, "warm_start_demand", False) and trace is not None:
+        initial_demand = float(trace.rate_at(0.0))
     return ControlPlane(estimator=estimator, planner=planner,
                         thresholds=thresholds or PlanThresholds(),
-                        scaling=scaling or HeartbeatScaling())
+                        scaling=scaling,
+                        initial_demand=initial_demand)

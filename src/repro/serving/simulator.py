@@ -128,6 +128,13 @@ class SimResult:
     # controllers
     cascade_timeline: List[Tuple[float, str]] = \
         dataclasses.field(default_factory=list)
+    # (t, provisioned slots) step function of elastic capacity: the
+    # initial fleet plus every set_capacity / scale-event change (the
+    # autoscale benchmark integrates it into $-cost)
+    capacity_timeline: List[Tuple[float, int]] = \
+        dataclasses.field(default_factory=list)
+    # discrete events pumped (BENCH_serving.json event-throughput metric)
+    events_processed: int = 0
 
     @property
     def cascade_switches(self) -> int:
@@ -258,6 +265,8 @@ class Simulator:
         self._recent_defer: deque = deque()
         self._window_done = 0
         self._active_S = serving.num_workers
+        # per-tier warm-pool targets (autoscaler prewarm): () disables
+        self._warm_targets: Tuple[int, ...] = ()
         # per-(class, tier) scaled latency — (profile, disc seconds),
         # constant for the whole run: the routing / predictive-drop hot
         # paths evaluate it per live worker per query, so they must not
@@ -307,6 +316,7 @@ class Simulator:
         for (ts, new_s) in self.sim.scale_events:
             self.push(ts, self.SCALE, new_s)
         end_t = trace.duration_s + 4 * self.spec.slo_s
+        self.result.capacity_timeline.append((0.0, self._active_S))
 
         # initial plan
         self._apply_plan_now(first=True)
@@ -327,6 +337,7 @@ class Simulator:
         while self._events and self._events[0][0] <= end_t:
             t, kind, _, payload = heapq.heappop(self._events)
             self.now = t
+            self.result.events_processed += 1
             self._dispatch(kind, payload)
 
     def _dispatch(self, kind: int, payload):
@@ -579,17 +590,22 @@ class Simulator:
             # heterogeneous plan: each worker class gets its own per-tier
             # role quota so slow hardware lands on the tiers the solver
             # picked for it
+            extras = self._warm_extras([
+                sum(alloc.values()) for alloc in class_workers])
+            n_cls = len(self.serving.worker_classes)
             orphans: List[Query] = list(switch_orphans)
-            for wc in self.serving.worker_classes:
+            for ci, wc in enumerate(self.serving.worker_classes):
                 live_c = [w for w in live if w.wclass == wc.name]
                 want_c: List[Optional[int]] = [
                     i for i, alloc in enumerate(class_workers)
                     for _ in range(alloc.get(wc.name, 0))]
+                want_c += extras[ci::n_cls]
                 orphans += self._assign_roles(live_c, want_c)
             self._settle_orphans(orphans)
         else:
             want: List[Optional[int]] = [
                 i for i, n in enumerate(plan.workers) for _ in range(n)]
+            want += self._warm_extras(plan.workers)
             self._settle_orphans(switch_orphans
                                  + self._assign_roles(live, want))
         for w in live:
@@ -773,6 +789,63 @@ class Simulator:
 
     def _on_scale(self, new_s: int):
         self._active_S = new_s
+        self.result.capacity_timeline.append((self.now, new_s))
+
+    # ---------------- elastic provisioning (autoscaler) ----------------
+    def _warm_extras(self, planned: List[int]) -> List[Optional[int]]:
+        """Tier roles beyond the plan that keep warm-pool standbys loaded:
+        the autoscaler's per-tier warm targets minus what the plan already
+        assigns. Empty targets (every run without an autoscaler) extend
+        nothing — the plan's `want` list is bit-identical to before."""
+        if not self._warm_targets:
+            return []
+        return [i
+                for i, tgt in enumerate(self._warm_targets)
+                if i < self.num_tiers
+                for _ in range(max(tgt - (planned[i]
+                                          if i < len(planned) else 0), 0))]
+
+    def prewarm(self, tier_counts: Tuple[int, ...]) -> None:
+        """Autoscaler hook: desired per-tier worker totals *including*
+        warm standbys. Enacted at the next ``apply_plan`` by extending
+        the role-assignment want list, so a standby charges its
+        ``model_load_s`` when it joins the pool — before the ramp that
+        will need it — and then idles warm."""
+        self._warm_targets = tuple(int(n) for n in tier_counts)
+
+    def set_capacity(self, new_s: int) -> None:
+        """Elastically resize the provisioned slot count mid-run.
+
+        Growth past the existing worker inventory creates fresh workers
+        (heterogeneous fleets cycle the declared class mix) that start
+        role-less — their first role assignment charges ``model_load_s``
+        exactly like a recovered worker. Shrinking re-routes the
+        decommissioned workers' queued work (or drops it as SLO
+        violations when no capacity remains — conservation holds either
+        way); their in-flight batches run to completion, mirroring the
+        cluster backend's staged decommission."""
+        new_s = max(int(new_s), 0)
+        if new_s == self._active_S:
+            return
+        if new_s > len(self.workers):
+            mix = ([(wc.name, wc.speed)
+                    for wc in self.serving.worker_classes
+                    for _ in range(wc.count)]
+                   or [("", 1.0)])
+            for wid in range(len(self.workers), new_s):
+                name, speed = mix[wid % len(mix)]
+                self.workers[wid] = Worker(wid=wid, speed=speed,
+                                           wclass=name)
+        shrinking = new_s < self._active_S
+        self._active_S = new_s
+        self.result.capacity_timeline.append((self.now, new_s))
+        if shrinking:
+            orphans: List[Query] = []
+            for w in self.workers.values():
+                if w.wid >= new_s and w.queue:
+                    orphans.extend(w.queue)
+                    w.queue.clear()
+            self._settle_orphans(orphans)
 
     # failure detection happens on control ticks via heartbeat timeout
     # (called by the control plane's ScalingPolicy at tick start)

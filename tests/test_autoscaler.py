@@ -1,0 +1,288 @@
+"""Predictive autoscaling (serving/autoscaler.py) and the elastic
+provisioning capabilities it drives in both backends: capacity sizing
+math, warm-pool load-before-ramp semantics, scale-down hysteresis,
+conservation across mid-run resizes, and bit-identical classic-policy
+behavior (heartbeat/null runs match the default fingerprints)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.config.base import replace
+from repro.core.milp import AllocationPlan, Telemetry
+from repro.serving.autoscaler import (PredictiveScaling, ReactiveScaling,
+                                      SCALERS, make_scaler,
+                                      provisioned_cost, required_workers)
+from repro.serving.baselines import make_profiles, run_controller
+from repro.serving.cluster import ClusterBackend, ClusterRuntime
+from repro.serving.controlplane import Census, ControlDecision
+from repro.serving.forecast import TrailingForecaster
+from repro.serving.profiles import default_serving
+from repro.serving.simulator import Query, SimConfig, Simulator
+from repro.serving.trace import azure_like_trace, static_trace
+from repro.testing.golden import sim_fingerprint
+
+
+# ---------------------------------------------------------------------------
+# Capacity math
+# ---------------------------------------------------------------------------
+def test_required_workers_scales_with_demand():
+    sv = default_serving("sdturbo", num_workers=8)
+    lo = required_workers(sv, 4.0, (), ())
+    hi = required_workers(sv, 40.0, (), ())
+    assert len(lo) == len(sv.cascade.tiers)
+    assert all(h >= l for h, l in zip(hi, lo))
+    assert sum(hi) > sum(lo)
+    assert required_workers(sv, 0.0, (), ()) == [0] * len(lo)
+
+
+def test_required_workers_cascades_through_deferral():
+    # with live deferral profiles the downstream tier only sees the
+    # deferred fraction f(t) of the rate — at a permissive threshold it
+    # needs no more workers than the full-rate (no-profile) sizing
+    sv = default_serving("sdturbo", num_workers=8)
+    profiles = make_profiles(sv, 0)
+    full = required_workers(sv, 30.0, (), ())
+    cascaded = required_workers(sv, 30.0, profiles, (0.5,))
+    assert cascaded[0] == full[0]                 # tier 0 sees everything
+    assert cascaded[1] <= full[1]
+
+
+def test_provisioned_cost_integrates_step_function():
+    timeline = [(0.0, 4), (100.0, 8), (200.0, 2)]
+    # 4*100 + 8*100 + 2*100 slot-seconds = 1400 => hours * $/slot-hour
+    assert provisioned_cost(timeline, 300.0, 3.6) == pytest.approx(
+        1400 / 3600.0 * 3.6)
+    assert provisioned_cost([], 300.0, 3.6) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Warm pool: load charged at pool join, not during the ramp
+# ---------------------------------------------------------------------------
+def test_warm_pool_charges_model_load_before_ramp():
+    sv = default_serving("sdturbo", num_workers=4)
+    sim = Simulator(sv, make_profiles(sv, 0), SimConfig(seed=0))
+    assert sim._warm_extras([2, 0]) == []         # no targets: bit-identical
+    plan1 = AllocationPlan(workers=(2, 0), batches=(1, 1),
+                           thresholds=(0.8,), expected_latency=0.1,
+                           feasible=True)
+    sim.prewarm((2, 2))
+    assert sim._warm_extras([2, 0]) == [1, 1]     # standbys beyond the plan
+    sim.apply_plan(ControlDecision(plan=plan1, thresholds=(0.8,)))
+    standbys = [w for w in sim.workers.values() if w.role == 1]
+    assert len(standbys) == 2
+    # the standby paid its model load when it joined the pool (t=0)...
+    loads = {w.wid: w.loading_until for w in standbys}
+    assert all(lu == pytest.approx(sim.sim.model_load_s)
+               for lu in loads.values())
+    # ...so when the ramp arrives and the plan actually wants tier 1,
+    # the standby is already warm — no new load charged at ramp time
+    sim.now = 10.0
+    plan2 = AllocationPlan(workers=(2, 2), batches=(1, 1),
+                           thresholds=(0.8,), expected_latency=0.1,
+                           feasible=True)
+    sim.apply_plan(ControlDecision(plan=plan2, thresholds=(0.8,)))
+    for w in sim.workers.values():
+        if w.wid in loads:
+            assert w.role == 1
+            assert w.loading_until == loads[w.wid]     # not re-charged
+
+
+# ---------------------------------------------------------------------------
+# Simulator elastic provisioning
+# ---------------------------------------------------------------------------
+def test_simulator_set_capacity_grows_and_records():
+    sv = default_serving("sdturbo", num_workers=4)
+    sim = Simulator(sv, make_profiles(sv, 0), SimConfig(seed=0))
+    sim.set_capacity(8)
+    assert len(sim.workers) == 8
+    assert sim.census().active_slots == 8
+    assert all(sim.workers[w].role is None for w in range(4, 8))
+    sim.now = 5.0
+    sim.set_capacity(3)
+    assert sim.census().active_slots == 3
+    assert sim.result.capacity_timeline == [(0.0, 8), (5.0, 3)]
+    sim.set_capacity(3)                           # no-op: no new step
+    assert len(sim.result.capacity_timeline) == 2
+
+
+def test_simulator_shrink_preserves_conservation():
+    sv = default_serving("sdturbo", num_workers=6)
+    sim = Simulator(sv, make_profiles(sv, 0), SimConfig(seed=0))
+    sim._apply_plan_now(first=True)
+    sim.submit([Query(qid=i, arrival=0.2 + 0.1 * i,
+                      deadline=5.0 + 0.1 * i) for i in range(20)])
+    sim._run_until(1.0)
+    sim.set_capacity(2)        # decommission mid-flight, queues re-route
+    sim._run_until(60.0)
+    sim._drain_unfinished()
+    r = sim.poll()
+    assert r.total == 20
+    assert r.completed + r.dropped == r.total
+
+
+# ---------------------------------------------------------------------------
+# PredictiveScaling policy mechanics
+# ---------------------------------------------------------------------------
+class _FakeBackend:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.now = 0.0
+        self.qps = 0.0
+        self.resizes = []
+        self.profiles = ()
+        self.thresholds = ()
+
+    def detect_faults(self):
+        pass
+
+    def telemetry_window(self):
+        return Telemetry(demand_qps=self.qps)
+
+    def census(self):
+        return Census(now=self.now, active_slots=self.capacity,
+                      live_workers=self.capacity)
+
+    def set_capacity(self, n):
+        self.resizes.append((self.now, n))
+        self.capacity = n
+
+    def prewarm(self, tier_counts):
+        pass
+
+
+def _tick(scaler, backend, now, qps):
+    backend.now, backend.qps = now, qps
+    scaler.on_tick(backend, backend.census())
+
+
+def test_scale_down_needs_dwell_scale_up_is_immediate():
+    sv = default_serving("sdturbo", num_workers=8)
+    be = _FakeBackend(capacity=50)
+    scaler = PredictiveScaling(sv, TrailingForecaster(1.0),
+                               horizon_s=1.0, down_dwell=3)
+    # demand far below 50 provisioned slots: hysteresis holds the fleet
+    # for down_dwell-1 ticks, releases on the dwell-th
+    _tick(scaler, be, 2.0, 2.0)
+    _tick(scaler, be, 4.0, 2.0)
+    assert be.resizes == []
+    _tick(scaler, be, 6.0, 2.0)
+    assert len(be.resizes) == 1
+    small = be.capacity
+    assert small < 50
+    # a burst scales up the same tick it is forecast
+    _tick(scaler, be, 8.0, 500.0)
+    assert len(be.resizes) == 2
+    assert be.capacity > small
+
+
+def test_provisioning_tick_never_resizes():
+    sv = default_serving("sdturbo", num_workers=8)
+    be = _FakeBackend(capacity=8)
+    scaler = PredictiveScaling(sv, TrailingForecaster(1.0), horizon_s=1.0)
+    _tick(scaler, be, 0.0, 0.0)        # t=0: nothing observed yet
+    assert be.resizes == []
+
+
+def test_plan_demand_substitutes_forecast_only_when_predictive():
+    sv = default_serving("sdturbo", num_workers=8)
+    pred = PredictiveScaling(sv, TrailingForecaster(1.0), horizon_s=1.0)
+    assert pred.plan_demand(5.0, 0.0) == 5.0       # no forecast yet
+    be = _FakeBackend(capacity=8)
+    _tick(pred, be, 2.0, 12.0)
+    assert pred.plan_demand(5.0, 2.0) == pytest.approx(12.0)
+    reactive = ReactiveScaling(sv)
+    _tick(reactive, be, 4.0, 12.0)
+    assert reactive.plan_demand(5.0, 4.0) == 5.0   # trailing plan demand
+
+
+def test_scaler_registry_resolves_and_validates():
+    sv = default_serving("sdturbo", num_workers=8)
+    assert set(SCALERS) == {"null", "heartbeat", "reactive",
+                            "predictive", "predictive-oracle"}
+    assert isinstance(make_scaler("predictive", sv), PredictiveScaling)
+    assert isinstance(make_scaler("reactive", sv), ReactiveScaling)
+    with pytest.raises(KeyError):
+        make_scaler("nope", sv)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: conservation, goldens, warm start
+# ---------------------------------------------------------------------------
+def test_predictive_run_moves_capacity_and_conserves():
+    tr = azure_like_trace(90, seed=3).scale(2, 24)
+    sv = default_serving("sdturbo", num_workers=12)
+    sv = replace(sv, scaler="predictive", warm_start_demand=True)
+    r = run_controller("diffserve", tr, sv, seed=0)
+    assert r.completed + r.dropped == r.total
+    assert r.completed > 0.7 * r.total
+    caps = [n for _, n in r.capacity_timeline]
+    assert len(caps) > 1                       # the fleet actually moved
+    assert min(caps) < max(caps)
+
+
+def test_classic_scalers_stay_bit_identical():
+    # the autoscaler plumbing (capacity timelines, warm-extras hooks,
+    # plan_demand discovery) must not perturb classic runs: the default
+    # bundle, an explicit heartbeat, and null (no faults injected) all
+    # produce the same fingerprint
+    tr = azure_like_trace(60, seed=3).scale(2, 24)
+    sv = default_serving("sdturbo", num_workers=8)
+    base = sim_fingerprint(run_controller("diffserve", tr, sv, seed=0))
+    heart = sim_fingerprint(run_controller(
+        "diffserve", tr, replace(sv, scaler="heartbeat"), seed=0))
+    null = sim_fingerprint(run_controller(
+        "diffserve", tr, replace(sv, scaler="null"), seed=0))
+    assert heart == base
+    assert null == base
+
+
+def test_warm_start_removes_front_loaded_violations():
+    # a trace that is already hot at t=0 used to blow through the first
+    # control epoch provisioned for nominal 1 qps; seeding the estimator
+    # and forecaster from rate_at(0) fixes exactly that window
+    tr = static_trace(24.0, 60)
+    sv = default_serving("sdturbo", num_workers=16)
+    cold = run_controller("diffserve", tr, sv, seed=0)
+    warm = run_controller("diffserve", tr,
+                          replace(sv, warm_start_demand=True), seed=0)
+    early = sv.control_period_s * 3
+    cold_early = max(v for t, v in cold.violation_timeline if t <= early)
+    warm_early = max(v for t, v in warm.violation_timeline if t <= early)
+    assert warm_early < cold_early
+    assert warm.violations < cold.violations
+
+
+# ---------------------------------------------------------------------------
+# Cluster backend: staged provision / decommission
+# ---------------------------------------------------------------------------
+class _StubCascade:
+    def stage_fns(self):
+        return [(None, None, None)] * 2
+
+    def confidence(self, imgs):
+        return np.ones(len(imgs))
+
+
+def test_cluster_set_capacity_stages_and_reactivates():
+    sv = default_serving("sdturbo", num_workers=4)
+    rt = ClusterRuntime(_StubCascade(), sv)
+    cb = ClusterBackend(rt, sv, make_profiles(sv, 0), seed=0)
+    tp = max(sv.worker_tp_size, 1)
+    cb.set_capacity(6)                    # provision two fresh slices
+    assert cb.census().active_slots == 6
+    assert len(rt.slices) == 6
+    assert all(len(sl.devices) == tp for sl in rt.slices)
+    cb.set_capacity(3)                    # staged decommission: wids stay
+    assert cb.census().active_slots == 3
+    assert len(rt.slices) == 6
+    assert len(cb._decommissioned) == 3
+    cb.set_capacity(5)                    # re-activate before provisioning
+    assert cb.census().active_slots == 5
+    assert len(rt.slices) == 6            # no new slices needed
+    assert len(cb._decommissioned) == 1
+    # warm-pool hook mirrors the simulator's want-list extension
+    cb.prewarm((1, 1))
+    assert cb._warm_extras([0, 0]) == [0, 1]
+    cb.prewarm(())
+    assert cb._warm_extras([0, 0]) == []

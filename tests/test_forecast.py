@@ -1,0 +1,126 @@
+"""Demand forecasters (serving/forecast.py): each real forecaster beats
+the trailing-EWMA baseline on the traces it was built for, horizon lead
+is respected, and the registry resolves/validates names."""
+import numpy as np
+import pytest
+
+from repro.config.base import replace
+from repro.serving.forecast import (FORECASTERS, EwmaTrendForecaster,
+                                    HoltWintersForecaster, OracleForecaster,
+                                    QuantileHeadroomForecaster,
+                                    TrailingForecaster, default_horizon_s,
+                                    forecast_mae, make_forecaster)
+from repro.serving.profiles import default_serving
+from repro.serving.trace import Trace, azure_like_trace
+
+PERIOD = 2.0
+HORIZON = 4.0
+
+
+def diurnal_trace(seasons: int = 4, season_s: int = 120) -> Trace:
+    """Several repeats of a smooth diurnal backbone (no noise): the
+    cleanest possible seasonal signal."""
+    t = np.arange(seasons * season_s)
+    qps = 8.0 + 6.0 * np.sin(2 * np.pi * t / season_s - np.pi / 2)
+    return Trace(qps, "diurnal")
+
+
+def test_trend_beats_trailing_on_ramp():
+    ramp = Trace(np.linspace(2.0, 40.0, 240), "ramp")
+    trail = forecast_mae(TrailingForecaster(0.6), ramp, PERIOD, HORIZON)
+    trend = forecast_mae(EwmaTrendForecaster(), ramp, PERIOD, HORIZON)
+    assert trend < trail
+
+
+def test_holt_winters_beats_trailing_on_diurnal():
+    trace = diurnal_trace()
+    trail = forecast_mae(TrailingForecaster(0.6), trace, PERIOD, HORIZON)
+    hw = forecast_mae(
+        HoltWintersForecaster(season_s=120.0, bucket_s=PERIOD),
+        trace, PERIOD, HORIZON)
+    assert hw < trail
+
+
+def _shortfall(forecaster, trace) -> float:
+    """Mean under-prediction mass — the part of demand a scaler sized to
+    the forecast would have no capacity for."""
+    errs, t = [], 0.0
+    while t + HORIZON < trace.duration_s:
+        f = forecaster.step(trace.rate_at(t), t, HORIZON)
+        errs.append(max(trace.rate_at(t + HORIZON) - f, 0.0))
+        t += PERIOD
+    return float(np.mean(errs))
+
+
+def test_headroom_cuts_underprediction_on_azure_trace():
+    # headroom trades MAE for fewer under-predictions: on the bursty
+    # azure trace it must cut the shortfall vs both its own base and
+    # the trailing baseline
+    trace = azure_like_trace(360, seed=3).scale(4.0, 32.0)
+    trail = _shortfall(TrailingForecaster(0.6), trace)
+    base = _shortfall(EwmaTrendForecaster(), trace)
+    head = _shortfall(
+        QuantileHeadroomForecaster(EwmaTrendForecaster()), trace)
+    assert head < base
+    assert head < trail
+
+
+def test_horizon_lead_respected_on_linear_ramp():
+    # on a deterministic linear ramp the trend model's forecast at
+    # now+h must sit ~h*slope above its forecast at now+0 — the lead
+    # actually looks ahead rather than re-labelling the current level
+    slope = 0.5
+    f0 = EwmaTrendForecaster()
+    fh = EwmaTrendForecaster()
+    last0 = lasth = 0.0
+    for k in range(60):
+        t = k * PERIOD
+        q = 2.0 + slope * t
+        last0 = f0.step(q, t, 0.0)
+        lasth = fh.step(q, t, HORIZON)
+    assert lasth - last0 == pytest.approx(slope * HORIZON, rel=0.15)
+
+
+def test_headroom_at_least_base_and_validates():
+    base = EwmaTrendForecaster()
+    wrapped = QuantileHeadroomForecaster(EwmaTrendForecaster(), q=0.9)
+    rng = np.random.default_rng(0)
+    for k in range(40):
+        t = k * PERIOD
+        q = 10.0 + float(rng.pareto(2.5))
+        b = base.step(q, t, HORIZON)
+        w = wrapped.step(q, t, HORIZON)
+        assert w >= b - 1e-9
+    with pytest.raises(ValueError):
+        QuantileHeadroomForecaster(EwmaTrendForecaster(), q=0.3)
+
+
+def test_oracle_reads_future_rate():
+    trace = diurnal_trace()
+    f = OracleForecaster(trace)
+    assert f.step(0.0, 10.0, HORIZON) == trace.rate_at(10.0 + HORIZON)
+    with pytest.raises(ValueError):
+        OracleForecaster(None)
+
+
+def test_registry_and_horizon_defaults():
+    serving = default_serving("sdturbo", num_workers=8)
+    for name in FORECASTERS:
+        if name == "oracle":
+            continue
+        f = make_forecaster(name, serving)
+        assert f.step(4.0, 0.0, HORIZON) >= 0.0
+    with pytest.raises(KeyError):
+        make_forecaster("nope", serving)
+    # default horizon covers the control epoch plus model-load lead
+    assert default_horizon_s(serving) == pytest.approx(
+        serving.control_period_s + 2.0)
+    assert default_horizon_s(
+        replace(serving, forecast_horizon_s=7.5)) == 7.5
+
+
+def test_forecasts_clamped_nonnegative():
+    f = EwmaTrendForecaster()
+    for k, q in enumerate([30.0, 20.0, 10.0, 2.0, 0.5, 0.0]):
+        out = f.step(q, k * PERIOD, 30.0)
+        assert out >= 0.0
