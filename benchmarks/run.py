@@ -36,6 +36,16 @@ def bench_serving(out_path: pathlib.Path) -> dict:
     r = run_controller("diffserve", trace, serving, seed=0)
     wall = time.perf_counter() - t0
     solve = np.asarray(r.solve_ms if r.solve_ms else [0.0])
+
+    # overload datum: the same trace offered at 100x under queue-depth
+    # admission — pins the vectorized arrival pump's event throughput at
+    # high QPS and the door-shedding behavior of the guarded controller
+    hot = azure_like_trace(120, seed=3).scale(4, 32).scaled(100.0)
+    sv_g = default_serving("sdturbo", num_workers=16,
+                           admission="queue-depth")
+    t1 = time.perf_counter()
+    rg = run_controller("diffserve", hot, sv_g, seed=0)
+    wall_g = time.perf_counter() - t1
     payload = {
         "pinned": {"trace": trace.name, "trace_seed": 3, "sim_seed": 0,
                    "cascade": "sdturbo", "workers": 16,
@@ -49,6 +59,17 @@ def bench_serving(out_path: pathlib.Path) -> dict:
         "violation_ratio": round(r.violation_ratio, 6),
         "completed": r.completed,
         "total": r.total,
+        "overload": {
+            "trace": hot.name, "load_scale": 100.0,
+            "admission": "queue-depth",
+            "sim_events_processed": int(rg.events_processed),
+            "sim_events_per_s": round(rg.events_processed
+                                      / max(wall_g, 1e-9)),
+            "sim_wall_s": round(wall_g, 3),
+            "offered": rg.total,
+            "shed_admission": rg.shed_admission,
+            "violation_ratio": round(rg.violation_ratio, 6),
+        },
     }
     out_path.write_text(json.dumps(payload, indent=1) + "\n")
     return payload

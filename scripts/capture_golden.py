@@ -26,6 +26,7 @@ from repro.serving.baselines import (run_ablation, run_baseline,
 from repro.serving.profiles import default_serving
 from repro.serving.simulator import SimConfig, Simulator
 from repro.serving.trace import azure_like_trace, static_trace
+from repro.testing.golden import overload_fingerprint
 from repro.testing.golden import sim_fingerprint as fingerprint
 
 
@@ -80,6 +81,26 @@ def main():
         "SolverPlanner golden"
 
     pprint.pprint(golden, width=76, sort_dicts=True)
+
+    # split drop taxonomy (tests/test_overload.py:OVERLOAD_GOLDEN): the
+    # same pinned seeds with the counters broken out per reason, plus one
+    # deliberately overloaded queue-depth run so the shed path is pinned
+    overload = {
+        "homogeneous": overload_fingerprint(
+            run_baseline("diffserve", tr, sv, seed=0)),
+        "fault_injection": overload_fingerprint(
+            Simulator(sv, _profiles(sv),
+                      SimConfig(seed=0, failure_times=((20.0, 0, 25.0),
+                                                       (25.0, 1, 30.0)))
+                      ).run(tr_f)),
+        "clipper-heavy": overload_fingerprint(
+            run_baseline("clipper-heavy", tr_b, sv, seed=0)),
+        "guarded_16x": overload_fingerprint(
+            run_controller("diffserve-guarded", tr.scaled(16.0), sv,
+                           seed=0)),
+    }
+    print("\nOVERLOAD_GOLDEN = ", end="")
+    pprint.pprint(overload, width=76, sort_dicts=True)
 
 
 def _profiles(sv):

@@ -582,8 +582,30 @@ class ServingConfig:
     forecast_horizon_s: float = 0.0
     warm_pool: int = 0
     warm_start_demand: bool = False
+    # overload hardening (serving/admission.py:ADMISSIONS): the
+    # admission-policy registry name plus its knobs — the ECN-style mark
+    # threshold k and shed multiplier for "queue-depth" (shed when the
+    # arrival tier's backlog passes k * shed_mult), and the token rate /
+    # burst allowance for "token-bucket". Resolved at ControlPlane build
+    # time like the other registries.
+    admission: str = "accept-all"
+    ecn_k: float = 30.0
+    ecn_shed_mult: float = 4.0
+    admission_rate_qps: float = 0.0
+    admission_burst_s: float = 2.0
 
     def __post_init__(self):
+        if self.ecn_k <= 0:
+            raise ValueError(f"ecn_k must be > 0, got {self.ecn_k}")
+        if self.ecn_shed_mult < 1.0:
+            raise ValueError(f"ecn_shed_mult must be >= 1, got "
+                             f"{self.ecn_shed_mult}")
+        if self.admission_rate_qps < 0:
+            raise ValueError(f"admission_rate_qps must be >= 0, got "
+                             f"{self.admission_rate_qps}")
+        if self.admission == "token-bucket" and self.admission_rate_qps <= 0:
+            raise ValueError("token-bucket admission requires "
+                             "admission_rate_qps > 0")
         if self.forecast_horizon_s < 0:
             raise ValueError(f"forecast_horizon_s must be >= 0, got "
                              f"{self.forecast_horizon_s}")

@@ -102,6 +102,11 @@ class Telemetry:
     arrivals: Tuple[float, ...] = ()
     live_workers: int = 0
     live_by_class: Tuple[Tuple[str, int], ...] = ()   # (class, alive count)
+    # split drop taxonomy (serving/admission.py): cumulative counters so
+    # controllers can tell door-shedding from deadline pathology
+    shed_admission: int = 0
+    dropped_predictive: int = 0
+    dropped_deadline: int = 0
 
     # ------- two-tier accessors -------
     @property

@@ -24,6 +24,7 @@ import pathlib
 
 import numpy as np
 
+from repro.serving.admission import ADMISSIONS
 from repro.serving.autocascade import CascadeBuilder, load_catalog
 from repro.serving.autoscaler import SCALERS, provisioned_cost
 from repro.serving.baselines import (BASELINES, CONTROLLERS,
@@ -84,6 +85,22 @@ def main():
     ap.add_argument("--warm-start", action="store_true",
                     help="provision the first control tick for the "
                     "trace's known t=0 rate instead of nominal 1 qps")
+    ap.add_argument("--admission", default=None,
+                    choices=sorted(ADMISSIONS),
+                    help="overload admission policy "
+                    "(serving/admission.py): accept-all (default) / "
+                    "token-bucket / queue-depth (ECN-style early "
+                    "degradation + door shedding)")
+    ap.add_argument("--ecn-k", type=float, default=30.0,
+                    help="queue-depth admission: per-tier ECN mark "
+                    "threshold k (sweep like k10/k30/k60; shedding "
+                    "starts at k*4)")
+    ap.add_argument("--admission-rate", type=float, default=0.0,
+                    help="token-bucket admission: sustained admit rate "
+                    "in qps (required for --admission token-bucket)")
+    ap.add_argument("--load-scale", type=float, default=1.0,
+                    help="multiply the trace's offered QPS by this "
+                    "factor (overload sweeps: 16, 64, 100, ...)")
     ap.add_argument("--workers", type=int, default=16)
     ap.add_argument("--worker-classes", default=None,
                     help="heterogeneous cluster as "
@@ -148,6 +165,12 @@ def main():
     else:
         trace = azure_like_trace(args.duration, seed=3).scale(
             args.trace_min, args.trace_max)
+    if args.load_scale < 0:
+        ap.error(f"--load-scale must be >= 0, got {args.load_scale}")
+    if args.load_scale != 1.0:
+        trace = trace.scaled(args.load_scale)
+    if args.admission == "token-bucket" and args.admission_rate <= 0:
+        ap.error("--admission token-bucket requires --admission-rate > 0")
     if args.cost_per_class and not wcs:
         ap.error("--cost-per-class requires --worker-classes")
     costs = (class_costs_from_arg(args.cost_per_class)
@@ -186,7 +209,10 @@ def main():
                               forecaster=args.forecaster or "holt-winters",
                               forecast_horizon_s=args.forecast_horizon,
                               warm_pool=args.warm_pool,
-                              warm_start_demand=args.warm_start)
+                              warm_start_demand=args.warm_start,
+                              admission=args.admission or "accept-all",
+                              ecn_k=args.ecn_k,
+                              admission_rate_qps=args.admission_rate)
     r = run_controller(controller, trace, serving, seed=args.seed,
                        estimator=args.estimator)
 
@@ -198,6 +224,11 @@ def main():
         "workers": serving.num_workers, "trace": trace.name,
         "total_queries": r.total, "completed": r.completed,
         "dropped": r.dropped, "slo_violation_ratio": round(r.violation_ratio, 4),
+        "admission": serving.admission, "load_scale": args.load_scale,
+        "shed_admission": r.shed_admission,
+        "dropped_predictive": r.dropped_predictive,
+        "dropped_deadline": r.dropped_deadline,
+        "goodput": round(r.goodput, 4),
         "mean_fid": round(r.mean_fid, 3),
         "defer_fraction": round(r.defer_fraction, 3),
         "boundary_defer_fractions": [

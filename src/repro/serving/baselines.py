@@ -158,6 +158,9 @@ class ControllerBundle:
     # per-tier warm-pool standbys the scaler keeps pre-loaded (only
     # meaningful with an elastic scaler)
     warm_pool: Optional[int] = None
+    # admission-policy registry name (serving/admission.py:ADMISSIONS)
+    # overriding ``serving.admission``; None keeps the config's choice
+    admission: Optional[str] = None
 
     @property
     def dynamic(self) -> bool:
@@ -196,6 +199,14 @@ CONTROLLERS = {
         "Holt-Winters forecast horizon covering the control epoch + "
         "model-load lead, per-tier warm pools", scaler="predictive",
         warm_pool=1),
+    # overload hardening (serving/admission.py): diffserve + ECN-style
+    # queue-depth admission — degrade early under congestion instead of
+    # discovering overload at the deadline
+    "diffserve-guarded": ControllerBundle(
+        "diffserve-guarded", "diffserve + queue-depth (ECN-style) "
+        "admission: lowers deferral thresholds as tier queues cross k "
+        "and sheds at the door past k*shed_mult",
+        admission="queue-depth"),
     # §4.5 resource-allocation ablations, as first-class bundles
     "static_threshold": ControllerBundle(
         "static_threshold", "ablation: re-plans allocation but pins the "
@@ -283,6 +294,8 @@ def assemble_bundle(name: Optional[str], trace: Trace,
         serving = dataclasses.replace(serving, scaler=bundle.scaler)
     if bundle.warm_pool is not None and not serving.warm_pool:
         serving = dataclasses.replace(serving, warm_pool=bundle.warm_pool)
+    if bundle.admission is not None and serving.admission != bundle.admission:
+        serving = dataclasses.replace(serving, admission=bundle.admission)
     spec = as_cascade_spec(serving.cascade)
     profiles = make_profiles(serving, seed, uniform=bundle.uniform_profile)
     if fixed_plan is _UNSET:

@@ -33,6 +33,7 @@ from repro.config.base import (LatencyProfile, LatencyScale, ServingConfig,
 from repro.core.cascade import DiffusionCascade
 from repro.core.confidence import as_boundary_profiles
 from repro.core.milp import Telemetry
+from repro.serving.admission import AcceptAllAdmission, AdmissionPolicy
 from repro.serving.controlplane import (Census, ControlDecision,
                                         ControlPlane, windowed_telemetry)
 from repro.serving.simulator import Query, SimResult
@@ -258,6 +259,9 @@ class ClusterBackend:
         self._decommissioned: set = set()
         # per-tier warm-pool targets (autoscaler prewarm): () disables
         self._warm_targets: Tuple[int, ...] = ()
+        # overload hardening: serve() adopts the control plane's policy;
+        # direct submit() callers get the accept-all baseline
+        self.admission: AdmissionPolicy = AcceptAllAdmission()
         self.result = SimResult(
             completed_per_tier=[0] * self.num_tiers,
             tier_processed=[0] * self.num_tiers,
@@ -300,7 +304,10 @@ class ClusterBackend:
                                   self._arrivals_window,
                                   tuple(float(len(q)) for q in self.queues),
                                   self.profiles, self.thresholds,
-                                  self.census())
+                                  self.census(),
+                                  drops=(self.result.shed_admission,
+                                         self.result.dropped_predictive,
+                                         self.result.dropped_deadline))
 
     def detect_faults(self) -> None:
         """Heartbeat sweep (``HeartbeatScaling`` calls this at tick
@@ -347,10 +354,15 @@ class ClusterBackend:
                 sl.last_heartbeat = now
 
     def submit(self, queries: Sequence[Query]) -> None:
+        adm = self.admission
         for q in queries:
             self.result.total += 1
             self._arrivals_window.append(q.arrival)
             q.stage = q.stage % self.num_tiers
+            if not adm.admit(q.arrival,
+                             [len(dq) for dq in self.queues], q.stage):
+                self.result.shed_admission += 1
+                continue
             q.enqueued_at = q.arrival
             self.queues[q.stage].append(q)
 
@@ -649,6 +661,9 @@ class ClusterBackend:
         restrict = getattr(control.planner, "restrict_to_models", None)
         if restrict is not None:
             restrict(self._stages_by_model)
+        # adopt the control plane's admission policy for this run
+        self.admission = getattr(control, "admission", None) \
+            or AcceptAllAdmission()
         arrivals = trace.arrivals(self.rng)
         stage = self.arrival_stage % self.num_tiers
         pending = deque(
@@ -707,7 +722,7 @@ class ClusterBackend:
                 break              # safety valve against unforeseen stalls
         for q in [qq for queue in self.queues for qq in queue]:
             q.dropped = True
-            self.result.dropped += 1
+            self.result.dropped_deadline += 1
             self.result.violations += 1
         for queue in self.queues:
             queue.clear()

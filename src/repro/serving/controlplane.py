@@ -35,6 +35,8 @@ from repro.config.base import ServingConfig
 from repro.core.allocator import AllocatorOptions, ResourceManager
 from repro.core.confidence import DeferralProfile
 from repro.core.milp import AllocationPlan, Telemetry
+from repro.serving.admission import (AcceptAllAdmission, AdmissionPolicy,
+                                     make_admission)
 
 
 # ---------------------------------------------------------------------------
@@ -92,7 +94,8 @@ class ExecutorBackend(Protocol):
 def windowed_telemetry(now: float, period_s: float, arrivals_window,
                        queues: Tuple[float, ...], profiles,
                        thresholds: Tuple[float, ...],
-                       census: Census) -> Telemetry:
+                       census: Census,
+                       drops: Tuple[int, int, int] = (0, 0, 0)) -> Telemetry:
     """The shared telemetry math every backend reports with: prune the
     arrival window to the last control period, estimate qps from it, and
     cascade per-boundary arrival rates through the deferral profiles
@@ -112,7 +115,10 @@ def windowed_telemetry(now: float, period_s: float, arrivals_window,
     return Telemetry(demand_qps=qps, queues=tuple(queues),
                      arrivals=tuple(arrivals),
                      live_workers=census.live_workers,
-                     live_by_class=census.live_by_class)
+                     live_by_class=census.live_by_class,
+                     shed_admission=int(drops[0]),
+                     dropped_predictive=int(drops[1]),
+                     dropped_deadline=int(drops[2]))
 
 
 # ---------------------------------------------------------------------------
@@ -295,6 +301,14 @@ class ControlPlane:
         default_factory=PlanThresholds)
     scaling: ScalingPolicy = dataclasses.field(
         default_factory=HeartbeatScaling)
+    # overload hardening (serving/admission.py): the backends consult
+    # this policy per arrival (shedding), and each tick's freshly
+    # selected thresholds pass through its ``degrade`` hook so a
+    # congestion-aware policy can lower deferral thresholds *before*
+    # deadlines are missed. The accept-all default is a bit-identical
+    # no-op (golden-pinned).
+    admission: AdmissionPolicy = dataclasses.field(
+        default_factory=AcceptAllAdmission)
     # known starting demand (Trace.rate_at(0) on replay paths): the first
     # tick provisions for it instead of the blind nominal 1.0 qps, fixing
     # cold-start under-provisioning on traces that start hot. None keeps
@@ -322,12 +336,18 @@ class ControlPlane:
                 demand = forecast(demand, census.now)
         else:
             tel, demand = Telemetry(demand_qps=0.0), 0.0
+            if self.admission.needs_telemetry and not first:
+                # fixed-plan bundles skip the telemetry window, but a
+                # congestion-aware admission policy still needs queue
+                # depths to degrade against
+                tel = backend.telemetry_window()
         plan = self.planner.plan(tel, demand)
         chosen = getattr(self.planner, "chosen_cascade", None)
         chosen_profiles = getattr(self.planner, "chosen_profiles", None)
         decision = ControlDecision(plan=plan,
-                                   thresholds=self.thresholds.select(plan,
-                                                                     tel),
+                                   thresholds=self.admission.degrade(
+                                       self.thresholds.select(plan, tel),
+                                       tel),
                                    cascade=chosen,
                                    profiles=tuple(chosen_profiles)
                                    if chosen_profiles is not None else None)
@@ -340,6 +360,8 @@ class ControlPlane:
         # between the snapshot and the live object (an in-memory
         # checkpoint would otherwise drift as the run continues)
         state: Dict = {"estimator": copy.deepcopy(dict(vars(self.estimator)))}
+        # admission policies may carry mutable state (token-bucket fill)
+        state["admission"] = copy.deepcopy(dict(vars(self.admission)))
         rm = getattr(self.planner, "rm", None)
         if rm is not None:
             state["aimd_batches"] = list(rm._aimd_batches)
@@ -348,6 +370,8 @@ class ControlPlane:
     def load_state(self, state: Dict) -> None:
         vars(self.estimator).update(
             copy.deepcopy(state.get("estimator", {})))
+        vars(self.admission).update(
+            copy.deepcopy(state.get("admission", {})))
         rm = getattr(self.planner, "rm", None)
         if rm is not None and "aimd_batches" in state:
             rm._aimd_batches = list(state["aimd_batches"])
@@ -367,7 +391,8 @@ def build_control_plane(spec, serving: ServingConfig,
                         trace=None,
                         planner: Optional[PlannerPolicy] = None,
                         thresholds: Optional[ThresholdPolicy] = None,
-                        scaling: Optional[ScalingPolicy] = None
+                        scaling: Optional[ScalingPolicy] = None,
+                        admission: "AdmissionPolicy | str | None" = None
                         ) -> ControlPlane:
     """The default DiffServe control plane: EWMA estimation (or the
     ``serving.estimator`` registry name), solver re-planning (or a fixed
@@ -407,10 +432,16 @@ def build_control_plane(spec, serving: ServingConfig,
             # lazy: autoscaler imports this module for the classic policies
             from repro.serving.autoscaler import make_scaler
             scaling = make_scaler(name, serving, trace)
+    if admission is None:
+        admission = getattr(serving, "admission", "accept-all") \
+            or "accept-all"
+    if isinstance(admission, str):
+        admission = make_admission(admission, serving)
     initial_demand = None
     if getattr(serving, "warm_start_demand", False) and trace is not None:
         initial_demand = float(trace.rate_at(0.0))
     return ControlPlane(estimator=estimator, planner=planner,
                         thresholds=thresholds or PlanThresholds(),
                         scaling=scaling,
+                        admission=admission,
                         initial_demand=initial_demand)

@@ -33,6 +33,12 @@ def snapshot(sim: Simulator, path: str) -> None:
         "arrivals_window": sim._arrivals_window,
         "recent_defer": sim._recent_defer,
         "active_S": sim._active_S,
+        # the pending arrival stream (run() keeps arrivals in a sorted
+        # array + cursor, not the heap — losing these would silently
+        # truncate a restored run's remaining workload)
+        "arrival_times": sim._arrival_times,
+        "arrival_i": sim._arrival_i,
+        "slo0": sim._slo0,
         "rng_state": sim.rng.bit_generator.state,
         "profile_scores": [list(p._scores) for p in sim.profiles],
         "control": sim.control.state_dict(),
@@ -63,6 +69,10 @@ def restore(sim: Simulator, path: str) -> Simulator:
     sim._arrivals_window = state["arrivals_window"]
     sim._recent_defer = state["recent_defer"]
     sim._active_S = state["active_S"]
+    sim._arrival_times = state.get("arrival_times", sim._arrival_times)
+    sim._arrival_i = state.get("arrival_i", sim._arrival_i)
+    sim._slo0 = state.get("slo0", sim._slo0)
+    sim._recount_depth()
     sim.rng.bit_generator.state = state["rng_state"]
     for p, scores in zip(sim.profiles, state["profile_scores"]):
         p._scores = scores

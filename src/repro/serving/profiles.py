@@ -140,11 +140,13 @@ def default_serving(cascade: "str | CascadeSpec" = "sdturbo",
     ``worker_classes`` is given, ``num_workers`` is derived from the
     class counts.
 
-    ``controller`` / ``estimator`` kwargs select the control-plane policy
-    bundle and demand estimator by registry name
-    (serving/baselines.py:CONTROLLERS, serving/controlplane.py:ESTIMATORS)
+    ``controller`` / ``estimator`` / ``admission`` kwargs select the
+    control-plane policy bundle, demand estimator, and overload admission
+    policy by registry name (serving/baselines.py:CONTROLLERS,
+    serving/controlplane.py:ESTIMATORS, serving/admission.py:ADMISSIONS)
     — stored as plain strings so configs stay pure data and are resolved
-    when a ControlPlane is built."""
+    when a ControlPlane is built. Admission knobs (``ecn_k``,
+    ``ecn_shed_mult``, ``admission_rate_qps``) ride along the same way."""
     wcs = kw.get("worker_classes") or ()
     if wcs:
         num_workers = sum(wc.count for wc in wcs)

@@ -36,6 +36,7 @@ from repro.core.allocator import AllocatorOptions, ResourceManager
 from repro.core.confidence import DeferralProfile, as_boundary_profiles
 from repro.core.milp import AllocationPlan, Telemetry
 from repro.core.quality import QualityModel
+from repro.serving.admission import AcceptAllAdmission
 from repro.serving.controlplane import (Census, ControlDecision,
                                         ControlPlane, build_control_plane,
                                         windowed_telemetry)
@@ -95,7 +96,12 @@ class SimConfig:
 @dataclasses.dataclass
 class SimResult:
     completed: int = 0
-    dropped: int = 0
+    # split drop taxonomy (serving/admission.py): shed at the admission
+    # door / predicted deadline miss / lost to capacity or the deadline.
+    # The legacy aggregate lives on as the `dropped` property below.
+    shed_admission: int = 0
+    dropped_predictive: int = 0
+    dropped_deadline: int = 0
     violations: int = 0
     total: int = 0
     deferred: int = 0
@@ -141,8 +147,29 @@ class SimResult:
         return max(len(self.cascade_timeline) - 1, 0)
 
     @property
+    def dropped(self) -> int:
+        """Backward-compatible aggregate of the post-admission drops.
+        Door-shedding is deliberately excluded: a shed query was never
+        admitted, so it is neither a violation nor a drop — under the
+        accept-all baseline this property is bit-identical to the old
+        single counter (golden-pinned)."""
+        return self.dropped_predictive + self.dropped_deadline
+
+    @property
     def violation_ratio(self) -> float:
         return self.violations / max(self.total, 1)
+
+    @property
+    def shed_fraction(self) -> float:
+        return self.shed_admission / max(self.total, 1)
+
+    @property
+    def goodput(self) -> float:
+        """Fraction of *offered* queries completed within their SLO —
+        the degradation-curve y-axis that treats shed, dropped, and late
+        queries uniformly as lost work."""
+        late = self.violations - self.dropped
+        return (self.completed - late) / max(self.total, 1)
 
     @property
     def defer_fraction(self) -> float:
@@ -265,6 +292,21 @@ class Simulator:
         self._recent_defer: deque = deque()
         self._window_done = 0
         self._active_S = serving.num_workers
+        # overload hardening: the control plane owns the admission
+        # policy; the backend consults it per arrival (getattr keeps
+        # minimal ControlPlane stand-ins working)
+        self.admission = getattr(self.control, "admission", None) \
+            or AcceptAllAdmission()
+        # incrementally maintained per-tier queued-query depths (the
+        # admission hot path must not scan all workers per arrival)
+        self._depth: List[int] = [0] * self.num_tiers
+        # vectorized arrival stream (run()): a sorted timestamp array +
+        # cursor replaces one heap event per arrival, and Query objects
+        # materialize only *after* admission — the difference between
+        # sustaining 100x overload and melting in it
+        self._arrival_times: np.ndarray = np.empty(0)
+        self._arrival_i: int = 0
+        self._slo0: float = self.spec.slo_s
         # per-tier warm-pool targets (autoscaler prewarm): () disables
         self._warm_targets: Tuple[int, ...] = ()
         # per-(class, tier) scaled latency — (profile, disc seconds),
@@ -306,10 +348,16 @@ class Simulator:
         heapq.heappush(self._events, (t, kind, next(self._eid), payload))
 
     def run(self, trace: Trace) -> SimResult:
-        arrivals = trace.arrivals(self.rng)
-        self.submit(Query(qid=i, arrival=float(t),
-                          deadline=float(t) + self.spec.slo_s)
-                    for i, t in enumerate(arrivals))
+        # arrivals stay a sorted numpy array consumed by a cursor in
+        # _run_until (merged with the heap, same event order as when
+        # each arrival was its own heap entry) — heap churn and Query
+        # construction for queries the admission policy sheds would
+        # dominate the 100x-overload hot path
+        self._arrival_times = np.asarray(trace.arrivals(self.rng),
+                                         dtype=float)
+        self._arrival_i = 0
+        self._slo0 = self.spec.slo_s
+        self.result.total += len(self._arrival_times)
         self.push(0.0, self.CONTROL)
         for (tf, wid, dur) in self.sim.failure_times:
             self.push(tf, self.FAIL, (wid, dur))
@@ -332,13 +380,35 @@ class Simulator:
         return self.result
 
     def _run_until(self, end_t: float):
-        """Pump the event queue up to ``end_t`` (also used by
-        serving.faults.resume after a snapshot restore)."""
-        while self._events and self._events[0][0] <= end_t:
-            t, kind, _, payload = heapq.heappop(self._events)
+        """Pump the merged event stream — the sorted arrival array and
+        the heap — up to ``end_t`` (also used by serving.faults.resume
+        after a snapshot restore). Ordering matches the legacy
+        one-heap-entry-per-arrival pump exactly: ARRIVAL is kind 0, so
+        at equal timestamps an arrival precedes every other event kind,
+        and equal-time arrivals retain submission (array) order."""
+        INF = math.inf
+        events = self._events
+        times = self._arrival_times
+        i, n = self._arrival_i, len(self._arrival_times)
+        result = self.result
+        while True:
+            arr_t = times[i] if i < n else INF
+            heap_t = events[0][0] if events else INF
+            take_arrival = arr_t < heap_t or (
+                arr_t == heap_t and heap_t != INF
+                and events[0][1] > self.ARRIVAL)
+            t = float(arr_t) if take_arrival else heap_t
+            if t > end_t or t == INF:
+                break
             self.now = t
-            self.result.events_processed += 1
-            self._dispatch(kind, payload)
+            result.events_processed += 1
+            if take_arrival:
+                self._on_arrival_time(t, i)
+                i += 1
+            else:
+                _, kind, _, payload = heapq.heappop(events)
+                self._dispatch(kind, payload)
+        self._arrival_i = i
 
     def _dispatch(self, kind: int, payload):
         if kind == self.ARRIVAL:
@@ -365,7 +435,7 @@ class Simulator:
                         and not q.dropped):
                     seen.add(id(q))
                     q.dropped = True
-                    self.result.dropped += 1
+                    self.result.dropped_deadline += 1
                     self.result.violations += 1
 
     # ------------------------------------------------------------------
@@ -394,17 +464,38 @@ class Simulator:
                 * self._per_item_cost(w, tier))
         q.enqueued_at = self.now
         w.queue.append(q)
+        self._depth[tier] += 1
         self._maybe_start(w)
         return True
 
     def _on_arrival(self, q: Query):
+        """Heap-event arrival (the ``submit`` protocol path)."""
         self._arrivals_window.append(q.arrival)
         q.stage = self.sim.arrival_stage % self.num_tiers
+        if not self.admission.admit(q.arrival, self._depth, q.stage):
+            self.result.shed_admission += 1
+            return
         if q.stage > 0:
             q.deferred = True
         if not self._route(q, q.stage):
             q.dropped = True
-            self.result.dropped += 1
+            self.result.dropped_deadline += 1
+            self.result.violations += 1
+
+    def _on_arrival_time(self, t: float, qid: int):
+        """Array-stream arrival (the ``run`` hot path): admission runs
+        on the bare timestamp, and the Query object only exists for
+        admitted queries — a shed arrival costs a counter bump."""
+        self._arrivals_window.append(t)
+        stage = self.sim.arrival_stage % self.num_tiers
+        if not self.admission.admit(t, self._depth, stage):
+            self.result.shed_admission += 1
+            return
+        q = Query(qid=qid, arrival=t, deadline=t + self._slo0,
+                  stage=stage, deferred=stage > 0)
+        if not self._route(q, stage):
+            q.dropped = True
+            self.result.dropped_deadline += 1
             self.result.violations += 1
 
     def _profiled_latency(self, w: Worker, role: int, n: int) -> float:
@@ -450,12 +541,13 @@ class Simulator:
         batch: List[Query] = []
         while w.queue and len(batch) < w.batch_size:
             q = w.queue.popleft()
+            self._depth[q.stage] -= 1
             if q.done_at is not None or q.dropped:
                 continue           # hedged duplicate already finished
             if (self.serving.drop_predicted_misses and est_done > q.deadline
                     and q.stage == w.role):
                 q.dropped = True
-                self.result.dropped += 1
+                self.result.dropped_predictive += 1
                 self.result.violations += 1
                 continue
             batch.append(q)
@@ -562,7 +654,10 @@ class Simulator:
         return windowed_telemetry(self.now, self.serving.control_period_s,
                                   self._arrivals_window, queues,
                                   self.profiles, self.thresholds,
-                                  self.census())
+                                  self.census(),
+                                  drops=(self.result.shed_admission,
+                                         self.result.dropped_predictive,
+                                         self.result.dropped_deadline))
 
     def _apply_plan_now(self, first=False):
         """One control tick: the ControlPlane plans and calls back into
@@ -667,7 +762,24 @@ class Simulator:
                     orphans.extend(w.queue)
                     w.queue.clear()
                     w.role = None
+        # tier indices (and the tier count) just changed wholesale:
+        # rebuild the admission depth counters from the queues
+        self._recount_depth()
         return orphans
+
+    def _recount_depth(self):
+        """Rebuild the per-tier queued-depth counters from scratch. The
+        incremental bookkeeping can drift on hedged duplicates (the
+        shared Query's stage advances while a stale copy is still
+        queued), so congestion-aware runs re-true the counters each
+        control tick — cheap there, because admission bounds the
+        queues."""
+        d = [0] * self.num_tiers
+        for w in self.workers.values():
+            for q in w.queue:
+                if q.stage < self.num_tiers:
+                    d[q.stage] += 1
+        self._depth = d
 
     def _assign_roles(self, live: List[Worker],
                       want: List[Optional[int]]) -> List[Query]:
@@ -693,6 +805,8 @@ class Simulator:
                 w.loading_until = self.now + self.sim.model_load_s
             if w.role is not None and w.role != role and w.queue:
                 orphans.extend(w.queue)
+                for q in w.queue:
+                    self._depth[q.stage] -= 1
                 w.queue.clear()
             w.role = role
         return orphans
@@ -708,10 +822,12 @@ class Simulator:
                 continue           # hedged duplicate already finished
             if not self._route(q, q.stage):
                 q.dropped = True
-                self.result.dropped += 1
+                self.result.dropped_deadline += 1
                 self.result.violations += 1
 
     def _on_control(self):
+        if self.admission.needs_telemetry:
+            self._recount_depth()
         if self.now > 0:
             self._apply_plan_now()     # tick: fault sweep + plan + apply
         else:
@@ -764,6 +880,8 @@ class Simulator:
 
     def _detect_and_requeue(self, w: Worker):
         lost = list(w.queue) + list(w.in_flight)
+        for q in w.queue:
+            self._depth[q.stage] -= 1
         w.queue.clear()
         w.in_flight = []
         for q in lost:
@@ -771,7 +889,7 @@ class Simulator:
                 self.result.requeued_on_failure += 1
                 if not self._route(q, q.stage):
                     q.dropped = True
-                    self.result.dropped += 1
+                    self.result.dropped_deadline += 1
                     self.result.violations += 1
 
     def _on_recover(self, wid: int):
@@ -844,6 +962,8 @@ class Simulator:
             for w in self.workers.values():
                 if w.wid >= new_s and w.queue:
                     orphans.extend(w.queue)
+                    for q in w.queue:
+                        self._depth[q.stage] -= 1
                     w.queue.clear()
             self._settle_orphans(orphans)
 

@@ -8,6 +8,7 @@ Poisson process from it.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Iterator, List, Optional
 
 import numpy as np
@@ -37,6 +38,16 @@ class Trace:
                          f"{self.name}_{min_qps}to{max_qps}qps")
         scaled = min_qps + (self.qps - lo) * (max_qps - min_qps) / (hi - lo)
         return Trace(scaled, f"{self.name}_{min_qps}to{max_qps}qps")
+
+    def scaled(self, k: float) -> "Trace":
+        """Multiplicative overload scaling: ``k``x the offered QPS at
+        every second, shape preserved (the degradation-curve sweeps run
+        the same trace at 1x/4x/16x/64x). ``scaled(1.0)`` returns an
+        equal-QPS trace, so goldens replayed through it stay
+        bit-identical."""
+        if k < 0:
+            raise ValueError(f"load scale must be >= 0, got {k}")
+        return Trace(self.qps * float(k), f"{self.name}_x{k:g}")
 
     def arrivals(self, rng: np.random.Generator) -> np.ndarray:
         """Arrival timestamps over the trace (inhomogeneous Poisson)."""
@@ -68,6 +79,34 @@ def azure_like_trace(duration_s: int = 360, seed: int = 0,
         bursts[s:s + width] += amp
     qps = np.clip(base + wobble + bursts, 0.02, None)
     return Trace(qps, f"azure_like_s{seed}")
+
+
+def incast_trace(duration_s: int = 120, base_qps: float = 4.0,
+                 burst_qps: float = 64.0, burst_every_s: float = 30.0,
+                 burst_width_s: float = 2.0, jitter_s: float = 0.0,
+                 seed: int = 0) -> Trace:
+    """Synchronized-burst (incast-style) trace: a flat base load with
+    every client firing together every ``burst_every_s`` seconds — the
+    cron-job / cache-expiry / retry-storm shape that defeats smooth
+    demand estimators. ``jitter_s`` optionally de-synchronizes each
+    burst's start by a seeded uniform offset (0 keeps them perfectly
+    aligned, the worst case)."""
+    if duration_s <= 0:
+        raise ValueError(f"duration_s must be > 0, got {duration_s}")
+    if burst_every_s <= 0:
+        raise ValueError(f"burst_every_s must be > 0, got {burst_every_s}")
+    rng = np.random.default_rng(seed)
+    qps = np.full(int(duration_s), float(base_qps))
+    t = float(burst_every_s)
+    while t < duration_s:
+        start = t
+        if jitter_s > 0:
+            start = t + float(rng.uniform(-jitter_s, jitter_s))
+        s0 = min(max(int(start), 0), int(duration_s) - 1)
+        s1 = min(s0 + max(int(math.ceil(burst_width_s)), 1), int(duration_s))
+        qps[s0:s1] += float(burst_qps)
+        t += float(burst_every_s)
+    return Trace(qps, f"incast_b{burst_qps:g}_e{burst_every_s:g}")
 
 
 def load_trace_file(path: str) -> Trace:

@@ -31,3 +31,17 @@ def sim_fingerprint(r) -> dict:
         "threshold_last": round(r.threshold_timeline[-1][1], 9),
         "workers_by_class": dict(r.workers_by_class),
     }
+
+
+def overload_fingerprint(r) -> dict:
+    """The split drop-taxonomy counters (serving/admission.py) plus the
+    conservation terms — pinned by the overload suite so door-shedding,
+    predictive drops, and deadline losses cannot silently reclassify."""
+    return {
+        "total": r.total,
+        "completed": r.completed,
+        "shed_admission": r.shed_admission,
+        "dropped_predictive": r.dropped_predictive,
+        "dropped_deadline": r.dropped_deadline,
+        "violations": r.violations,
+    }
