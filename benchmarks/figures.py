@@ -8,7 +8,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core.confidence import DeferralProfile, synthetic_confidence_scores
-from repro.core.quality import ROUTER_SKILL, QualityModel
+from repro.core.quality import QualityModel
 from repro.serving.baselines import (ABLATIONS, BASELINES, run_ablation,
                                      run_baseline, run_controller)
 from repro.serving.profiles import CASCADES, default_serving

@@ -7,6 +7,14 @@ re-run after any intentional behavior change to refresh it:
 
     PYTHONPATH=src python scripts/capture_golden.py
 
+``--check`` recomputes every fingerprint and diffs it against the
+GOLDEN / OVERLOAD_GOLDEN literals committed in the test files (parsed
+from source with ``ast.literal_eval`` — nothing is imported from the
+tests, nothing is written). Exit 0 = bit-identical, 1 = drift, with a
+per-case per-field report. CI and pre-refresh sanity both use it:
+an *intended* behavior change should show exactly the cases you meant
+to move.
+
 Every case resolves its cascade through the ``CASCADES`` registry, which
 since the autocascade refactor is built by ``CascadeBuilder`` over the
 builtin ``VariantCatalog`` — so these fingerprints *are* the
@@ -18,7 +26,11 @@ bit-for-bit; the capture asserts it).
 """
 from __future__ import annotations
 
+import argparse
+import ast
+import pathlib
 import pprint
+import sys
 
 from repro.config.base import WorkerClass
 from repro.serving.baselines import (run_ablation, run_baseline,
@@ -29,8 +41,15 @@ from repro.serving.trace import azure_like_trace, static_trace
 from repro.testing.golden import overload_fingerprint
 from repro.testing.golden import sim_fingerprint as fingerprint
 
+REPO = pathlib.Path(__file__).resolve().parent.parent
+COMMITTED = (
+    (REPO / "tests" / "test_controlplane.py", "GOLDEN"),
+    (REPO / "tests" / "test_overload.py", "OVERLOAD_GOLDEN"),
+)
 
-def main():
+
+def capture():
+    """(golden, overload_golden) recomputed from the pinned seeds."""
     golden = {}
 
     # homogeneous DiffServe on a bursty trace
@@ -80,8 +99,6 @@ def main():
         "search planner restricted to one cascade diverged from the " \
         "SolverPlanner golden"
 
-    pprint.pprint(golden, width=76, sort_dicts=True)
-
     # split drop taxonomy (tests/test_overload.py:OVERLOAD_GOLDEN): the
     # same pinned seeds with the counters broken out per reason, plus one
     # deliberately overloaded queue-depth run so the shed path is pinned
@@ -99,8 +116,73 @@ def main():
             run_controller("diffserve-guarded", tr.scaled(16.0), sv,
                            seed=0)),
     }
-    print("\nOVERLOAD_GOLDEN = ", end="")
-    pprint.pprint(overload, width=76, sort_dicts=True)
+    return golden, overload
+
+
+def committed_golden(path: pathlib.Path, name: str) -> dict:
+    """The literal dict assigned to ``name`` in the test file's source.
+    Parsed, never imported: reading the goldens must not execute the
+    test module (or anything it imports)."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == name
+                for t in node.targets):
+            return ast.literal_eval(node.value)
+    raise KeyError(f"no module-level literal {name} = ... in {path}")
+
+
+def diff_goldens(committed: dict, fresh: dict, label: str) -> int:
+    """Print per-case per-field drift; return the number of drifted
+    cases. Cases only in the capture (e.g. ``cascade_search_pinned``,
+    asserted but not committed) are skipped; committed cases the
+    capture no longer produces are drift."""
+    drifted = 0
+    for case in sorted(committed):
+        if case not in fresh:
+            print(f"{label}[{case}]: committed but no longer captured")
+            drifted += 1
+            continue
+        want, got = committed[case], fresh[case]
+        if want == got:
+            continue
+        drifted += 1
+        fields = sorted(set(want) | set(got))
+        for k in fields:
+            w, g = want.get(k, "<absent>"), got.get(k, "<absent>")
+            if w != g:
+                print(f"{label}[{case}].{k}: committed {w!r} != "
+                      f"recaptured {g!r}")
+    return drifted
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", action="store_true",
+                    help="recapture and diff against the goldens "
+                    "committed in the test files; write nothing; exit "
+                    "non-zero on drift")
+    args = ap.parse_args(argv)
+
+    golden, overload = capture()
+    if not args.check:
+        pprint.pprint(golden, width=76, sort_dicts=True)
+        print("\nOVERLOAD_GOLDEN = ", end="")
+        pprint.pprint(overload, width=76, sort_dicts=True)
+        return 0
+
+    fresh = {"GOLDEN": golden, "OVERLOAD_GOLDEN": overload}
+    drifted = 0
+    for path, name in COMMITTED:
+        drifted += diff_goldens(committed_golden(path, name),
+                                fresh[name], name)
+    if drifted:
+        print(f"golden drift: {drifted} case(s) differ "
+              "(intentional? re-run without --check and refresh the "
+              "test literals)")
+        return 1
+    print("goldens match: every committed case recaptured bit-identical")
+    return 0
 
 
 def _profiles(sv):
@@ -109,4 +191,4 @@ def _profiles(sv):
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

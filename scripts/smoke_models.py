@@ -1,5 +1,4 @@
 """Dev smoke: tiny forward (train/prefill/decode) for every arch."""
-import sys
 import time
 
 import jax

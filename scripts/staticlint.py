@@ -1,0 +1,14 @@
+"""Thin wrapper: ``python scripts/staticlint.py [paths...]``.
+
+Adds ``src/`` to sys.path so the linter runs from a bare checkout,
+then defers to ``python -m repro.analysis.staticlint``.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.staticlint.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,7 +22,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
 HBM_BW = 819e9               # B/s / chip

@@ -1,0 +1,39 @@
+"""Repo-native invariant linter (see framework.py for the design).
+
+``RULES`` follows the serving-registry idiom — name -> instance — and
+is itself checked by the protocol-conformance rule against the ``Rule``
+protocol: the linter lints itself.
+
+Adding a rule: subclass ``LintRule`` in a sibling module, set ``id``
+and ``description``, override ``check_file`` (per-module) and/or
+``check_project`` (cross-file), register it here, and give it bad/good
+fixtures in tests/test_staticlint.py.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.analysis.staticlint.conservation import ConservationRule
+from repro.analysis.staticlint.determinism import DeterminismRule
+from repro.analysis.staticlint.framework import (Finding, LintRule,
+                                                 Project, Rule, SourceFile,
+                                                 collect_files, render_json,
+                                                 render_text, run_lint)
+from repro.analysis.staticlint.hygiene import ExceptionHygieneRule
+from repro.analysis.staticlint.protocols import ProtocolConformanceRule
+from repro.analysis.staticlint.registries import RegistryThreadingRule
+
+RULES: Dict[str, Rule] = {
+    "determinism": DeterminismRule(),
+    "registry-threading": RegistryThreadingRule(),
+    "protocol-conformance": ProtocolConformanceRule(),
+    "conservation-taxonomy": ConservationRule(),
+    "exception-hygiene": ExceptionHygieneRule(),
+}
+
+__all__ = [
+    "RULES", "Rule", "LintRule", "Finding", "SourceFile", "Project",
+    "run_lint", "collect_files", "render_text", "render_json",
+    "DeterminismRule", "RegistryThreadingRule", "ProtocolConformanceRule",
+    "ConservationRule", "ExceptionHygieneRule",
+]

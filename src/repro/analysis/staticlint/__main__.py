@@ -1,0 +1,57 @@
+"""CLI: ``python -m repro.analysis.staticlint [paths...]``.
+
+Exit status 0 when clean, 1 when any finding survives suppression, 2
+on usage errors (unknown ``--select`` id). ``--json`` prints the
+machine-readable report to stdout; ``--json-out FILE`` writes it as a
+CI artifact alongside the human-readable text.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List, Optional
+
+from repro.analysis.staticlint import RULES, run_lint
+from repro.analysis.staticlint.framework import (collect_files,
+                                                 render_json, render_text)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.staticlint",
+        description="AST-level invariant linter for the serving stack")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--select", action="append", default=None,
+                    metavar="RULE",
+                    help="run only this rule id (repeatable)")
+    ap.add_argument("--json", action="store_true",
+                    help="print the JSON report instead of text")
+    ap.add_argument("--json-out", metavar="FILE", default=None,
+                    help="also write the JSON report to FILE")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print rule ids + descriptions and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            print(f"{rid}: {RULES[rid].description}")
+        return 0
+
+    try:
+        findings = run_lint(args.paths, select=args.select)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    checked = len(collect_files(args.paths)[0])
+    active = args.select if args.select else sorted(RULES)
+    report = render_json(findings, checked, active)
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(report + "\n")
+    print(report if args.json else render_text(findings, checked))
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

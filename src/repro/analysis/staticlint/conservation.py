@@ -1,0 +1,105 @@
+"""Conservation-taxonomy rule: every drop lands in the split taxonomy.
+
+The overload battery asserts ``total == completed + shed_admission +
+dropped_predictive + dropped_deadline`` after every run — but only for
+the counters it knows about. The failure mode this rule closes: a new
+drop site increments a *new* counter (``self.result.dropped_oom += 1``)
+that the identity has never heard of, and conservation silently holds
+while queries leak out of the accounting. Checked cross-file:
+
+  * the identity itself is declared once, as a module-level
+    ``CONSERVATION_FIELDS`` tuple of field names (the single source of
+    truth; ``serving/simulator.py`` owns it) — missing entirely is a
+    finding on every ``SimResult``/``Telemetry`` class found;
+  * any ``+=`` onto an attribute that *names* a drop/shed/completion
+    counter (``completed``, ``dropped*``, ``shed*``) inside ``serving/``
+    must use a field in the identity;
+  * any ``SimResult``/``Telemetry`` dataclass field matching that
+    naming pattern must be in the identity — declaring the counter is
+    not enough, it has to be conserved.
+
+Renaming a counter out of the pattern to dodge the rule shows up in
+review; adding it to ``CONSERVATION_FIELDS`` without extending the
+identity check in tests fails the overload battery. The two checks
+bracket the invariant.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Optional, Tuple
+
+from repro.analysis.staticlint.framework import (Finding, LintRule, Project,
+                                                 const_str_seq)
+
+# counter-ish attribute names that must be part of the identity
+_COUNTER_RE = re.compile(r"^(completed|dropped(_\w+)?|shed(_\w+)?)$")
+
+
+class ConservationRule(LintRule):
+    """Drop/shed/completed counters must be in CONSERVATION_FIELDS."""
+
+    id = "conservation-taxonomy"
+    description = ("every incremented drop/shed/completed counter and "
+                   "every such SimResult/Telemetry field is named in "
+                   "CONSERVATION_FIELDS (the conservation identity)")
+    identity_name = "CONSERVATION_FIELDS"
+    counter_classes: Tuple[str, ...] = ("SimResult", "Telemetry")
+    scope_dirs: Tuple[str, ...] = ("serving",)
+
+    def _identity(self, project: Project) -> Optional[List[str]]:
+        hit = project.assignments.get(self.identity_name)
+        if hit is None:
+            return None
+        return const_str_seq(hit[1])
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        out: List[Finding] = []
+        fields = self._identity(project)
+        counter_defs = [(f, c) for name in self.counter_classes
+                        for f, c in [project.classes.get(name, (None, None))]
+                        if c is not None]
+        if fields is None:
+            # no identity declared: only a problem if the project has
+            # the counter classes at all (fixture trees without a
+            # simulator stay quiet)
+            for f, cls in counter_defs:
+                out.append(self.at(
+                    f, cls,
+                    f"{cls.name} declares drop counters but no "
+                    f"module-level {self.identity_name} tuple declares "
+                    "the conservation identity"))
+            return out
+        identity = set(fields)
+        # 1) every counter-named field on the counter classes is conserved
+        for f, cls in counter_defs:
+            for node in cls.body:
+                if isinstance(node, ast.AnnAssign) and \
+                        isinstance(node.target, ast.Name) and \
+                        _COUNTER_RE.match(node.target.id) and \
+                        node.target.id not in identity:
+                    out.append(self.at(
+                        f, node,
+                        f"{cls.name}.{node.target.id} looks like a "
+                        "drop/shed/completed counter but is not in "
+                        f"{self.identity_name}; add it to the identity "
+                        "(and the overload battery) or rename it"))
+        # 2) every counter-named increment in serving/ is conserved
+        for f in project.files:
+            if not any(f.in_dir(d) for d in self.scope_dirs):
+                continue
+            for node in ast.walk(f.tree):
+                if not (isinstance(node, ast.AugAssign)
+                        and isinstance(node.op, ast.Add)
+                        and isinstance(node.target, ast.Attribute)):
+                    continue
+                attr = node.target.attr
+                if _COUNTER_RE.match(attr) and attr not in identity:
+                    out.append(self.at(
+                        f, node,
+                        f"increment of `{attr}` is outside the "
+                        "conservation identity "
+                        f"{self.identity_name}={sorted(identity)}; "
+                        "queries counted here would leak out of "
+                        "`total == completed + drops`"))
+        return out

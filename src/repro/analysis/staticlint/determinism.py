@@ -1,0 +1,116 @@
+"""Determinism rule: no wall-clock or unseeded RNG in golden-pinned code.
+
+The control-plane golden suite (tests/test_controlplane.py), the
+overload split-counter pins, and ``scripts/capture_golden.py`` all rely
+on seeded runs being *bit*-deterministic. One ``time.time()`` in a
+control path or one module-level ``np.random.rand()`` silently breaks
+that precondition — the goldens start flaking instead of failing the
+offending diff. This rule bans, inside ``serving/``, ``core/``, and
+``testing/golden.py``:
+
+  * ``time.time()`` / ``time.time_ns()`` — wall clock; simulations run
+    on virtual time. (``time.perf_counter`` stays allowed: solver
+    wall-time goes into ``solve_ms``, which the golden fingerprints
+    deliberately exclude.)
+  * ``datetime.now()`` / ``utcnow()`` / ``today()``
+  * stdlib ``random`` module calls — process-global, unseeded
+  * ``np.random.<fn>()`` module-level RNG (``rand``, ``seed``, ...) —
+    the legacy global stream. ``np.random.default_rng(seed)`` and the
+    ``Generator``/``SeedSequence`` constructors are the sanctioned,
+    seed-threaded API and stay allowed.
+
+RNG is always threaded explicitly: a seeded ``np.random.Generator``
+passed down from the entry point (``SimConfig.seed``).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis.staticlint.framework import (Finding, LintRule,
+                                                 SourceFile, dotted)
+
+# np.random attributes that are *not* the legacy global stream
+_NP_RANDOM_ALLOWED = {"default_rng", "Generator", "SeedSequence",
+                      "BitGenerator", "PCG64", "PCG64DXSM", "Philox",
+                      "MT19937", "SFC64"}
+_TIME_BANNED = {"time", "time_ns"}
+_DATETIME_BANNED = {"now", "utcnow", "today"}
+
+
+def _import_roots(tree: ast.Module) -> Dict[str, str]:
+    """Local alias -> canonical module for the imports this rule cares
+    about (``time``, ``datetime``, ``random``, ``numpy``)."""
+    roots: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                top = alias.name.split(".")[0]
+                if top in ("time", "datetime", "random", "numpy"):
+                    roots[alias.asname or top] = alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            top = node.module.split(".")[0]
+            if top not in ("time", "datetime", "random", "numpy"):
+                continue
+            for alias in node.names:
+                roots[alias.asname or alias.name] = \
+                    f"{node.module}.{alias.name}"
+    return roots
+
+
+class DeterminismRule(LintRule):
+    """Golden-suite precondition: virtual time + seeded Generators only."""
+
+    id = "determinism"
+    description = ("no time.time()/datetime.now()/stdlib random/"
+                   "np.random global RNG in serving/, core/, "
+                   "testing/golden.py")
+    # (directory segment, exact filename) scope — either match lints
+    scope_dirs: Tuple[str, ...] = ("serving", "core")
+    scope_files: Tuple[str, ...] = ("golden.py",)
+
+    def _in_scope(self, f: SourceFile) -> bool:
+        return any(f.in_dir(d) for d in self.scope_dirs) \
+            or f.name in self.scope_files
+
+    def check_file(self, f: SourceFile) -> Iterable[Finding]:
+        if not self._in_scope(f):
+            return ()
+        roots = _import_roots(f.tree)
+        out: List[Finding] = []
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = dotted(node.func)
+            if path is None:
+                continue
+            bits = path.split(".")
+            canon = roots.get(bits[0])
+            if canon is None:
+                continue
+            full = ".".join([canon] + bits[1:])
+            out.extend(self._check_call(f, node, full))
+        return out
+
+    def _check_call(self, f: SourceFile, node: ast.Call,
+                    full: str) -> Iterable[Finding]:
+        bits = full.split(".")
+        if bits[0] == "time" and len(bits) == 2 \
+                and bits[1] in _TIME_BANNED:
+            yield self.at(f, node, f"wall-clock `{'.'.join(bits)}()` in "
+                          "golden-pinned code: simulations run on "
+                          "virtual time (time.perf_counter is allowed "
+                          "for solve_ms, which fingerprints exclude)")
+        elif bits[0] == "datetime" and bits[-1] in _DATETIME_BANNED:
+            yield self.at(f, node, f"`{'.'.join(bits)}()` reads the wall "
+                          "clock; golden fingerprints require seeded "
+                          "determinism")
+        elif bits[0] == "random" and len(bits) >= 2:
+            yield self.at(f, node, f"stdlib `{'.'.join(bits)}()` uses the "
+                          "process-global unseeded stream; thread a "
+                          "seeded np.random.default_rng(seed) instead")
+        elif bits[:2] == ["numpy", "random"] and len(bits) >= 3 \
+                and bits[2] not in _NP_RANDOM_ALLOWED:
+            yield self.at(f, node, f"module-level `np.random.{bits[2]}()` "
+                          "draws from the unseeded global stream; use a "
+                          "seeded np.random.default_rng(seed) Generator")

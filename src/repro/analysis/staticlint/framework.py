@@ -1,0 +1,288 @@
+"""The invariant-linter framework: files, findings, suppressions, runner.
+
+The serving stack lives or dies by invariants no general-purpose tool
+enforces — seeded bit-determinism for the golden fingerprints, registry
+→ ``ServingConfig`` → CLI threading, protocol conformance of registered
+policies, and the drop-taxonomy conservation identity. This package
+checks them at AST level (stdlib ``ast``, nothing imported from the
+linted code) so violations fail CI instead of surfacing as the next
+PR's hand-found lifecycle bug.
+
+Structure mirrors the serving registries: a ``Rule`` protocol, concrete
+rules in sibling modules, and a ``RULES`` registry assembled in
+``__init__.py`` (which the protocol-conformance rule checks like any
+other registry — the linter lints itself). Rules come in two passes:
+
+  * per-file   — ``check_file(SourceFile)``: determinism, exception
+                 hygiene; sees one parsed module at a time
+  * cross-file — ``check_project(Project)``: registry threading,
+                 protocol conformance, conservation; sees the whole
+                 parsed tree with class/function/assignment indexes
+
+Suppressions are line comments in the linted source::
+
+    something_flagged()   # staticlint: ignore[rule-id]
+    # staticlint: ignore-file[rule-id]      (anywhere: whole file)
+
+``ignore[a, b]`` takes a comma-separated rule-id list; ``ignore[*]``
+silences every rule on that line. A suppression should carry a short
+justification comment — the linter cannot enforce that, reviewers can.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Protocol, Sequence, Tuple
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*staticlint:\s*(ignore|ignore-file)\[([^\]]*)\]")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One violation: rule id + ``file:line`` anchor + message."""
+    rule: str
+    path: str                     # as given on the command line (relative)
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def as_json(self) -> Dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+    @property
+    def sort_key(self) -> Tuple[str, int, str]:
+        return (self.path, self.line, self.rule)
+
+
+class SourceFile:
+    """One parsed module: source, AST, and its suppression table."""
+
+    def __init__(self, path: pathlib.Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.tree = ast.parse(source, filename=rel)
+        # line -> set of suppressed rule ids ("*" = all); 0 = whole file
+        self.suppressions: Dict[int, set] = {}
+        for lineno, line in enumerate(source.splitlines(), start=1):
+            m = _SUPPRESS_RE.search(line)
+            if not m:
+                continue
+            ids = {s.strip() for s in m.group(2).split(",") if s.strip()}
+            key = 0 if m.group(1) == "ignore-file" else lineno
+            self.suppressions.setdefault(key, set()).update(ids)
+
+    @property
+    def parts(self) -> Tuple[str, ...]:
+        """Path segments of the relative path (scope matching)."""
+        return tuple(pathlib.PurePosixPath(self.rel.replace("\\", "/")).parts)
+
+    def in_dir(self, name: str) -> bool:
+        return name in self.parts[:-1]
+
+    @property
+    def name(self) -> str:
+        return self.parts[-1]
+
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        for ids in (self.suppressions.get(0, ()),
+                    self.suppressions.get(line, ())):
+            if "*" in ids or rule_id in ids:
+                return True
+        return False
+
+
+class Project:
+    """The cross-file view: every ``SourceFile`` plus name indexes.
+
+    ``classes``/``functions`` index *module-level* definitions by bare
+    name (first definition wins; the linted codebase keeps these names
+    unique). ``assignments`` maps module-level ``NAME = <expr>`` value
+    expressions, used to locate registries and identity tuples.
+    """
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.files = list(files)
+        self.classes: Dict[str, Tuple[SourceFile, ast.ClassDef]] = {}
+        self.functions: Dict[str, Tuple[SourceFile, ast.FunctionDef]] = {}
+        self.assignments: Dict[str, Tuple[SourceFile, ast.AST]] = {}
+        for f in self.files:
+            for node in f.tree.body:
+                if isinstance(node, ast.ClassDef):
+                    self.classes.setdefault(node.name, (f, node))
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    self.functions.setdefault(node.name, (f, node))
+                elif isinstance(node, ast.Assign):
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            self.assignments.setdefault(
+                                tgt.id, (f, node.value))
+                elif isinstance(node, ast.AnnAssign) and node.value is not None \
+                        and isinstance(node.target, ast.Name):
+                    self.assignments.setdefault(
+                        node.target.id, (f, node.value))
+
+    def file_of(self, node_file: SourceFile) -> SourceFile:
+        return node_file
+
+
+class Rule(Protocol):
+    """What the ``RULES`` registry requires of an entry. Every rule
+    defines both passes (a base class supplies the empty one); the
+    protocol-conformance rule holds this registry to that — the same
+    check it applies to the serving registries."""
+
+    id: str
+    description: str
+
+    def check_file(self, f: SourceFile) -> Iterable[Finding]: ...
+
+    def check_project(self, project: Project) -> Iterable[Finding]: ...
+
+
+class LintRule:
+    """Base class: a rule overrides one pass, inherits the other."""
+
+    id = "abstract"
+    description = ""
+
+    def check_file(self, f: SourceFile) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        return ()
+
+    # shared helper: a finding anchored at an AST node
+    def at(self, f: SourceFile, node: ast.AST, message: str) -> Finding:
+        return Finding(rule=self.id, path=f.rel,
+                       line=getattr(node, "lineno", 1), message=message)
+
+
+# ---------------------------------------------------------------------------
+# Collection + runner
+# ---------------------------------------------------------------------------
+def collect_files(paths: Sequence[str]
+                  ) -> Tuple[List[SourceFile], List[Finding]]:
+    """``.py`` files under the given files/directories, sorted, parsed.
+    A file that fails to parse is reported by the runner as a finding
+    (rule id ``parse-error``) rather than crashing the lint."""
+    seen = []
+    for raw in paths:
+        p = pathlib.Path(raw)
+        if p.is_dir():
+            seen.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            seen.append(p)
+    out, errors = [], []
+    for p in seen:
+        rel = str(p)
+        try:
+            out.append(SourceFile(p, rel, p.read_text()))
+        except SyntaxError as e:
+            errors.append(Finding(rule="parse-error", path=rel,
+                                  line=e.lineno or 1, message=str(e.msg)))
+    return out, errors
+
+
+def run_lint(paths: Sequence[str],
+             rules: "Optional[Dict[str, Rule]] | None" = None,
+             select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint ``paths`` with ``rules`` (default: the package ``RULES``
+    registry), returning suppression-filtered, sorted findings."""
+    if rules is None:
+        from repro.analysis.staticlint import RULES
+        rules = RULES
+    if select:
+        unknown = sorted(set(select) - set(rules))
+        if unknown:
+            raise KeyError(f"unknown rule ids {unknown}; "
+                           f"known {sorted(rules)}")
+        rules = {k: v for k, v in rules.items() if k in select}
+    files, findings = collect_files(paths)
+    project = Project(files)
+    by_rel = {f.rel: f for f in files}
+    for rule in rules.values():
+        for f in files:
+            findings.extend(rule.check_file(f))
+        findings.extend(rule.check_project(project))
+    kept = []
+    for fd in findings:
+        src = by_rel.get(fd.path)
+        if src is not None and src.suppressed(fd.rule, fd.line):
+            continue
+        kept.append(fd)
+    return sorted(set(kept), key=lambda fd: fd.sort_key)
+
+
+def render_text(findings: Sequence[Finding], checked: int) -> str:
+    lines = [fd.render() for fd in findings]
+    lines.append(f"{len(findings)} finding(s) across {checked} file(s)")
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding], checked: int,
+                rules: Sequence[str]) -> str:
+    return json.dumps({
+        "findings": [fd.as_json() for fd in findings],
+        "count": len(findings),
+        "checked_files": checked,
+        "rules": sorted(rules),
+    }, indent=1)
+
+
+# ---------------------------------------------------------------------------
+# Small AST helpers shared by rules
+# ---------------------------------------------------------------------------
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def str_keys(d: ast.Dict) -> Dict[str, ast.AST]:
+    """Constant-string dict keys -> value expressions (non-string keys
+    are skipped)."""
+    out = {}
+    for k, v in zip(d.keys, d.values):
+        if isinstance(k, ast.Constant) and isinstance(k.value, str):
+            out[k.value] = v
+    return out
+
+
+def const_str_seq(node: ast.AST) -> Optional[List[str]]:
+    """The string items of a literal tuple/list, else None."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    out = []
+    for el in node.elts:
+        if not (isinstance(el, ast.Constant) and isinstance(el.value, str)):
+            return None
+        out.append(el.value)
+    return out
+
+
+def arg_spec(fn: "ast.FunctionDef | ast.Lambda",
+             drop_self: bool = True) -> Tuple[int, Optional[int]]:
+    """(required positional count, max positional or None for *args),
+    excluding ``self``/``cls`` when ``drop_self``."""
+    a = fn.args
+    pos = list(a.posonlyargs) + list(a.args)
+    if drop_self and pos and pos[0].arg in ("self", "cls"):
+        pos = pos[1:]
+    required = len(pos) - len(a.defaults)
+    maximum = None if a.vararg is not None else len(pos)
+    return max(required, 0), maximum

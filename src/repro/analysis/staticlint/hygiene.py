@@ -1,0 +1,72 @@
+"""Exception-hygiene rule: no silently swallowed exceptions in the
+serving stack.
+
+PR 3's lifecycle sweep found nine conservation/requeue bugs that a
+swallowed exception would have hidden entirely: a dropped query that
+never lands in a drop counter is exactly the failure mode the
+conservation identity exists to catch. Inside ``serving/`` and
+``core/`` this rule flags:
+
+  * ``except:`` — bare handlers (also swallow KeyboardInterrupt)
+  * ``except Exception:`` / ``except BaseException:`` (alone or inside
+    a tuple) whose handler never re-raises — a blanket swallow
+
+A broad handler that *re-raises* (any ``raise`` in its body) is fine —
+wrap-and-rethrow is legitimate. Narrow handlers (``except KeyError:``)
+are untouched: catching what you expect is the idiom; catching
+everything is the bug.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Tuple
+
+from repro.analysis.staticlint.framework import (Finding, LintRule,
+                                                 SourceFile)
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _broad_names(type_node: ast.AST) -> List[str]:
+    """Broad exception names caught by an ``except <type>`` clause."""
+    nodes = type_node.elts if isinstance(type_node, ast.Tuple) \
+        else [type_node]
+    out = []
+    for n in nodes:
+        if isinstance(n, ast.Name) and n.id in _BROAD:
+            out.append(n.id)
+    return out
+
+
+def _reraises(handler: ast.ExceptHandler) -> bool:
+    return any(isinstance(n, ast.Raise) for n in ast.walk(handler))
+
+
+class ExceptionHygieneRule(LintRule):
+    """No bare/blanket swallowed exceptions in serving/ and core/."""
+
+    id = "exception-hygiene"
+    description = ("no bare `except:` or swallowed `except Exception:` "
+                   "in serving/ and core/")
+    scope_dirs: Tuple[str, ...] = ("serving", "core")
+
+    def check_file(self, f: SourceFile) -> Iterable[Finding]:
+        if not any(f.in_dir(d) for d in self.scope_dirs):
+            return ()
+        out: List[Finding] = []
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if node.type is None:
+                out.append(self.at(f, node, "bare `except:` swallows "
+                                   "everything incl. KeyboardInterrupt; "
+                                   "catch the exception you expect"))
+                continue
+            broad = _broad_names(node.type)
+            if broad and not _reraises(node):
+                out.append(self.at(
+                    f, node,
+                    f"`except {broad[0]}:` without a re-raise swallows "
+                    "failures the conservation accounting needs to see; "
+                    "narrow the type or re-raise"))
+        return out

@@ -1,0 +1,203 @@
+"""Protocol-conformance rule: registered policies honor their protocol.
+
+The registries are duck-typed on purpose — ``make_*`` resolvers call
+``factory(serving, trace)`` and trust the returned object to quack like
+the protocol next to the registry (``AdmissionPolicy``,
+``ScalingPolicy``, ``Forecaster``, ``DemandEstimator`` — and the
+linter's own ``Rule``). Python only discovers a missing ``degrade`` or
+a renamed ``on_tick`` when that exact policy is selected under the
+exact tick path that calls it, which for rarely-used registry entries
+can be never-in-CI. This rule resolves, statically:
+
+  * the implementation classes constructed by each registry value
+    (lambdas, helper factories, nested closures — followed through
+    module-level functions);
+  * each protocol method: present on the class or an AST-visible base,
+    with an arity that accepts every call shape the protocol permits
+    (required..max positional, ``self`` excluded);
+  * each protocol attribute (bare ``name: str`` annotations): bound at
+    class level or assigned to ``self`` in a method.
+
+Dunder methods and private helpers on implementations are of no
+interest — only the protocol surface is checked.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.staticlint.framework import (Finding, LintRule, Project,
+                                                 arg_spec, dotted, str_keys)
+
+# registry name -> protocol class its values must implement
+REGISTRY_PROTOCOLS: Dict[str, str] = {
+    "ADMISSIONS": "AdmissionPolicy",
+    "SCALERS": "ScalingPolicy",
+    "FORECASTERS": "Forecaster",
+    "ESTIMATORS": "DemandEstimator",
+    # the linter holds its own registry to the same standard
+    "RULES": "Rule",
+}
+
+
+def _protocol_surface(cls: ast.ClassDef
+                      ) -> Tuple[Dict[str, Tuple[int, Optional[int]]],
+                                 List[str]]:
+    """(methods: name -> (required, max positional), attrs) declared by
+    a Protocol class body."""
+    methods: Dict[str, Tuple[int, Optional[int]]] = {}
+    attrs: List[str] = []
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                methods[node.name] = arg_spec(node)
+        elif isinstance(node, ast.AnnAssign) and node.value is None \
+                and isinstance(node.target, ast.Name):
+            attrs.append(node.target.id)
+    return methods, attrs
+
+
+def _impl_classes(value: ast.AST, project: Project,
+                  depth: int = 0) -> Set[str]:
+    """Class names constructed anywhere inside a registry value
+    expression, following module-level helper functions it references
+    (``_classic("null")`` returning a closure over ``NullScaling``)."""
+    if depth > 3:
+        return set()
+    out: Set[str] = set()
+    helpers: Set[str] = set()
+    for node in ast.walk(value):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+            if node.func.id in project.classes:
+                out.add(node.func.id)
+        if isinstance(node, ast.Name):
+            if node.id in project.functions:
+                helpers.add(node.id)
+    for name in helpers:
+        _, fn = project.functions[name]
+        out |= _impl_classes(fn, project, depth + 1)
+    return out
+
+
+def _mro(name: str, project: Project,
+         seen: Optional[Set[str]] = None) -> List[ast.ClassDef]:
+    """AST-visible method-resolution chain: the class then its bases,
+    depth-first, by bare name (``ReactiveScaling -> PredictiveScaling``)."""
+    seen = seen if seen is not None else set()
+    if name in seen or name not in project.classes:
+        return []
+    seen.add(name)
+    _, cls = project.classes[name]
+    chain = [cls]
+    for base in cls.bases:
+        base_name = dotted(base)
+        if base_name:
+            chain.extend(_mro(base_name.split(".")[-1], project, seen))
+    return chain
+
+
+def _find_method(chain: Sequence[ast.ClassDef],
+                 name: str) -> Optional[ast.FunctionDef]:
+    for cls in chain:
+        for node in cls.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name == name:
+                return node
+    return None
+
+
+def _binds_attr(chain: Sequence[ast.ClassDef], attr: str) -> bool:
+    """Class-level assignment or a ``self.<attr> = ...`` anywhere in
+    the chain's method bodies."""
+    for cls in chain:
+        for node in cls.body:
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == attr
+                    for t in node.targets):
+                return True
+            if isinstance(node, ast.AnnAssign) and node.value is not None \
+                    and isinstance(node.target, ast.Name) \
+                    and node.target.id == attr:
+                return True
+        for node in ast.walk(cls):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Attribute) and t.attr == attr \
+                            and isinstance(t.value, ast.Name) \
+                            and t.value.id == "self":
+                        return True
+    return False
+
+
+def _arity_ok(proto: Tuple[int, Optional[int]],
+              impl: Tuple[int, Optional[int]]) -> bool:
+    """The implementation accepts every positional call shape the
+    protocol permits: from ``proto.required`` up to ``proto.max``."""
+    p_req, p_max = proto
+    i_req, i_max = impl
+    if i_req > p_req:
+        return False
+    if p_max is None:          # protocol takes *args: impl must too
+        return i_max is None
+    return i_max is None or i_max >= p_max
+
+
+class ProtocolConformanceRule(LintRule):
+    """Every class a registry constructs implements the registry's
+    protocol: all methods present, arity-compatible, attrs bound."""
+
+    id = "protocol-conformance"
+    description = ("classes behind ADMISSIONS/SCALERS/FORECASTERS/"
+                   "ESTIMATORS/RULES define every protocol method with "
+                   "compatible arity and bind every protocol attribute")
+
+    def __init__(self, mapping: Dict[str, str] = REGISTRY_PROTOCOLS):
+        self.mapping = mapping
+
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for registry, proto_name in self.mapping.items():
+            reg_hit = project.assignments.get(registry)
+            proto_hit = project.classes.get(proto_name)
+            if reg_hit is None or proto_hit is None \
+                    or not isinstance(reg_hit[1], ast.Dict):
+                continue
+            _, reg_dict = reg_hit
+            methods, attrs = _protocol_surface(proto_hit[1])
+            impls: Set[str] = set()
+            for value in str_keys(reg_dict).values():
+                impls |= _impl_classes(value, project)
+            for impl in sorted(impls):
+                out.extend(self._check_impl(project, registry,
+                                            proto_name, impl,
+                                            methods, attrs))
+        return out
+
+    def _check_impl(self, project: Project, registry: str,
+                    proto_name: str, impl: str,
+                    methods: Dict[str, Tuple[int, Optional[int]]],
+                    attrs: Sequence[str]) -> Iterable[Finding]:
+        f, cls = project.classes[impl]
+        chain = _mro(impl, project)
+        for name, spec in methods.items():
+            fn = _find_method(chain, name)
+            if fn is None:
+                yield self.at(f, cls,
+                              f"{impl} is registered in {registry} but "
+                              f"does not define {proto_name}.{name}()")
+                continue
+            if not _arity_ok(spec, arg_spec(fn)):
+                req, mx = spec
+                shape = f"{req}..{'*' if mx is None else mx}"
+                yield self.at(f, fn,
+                              f"{impl}.{name}() arity is incompatible "
+                              f"with {proto_name}.{name} (protocol "
+                              f"callers pass {shape} positional args)")
+        for attr in attrs:
+            if not _binds_attr(chain, attr):
+                yield self.at(f, cls,
+                              f"{impl} never binds `{attr}`, required "
+                              f"by the {proto_name} protocol "
+                              f"({registry} registry)")

@@ -1,0 +1,380 @@
+"""Registry→config→CLI threading rule.
+
+Every policy surface in the serving stack follows one idiom: a
+module-level registry dict (``ADMISSIONS``, ``SCALERS``, ...), a
+``ServingConfig`` field naming the active policy, and a
+``launch/serve.py`` flag exposing it. The idiom drifts in four ways,
+each checked cross-file here:
+
+  * **default-not-registered** — the ``ServingConfig`` field's default
+    string is not a registry key (config constructs, first resolve
+    crashes);
+  * **registered-but-unreachable** — a registry key missing from a
+    literal ``choices=[...]`` list, or a registry with no CLI flag at
+    all (a policy nobody can select); ``choices=sorted(REGISTRY)`` is
+    the drift-proof spelling and always passes;
+  * **flag-without-policy** — a literal choice with no registered
+    policy behind it (the CLI advertises what resolve will reject);
+  * **knob-not-threaded** — a registry *factory* reads
+    ``serving.<field>`` where the field doesn't exist on
+    ``ServingConfig``, or exists but is never passed through the CLI
+    file's ``default_serving(...)``/``ServingConfig(...)`` call — the
+    knob is real but unreachable from the command line. (Deliberately
+    code-only knobs are suppressed at the read site with a
+    justification.)
+
+Cross-registry string literals are held to the same standard: a
+``ControllerBundle(scaler="x")`` / ``admission=`` / ``estimator=``
+keyword must name a registered policy, and the ``BASELINES`` /
+``ABLATIONS`` tuples must be subsets of ``CONTROLLERS``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.staticlint.framework import (Finding, LintRule,
+                                                 Project, SourceFile,
+                                                 const_str_seq, dotted,
+                                                 str_keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class Binding:
+    """One registry's threading contract: the ServingConfig field that
+    names the active policy and the CLI flag that exposes it."""
+    registry: str
+    field: str
+    flag: str
+
+
+DEFAULT_BINDINGS: Tuple[Binding, ...] = (
+    Binding("ADMISSIONS", "admission", "--admission"),
+    Binding("SCALERS", "scaler", "--scaler"),
+    Binding("FORECASTERS", "forecaster", "--forecaster"),
+    Binding("ESTIMATORS", "estimator", "--estimator"),
+    Binding("CONTROLLERS", "controller", "--controller"),
+)
+
+# keywords on registry-entry constructor calls (ControllerBundle) that
+# name a policy in *another* registry
+CROSS_KEYWORDS: Dict[str, str] = {
+    "scaler": "SCALERS", "admission": "ADMISSIONS",
+    "estimator": "ESTIMATORS", "forecaster": "FORECASTERS",
+}
+
+# literal name tuples that must be subsets of a registry
+SUBSET_TUPLES: Dict[str, str] = {
+    "BASELINES": "CONTROLLERS", "ABLATIONS": "CONTROLLERS",
+}
+
+CONFIG_CLASS = "ServingConfig"
+CONFIG_BUILDERS = ("default_serving", "ServingConfig")
+
+
+def _add_argument_calls(f: SourceFile) -> List[ast.Call]:
+    return [n for n in ast.walk(f.tree)
+            if isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Attribute)
+            and n.func.attr == "add_argument"
+            and n.args
+            and isinstance(n.args[0], ast.Constant)
+            and isinstance(n.args[0].value, str)]
+
+
+CONFIG_PARAM = "serving"
+
+
+def _config_param(fn: "ast.FunctionDef | ast.Lambda") -> Optional[str]:
+    """The parameter that receives the ServingConfig: the one literally
+    named ``serving`` (the repo-wide factory convention), else a
+    lambda's first parameter (registry lambdas are always
+    ``lambda serving, ...``, whatever they call it)."""
+    names = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    if CONFIG_PARAM in names:
+        return CONFIG_PARAM
+    if isinstance(fn, ast.Lambda) and names:
+        return names[0]
+    return None
+
+
+def _reads_in(body: ast.AST, param: str) -> List[Tuple[str, ast.AST]]:
+    out: List[Tuple[str, ast.AST]] = []
+    for node in ast.walk(body):
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and \
+                node.value.id == param:
+            out.append((node.attr, node))
+        elif isinstance(node, ast.Call) and \
+                dotted(node.func) == "getattr" and \
+                len(node.args) >= 2 and \
+                isinstance(node.args[0], ast.Name) and \
+                node.args[0].id == param and \
+                isinstance(node.args[1], ast.Constant):
+            out.append((node.args[1].value, node))
+    return out
+
+
+def _serving_reads(value: ast.AST, project: Project
+                   ) -> List[Tuple[str, Optional[SourceFile], ast.AST]]:
+    """``serving.<attr>`` / ``getattr(serving, "<attr>")`` reads on the
+    *factory surface* of a registry value: the value expression itself
+    (a lambda), a bare ``Name`` referencing a module-level factory, or
+    a factory-maker call (``_classic("null")`` — the called function's
+    body, nested closure included). Helpers called *inside* factory
+    bodies are plan-/run-time config consumers, not selection-time
+    knobs, and are deliberately out of scope."""
+    candidates: List[Tuple[Optional[SourceFile], ast.AST]] = []
+    if isinstance(value, ast.Lambda):
+        candidates.append((None, value))
+    ref = None
+    if isinstance(value, ast.Name):
+        ref = value.id
+    elif isinstance(value, ast.Call) and isinstance(value.func, ast.Name):
+        ref = value.func.id
+    if ref is not None and ref in project.functions:
+        candidates.append(project.functions[ref])
+    out: List[Tuple[str, Optional[SourceFile], ast.AST]] = []
+    for helper_file, fn in candidates:
+        if not isinstance(fn, (ast.Lambda, ast.FunctionDef,
+                               ast.AsyncFunctionDef)):
+            continue
+        param = _config_param(fn)
+        if param is None:
+            continue
+        for attr, anchor in _reads_in(fn, param):
+            out.append((attr, helper_file, anchor))
+        # a factory-maker's nested closures take their own `serving`
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Lambda, ast.FunctionDef)) \
+                    and node is not fn:
+                inner = _config_param(node)
+                if inner == CONFIG_PARAM and inner != param:
+                    for attr, anchor in _reads_in(node, inner):
+                        out.append((attr, helper_file, anchor))
+    return out
+
+
+class RegistryThreadingRule(LintRule):
+    """Registry keys ↔ ServingConfig defaults ↔ CLI flags, plus
+    factory-consumed knob threading and cross-registry literals."""
+
+    id = "registry-threading"
+    description = ("every registry key is reachable from a ServingConfig "
+                   "field and a CLI flag, and vice versa; factory-read "
+                   "config knobs are CLI-threaded")
+
+    def __init__(self, bindings: Tuple[Binding, ...] = DEFAULT_BINDINGS):
+        self.bindings = bindings
+
+    # ---- collection ----
+    def _registries(self, project: Project
+                    ) -> Dict[str, Tuple[SourceFile, ast.Dict]]:
+        out = {}
+        for b in self.bindings:
+            hit = project.assignments.get(b.registry)
+            if hit is not None and isinstance(hit[1], ast.Dict):
+                out[b.registry] = hit
+        return out
+
+    def _config_fields(self, project: Project
+                       ) -> Dict[str, Tuple[SourceFile, ast.AnnAssign]]:
+        hit = project.classes.get(CONFIG_CLASS)
+        if hit is None:
+            return {}
+        f, cls = hit
+        return {n.target.id: (f, n) for n in cls.body
+                if isinstance(n, ast.AnnAssign)
+                and isinstance(n.target, ast.Name)}
+
+    def _config_members(self, project: Project) -> Set[str]:
+        """Every name on the config class — fields, plain assigns,
+        methods/properties. A factory may *read* any of these; only
+        data fields are held to the CLI-threading requirement."""
+        hit = project.classes.get(CONFIG_CLASS)
+        if hit is None:
+            return set()
+        out: Set[str] = set()
+        for n in hit[1].body:
+            if isinstance(n, ast.AnnAssign) and \
+                    isinstance(n.target, ast.Name):
+                out.add(n.target.id)
+            elif isinstance(n, ast.Assign):
+                out.update(t.id for t in n.targets
+                           if isinstance(t, ast.Name))
+            elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.add(n.name)
+        return out
+
+    # ---- checks ----
+    def check_project(self, project: Project) -> Iterable[Finding]:
+        out: List[Finding] = []
+        registries = self._registries(project)
+        fields = self._config_fields(project)
+        members = self._config_members(project)
+        flags: Dict[str, Tuple[SourceFile, ast.Call]] = {}
+        cli_files: List[SourceFile] = []
+        wanted = {b.flag for b in self.bindings}
+        for f in project.files:
+            calls = _add_argument_calls(f)
+            if any(c.args[0].value in wanted for c in calls):
+                cli_files.append(f)
+            for c in calls:
+                flags.setdefault(c.args[0].value, (f, c))
+        threaded = self._threaded_keywords(cli_files)
+
+        for b in self.bindings:
+            if b.registry not in registries:
+                continue
+            reg_file, reg_dict = registries[b.registry]
+            keys = set(str_keys(reg_dict))
+            out.extend(self._check_config_default(b, keys, fields,
+                                                  reg_file, reg_dict))
+            out.extend(self._check_flag(b, keys, flags, reg_file,
+                                        reg_dict))
+            out.extend(self._check_factory_knobs(b, reg_file, reg_dict,
+                                                 project, fields, members,
+                                                 threaded, cli_files))
+            out.extend(self._check_cross_literals(b, reg_file, reg_dict,
+                                                  registries))
+        out.extend(self._check_subset_tuples(project, registries))
+        return out
+
+    def _threaded_keywords(self, cli_files: List[SourceFile]) -> Set[str]:
+        """Keyword names passed to default_serving/ServingConfig in the
+        CLI files — the definition of 'reachable from the CLI'."""
+        kws: Set[str] = set()
+        for f in cli_files:
+            for node in ast.walk(f.tree):
+                if isinstance(node, ast.Call):
+                    fn = dotted(node.func) or ""
+                    if fn.split(".")[-1] in CONFIG_BUILDERS:
+                        kws.update(k.arg for k in node.keywords
+                                   if k.arg is not None)
+        return kws
+
+    def _check_config_default(self, b: Binding, keys: Set[str], fields,
+                              reg_file, reg_dict) -> Iterable[Finding]:
+        if not fields:
+            return
+        hit = fields.get(b.field)
+        if hit is None:
+            yield self.at(reg_file, reg_dict,
+                          f"{b.registry} has no matching "
+                          f"{CONFIG_CLASS}.{b.field} field — the "
+                          "registry is unreachable from config")
+            return
+        f, ann = hit
+        if isinstance(ann.value, ast.Constant) and \
+                isinstance(ann.value.value, str) and \
+                ann.value.value not in keys:
+            yield self.at(f, ann,
+                          f"{CONFIG_CLASS}.{b.field} defaults to "
+                          f"{ann.value.value!r}, which is not a "
+                          f"{b.registry} key {sorted(keys)}")
+
+    def _check_flag(self, b: Binding, keys: Set[str], flags,
+                    reg_file, reg_dict) -> Iterable[Finding]:
+        hit = flags.get(b.flag)
+        if hit is None:
+            yield self.at(reg_file, reg_dict,
+                          f"no CLI flag {b.flag} exposes {b.registry} — "
+                          "registered policies are unreachable from the "
+                          "command line")
+            return
+        f, call = hit
+        choices = next((k.value for k in call.keywords
+                        if k.arg == "choices"), None)
+        if choices is None:
+            return
+        literal = const_str_seq(choices)
+        if literal is None:
+            # dynamic (sorted(REGISTRY) / list(REGISTRY)): verify it
+            # actually references the registry symbol
+            names = {n.id for n in ast.walk(choices)
+                     if isinstance(n, ast.Name)}
+            if b.registry not in names:
+                yield self.at(f, call,
+                              f"{b.flag} choices do not reference "
+                              f"{b.registry}; keys can drift silently "
+                              f"(use choices=sorted({b.registry}))")
+            return
+        for missing in sorted(keys - set(literal)):
+            yield self.at(f, call,
+                          f"{b.registry}[{missing!r}] is registered but "
+                          f"missing from {b.flag} choices — "
+                          "registered-but-unreachable")
+        for extra in sorted(set(literal) - keys):
+            yield self.at(f, call,
+                          f"{b.flag} advertises {extra!r} but "
+                          f"{b.registry} has no such policy — "
+                          "flag-without-policy")
+
+    def _check_factory_knobs(self, b: Binding, reg_file, reg_dict,
+                             project, fields, members, threaded,
+                             cli_files) -> Iterable[Finding]:
+        if not fields:
+            return
+        seen: Set[Tuple[str, int]] = set()
+        for key, value in str_keys(reg_dict).items():
+            for attr, helper_file, anchor in _serving_reads(value, project):
+                f = helper_file or reg_file
+                spot = (attr, getattr(anchor, "lineno", 0))
+                if spot in seen:
+                    continue
+                seen.add(spot)
+                if attr not in members:
+                    yield self.at(f, anchor,
+                                  f"{b.registry} factory reads "
+                                  f"serving.{attr}, which is not a "
+                                  f"{CONFIG_CLASS} member")
+                elif attr not in fields:
+                    # method/property read: reachable by construction
+                    continue
+                elif cli_files and attr not in threaded:
+                    yield self.at(f, anchor,
+                                  f"{b.registry} factory consumes "
+                                  f"{CONFIG_CLASS}.{attr} but the CLI "
+                                  "never threads it (no "
+                                  f"default_serving(..., {attr}=...) in "
+                                  "the serve entry point) — knob "
+                                  "unreachable from the command line")
+
+    def _check_cross_literals(self, b: Binding, reg_file, reg_dict,
+                              registries) -> Iterable[Finding]:
+        for key, value in str_keys(reg_dict).items():
+            for node in ast.walk(value):
+                if not isinstance(node, ast.Call):
+                    continue
+                for kw in node.keywords:
+                    target = CROSS_KEYWORDS.get(kw.arg or "")
+                    if target is None or target not in registries \
+                            or target == b.registry:
+                        continue
+                    if isinstance(kw.value, ast.Constant) and \
+                            isinstance(kw.value.value, str):
+                        tkeys = set(str_keys(registries[target][1]))
+                        if kw.value.value not in tkeys:
+                            yield self.at(
+                                reg_file, node,
+                                f"{b.registry}[{key!r}] names "
+                                f"{kw.arg}={kw.value.value!r}, not a "
+                                f"{target} key {sorted(tkeys)}")
+
+    def _check_subset_tuples(self, project, registries
+                             ) -> Iterable[Finding]:
+        for name, target in SUBSET_TUPLES.items():
+            hit = project.assignments.get(name)
+            if hit is None or target not in registries:
+                continue
+            f, expr = hit
+            items = const_str_seq(expr)
+            if items is None:
+                continue
+            tkeys = set(str_keys(registries[target][1]))
+            for item in items:
+                if item not in tkeys:
+                    yield self.at(f, expr,
+                                  f"{name} lists {item!r}, which is not "
+                                  f"a {target} key — stale alias")

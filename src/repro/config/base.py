@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any, Mapping, Optional, Sequence, Tuple
+from typing import Mapping, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block pattern vocabulary

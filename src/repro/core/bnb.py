@@ -12,7 +12,7 @@ import dataclasses
 import heapq
 import itertools
 import math
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 

@@ -17,7 +17,6 @@ import pathlib
 import time
 import traceback
 
-import jax
 
 from repro.analysis.hlo import analyze_hlo
 from repro.configs import ARCH_IDS, SHAPES, applicable, get_config

@@ -94,10 +94,16 @@ def main():
     ap.add_argument("--ecn-k", type=float, default=30.0,
                     help="queue-depth admission: per-tier ECN mark "
                     "threshold k (sweep like k10/k30/k60; shedding "
-                    "starts at k*4)")
+                    "starts at k * --ecn-shed-mult)")
+    ap.add_argument("--ecn-shed-mult", type=float, default=4.0,
+                    help="queue-depth admission: hard-shed depth as a "
+                    "multiple of the ECN mark threshold k (default 4)")
     ap.add_argument("--admission-rate", type=float, default=0.0,
                     help="token-bucket admission: sustained admit rate "
                     "in qps (required for --admission token-bucket)")
+    ap.add_argument("--admission-burst", type=float, default=2.0,
+                    help="token-bucket admission: bucket depth in "
+                    "seconds of sustained rate (default 2.0)")
     ap.add_argument("--load-scale", type=float, default=1.0,
                     help="multiply the trace's offered QPS by this "
                     "factor (overload sweeps: 16, 64, 100, ...)")
@@ -171,6 +177,12 @@ def main():
         trace = trace.scaled(args.load_scale)
     if args.admission == "token-bucket" and args.admission_rate <= 0:
         ap.error("--admission token-bucket requires --admission-rate > 0")
+    if args.ecn_shed_mult < 1.0:
+        ap.error(f"--ecn-shed-mult must be >= 1 (shed at or above the "
+                 f"mark threshold), got {args.ecn_shed_mult}")
+    if args.admission_burst <= 0:
+        ap.error(f"--admission-burst must be > 0, got "
+                 f"{args.admission_burst}")
     if args.cost_per_class and not wcs:
         ap.error("--cost-per-class requires --worker-classes")
     costs = (class_costs_from_arg(args.cost_per_class)
@@ -212,7 +224,9 @@ def main():
                               warm_start_demand=args.warm_start,
                               admission=args.admission or "accept-all",
                               ecn_k=args.ecn_k,
-                              admission_rate_qps=args.admission_rate)
+                              ecn_shed_mult=args.ecn_shed_mult,
+                              admission_rate_qps=args.admission_rate,
+                              admission_burst_s=args.admission_burst)
     r = run_controller(controller, trace, serving, seed=args.seed,
                        estimator=args.estimator)
 
@@ -244,6 +258,12 @@ def main():
         "threshold_timeline": r.threshold_timeline[:: max(
             len(r.threshold_timeline) // 50, 1)],
     }
+    if serving.admission == "queue-depth":
+        report["ecn_k"] = serving.ecn_k
+        report["ecn_shed_mult"] = serving.ecn_shed_mult
+    elif serving.admission == "token-bucket":
+        report["admission_rate_qps"] = serving.admission_rate_qps
+        report["admission_burst_s"] = serving.admission_burst_s
     if args.scaler and args.scaler not in ("heartbeat", "null"):
         caps = [n for _, n in r.capacity_timeline]
         report["scaler"] = args.scaler

@@ -9,8 +9,7 @@ allocation) for each input of the step being lowered:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +21,7 @@ from repro.models import kvcache
 from repro.models.transformer import forward, init_params
 from repro.parallel.sharding import (make_rules, param_pspecs,
                                      sharding_rules)
-from repro.training.optimizer import AdamWState, opt_state_pspecs
+from repro.training.optimizer import opt_state_pspecs
 from repro.training.train_loop import TrainConfig, make_train_step
 
 # per-arch grad-accumulation: chosen via §Perf hillclimbing so per-device
@@ -116,7 +115,7 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh,
                              jax.ShapeDtypeStruct((2,), jnp.uint32))
     p_specs = param_pspecs(pshapes, rules)
 
-    from repro.training.optimizer import make_adamw, OptimizerConfig
+    from repro.training.optimizer import make_adamw
     ocfg = dataclasses.replace(tcfg.opt,
                                eight_bit_moments=tcfg.opt.eight_bit_moments
                                or cfg.opt_8bit_moments)

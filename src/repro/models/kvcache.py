@@ -5,7 +5,7 @@ split so caches thread straight through ``lax.scan``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -101,7 +101,6 @@ def mla_decode(params, cfg, x, positions, cache, cache_index):
     """Absorbed single/few-token MLA decode against the latent cache."""
     m = cfg.mla
     B, S, D = x.shape
-    H = cfg.num_heads
     dn, dr, dv, r = (m.qk_nope_head_dim, m.qk_rope_head_dim,
                      m.v_head_dim, m.kv_lora_rank)
 

@@ -8,11 +8,9 @@ heavy variants = wider + 50-step DDIM (SDv1.5/SDXL analogues).
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
 from repro.config.base import DiffusionConfig
 from repro.models.efficientnet import _conv_init, _gn_init, conv, groupnorm

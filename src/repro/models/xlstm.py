@@ -6,13 +6,12 @@ kernels/mlstm_chunk.py. Decode state is O(1) in sequence length.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.layers import dense_init, norm_apply, _dtype
+from repro.models.layers import dense_init, _dtype
 from repro.parallel.sharding import constrain
 
 

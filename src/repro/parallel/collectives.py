@@ -12,7 +12,6 @@ composable with training/grad_compress for slow inter-pod links.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

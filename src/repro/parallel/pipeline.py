@@ -9,7 +9,6 @@ exercised at small scale in tests/test_pipeline.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -33,9 +33,8 @@ from __future__ import annotations
 import math
 from typing import List, Optional, Sequence, Tuple
 
-from repro.serving.forecast import (DEFAULT_MODEL_LOAD_S, Forecaster,
-                                    TrailingForecaster, default_horizon_s,
-                                    make_forecaster)
+from repro.serving.forecast import (Forecaster, TrailingForecaster,
+                                    default_horizon_s, make_forecaster)
 
 
 def required_workers(serving, demand_qps: float, profiles,

@@ -173,7 +173,10 @@ class OracleEstimator:
 # Estimator registry: name -> factory(serving, trace). ``trace`` may be
 # None for estimators that only observe (everything but the oracle).
 ESTIMATORS = {
-    "ewma": lambda serving, trace=None: EwmaEstimator(serving.ewma_alpha),
+    # ewma_alpha is the paper's pinned smoothing constant (§5, 0.6) —
+    # a core-control knob deliberately not exposed on the CLI
+    "ewma": lambda serving, trace=None: EwmaEstimator(
+        serving.ewma_alpha),  # staticlint: ignore[registry-threading]
     "sliding-window": lambda serving, trace=None: SlidingWindowEstimator(),
     "oracle": lambda serving, trace=None: OracleEstimator(
         _require_trace(trace)),

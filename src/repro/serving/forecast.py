@@ -213,17 +213,20 @@ def _season_of(serving, trace) -> float:
     return 360.0
 
 
+# ewma_alpha / control_period_s below are core-control constants (the
+# paper's pinned smoothing factor and the control-epoch length), shared
+# with the estimator/control loop — deliberately not CLI-exposed.
 FORECASTERS = {
     "trailing": lambda serving, trace=None: TrailingForecaster(
-        serving.ewma_alpha),
+        serving.ewma_alpha),  # staticlint: ignore[registry-threading]
     "ewma-trend": lambda serving, trace=None: EwmaTrendForecaster(),
     "holt-winters": lambda serving, trace=None: HoltWintersForecaster(
         season_s=_season_of(serving, trace),
-        bucket_s=float(serving.control_period_s)),
+        bucket_s=float(serving.control_period_s)),  # staticlint: ignore[registry-threading]
     "holt-winters-headroom": lambda serving, trace=None:
         QuantileHeadroomForecaster(HoltWintersForecaster(
             season_s=_season_of(serving, trace),
-            bucket_s=float(serving.control_period_s))),
+            bucket_s=float(serving.control_period_s))),  # staticlint: ignore[registry-threading]
     "oracle": lambda serving, trace=None: OracleForecaster(trace),
 }
 

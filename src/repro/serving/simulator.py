@@ -93,6 +93,18 @@ class SimConfig:
     fixed_plan: Optional[AllocationPlan] = None
 
 
+# The conservation identity: every offered query lands in exactly one
+# of these buckets, so `total == sum(getattr(r, f) for f in
+# CONSERVATION_FIELDS)` after every run. The overload battery asserts
+# it (tests/test_overload.py) and the conservation-taxonomy lint rule
+# enforces at AST level that no counter is incremented outside it —
+# adding a drop bucket means extending this tuple (and the tests), not
+# just declaring a field.
+CONSERVATION_FIELDS: Tuple[str, ...] = (
+    "completed", "shed_admission", "dropped_predictive",
+    "dropped_deadline")
+
+
 @dataclasses.dataclass
 class SimResult:
     completed: int = 0
@@ -154,6 +166,11 @@ class SimResult:
         accept-all baseline this property is bit-identical to the old
         single counter (golden-pinned)."""
         return self.dropped_predictive + self.dropped_deadline
+
+    def conserved(self) -> bool:
+        """The conservation identity over the split drop taxonomy."""
+        return self.total == sum(getattr(self, f)
+                                 for f in CONSERVATION_FIELDS)
 
     @property
     def violation_ratio(self) -> float:

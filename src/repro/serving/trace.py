@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, List, Optional
+from typing import List, Optional
 
 import numpy as np
 

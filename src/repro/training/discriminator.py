@@ -6,8 +6,7 @@ Runs on CPU in ~a minute at toy scale; checkpoints via training/checkpoint.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ pods or not (see EXPERIMENTS.md §Dry-run). Interface mirrors optax:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -141,7 +141,6 @@ def make_adamw(cfg: OptimizerConfig):
                                   is_leaf=lambda t: isinstance(t, tuple))
             return new_p, AdamWState(count, new_m, new_v, new_ms, new_vs), \
                 {"lr": lr, "grad_norm": gnorm}
-        dummy = jax.tree.map(lambda p: None, params)
         flat = jax.tree.map(lambda p, g, m, v: upd(p, g, m, v, None, None),
                             params, grads, state.m, state.v)
         new_p = jax.tree.map(lambda t: t[0], flat,

@@ -12,17 +12,16 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.config.base import CascadeSpec, LatencyProfile, TierSpec
+from repro.config.base import LatencyProfile
 from repro.core.confidence import DeferralProfile, synthetic_confidence_scores
-from repro.core.milp import AllocationPlan, Telemetry
+from repro.core.milp import AllocationPlan
 from repro.core.quality import (BEST_MIX_DIP_COEF, BoundaryQualityModel)
 from repro.serving.autocascade import (CascadeBuilder, CascadeSearchPlanner,
                                        CatalogFamily, ModelVariant,
                                        VariantCatalog, builtin_catalog,
                                        default_candidates, expected_depth,
                                        fit_boundary_models, subchain_specs)
-from repro.serving.baselines import (make_profiles, run_baseline,
-                                     run_controller)
+from repro.serving.baselines import make_profiles, run_controller
 from repro.serving.controlplane import (ControlDecision, ControlPlane,
                                         EwmaEstimator, build_control_plane)
 from repro.serving.profiles import CASCADES, default_serving, resolve_cascade

@@ -3,7 +3,6 @@ provisioning capabilities it drives in both backends: capacity sizing
 math, warm-pool load-before-ramp semantics, scale-down hysteresis,
 conservation across mid-run resizes, and bit-identical classic-policy
 behavior (heartbeat/null runs match the default fingerprints)."""
-import dataclasses
 
 import numpy as np
 import pytest

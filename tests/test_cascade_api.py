@@ -1,7 +1,6 @@
 """N-tier cascade API tests: the tier-recursive solver reduces exactly to
 the paper's two-tier solver at N=2 (property-tested), and 3-tier cascades
 run end-to-end through the simulator with conserved query accounting."""
-import dataclasses
 
 import numpy as np
 import pytest

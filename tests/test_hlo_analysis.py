@@ -1,6 +1,5 @@
 """HLO-parser tests: collective bytes, loop weighting, dot FLOPs, traffic
 proxy — on synthetic HLO text with known ground truth."""
-import numpy as np
 
 from repro.analysis.hlo import analyze_hlo, collective_bytes, shape_bytes
 

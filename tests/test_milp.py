@@ -5,11 +5,10 @@ import math
 import numpy as np
 import pytest
 
-from repro.config.base import ServingConfig
 from repro.core.bnb import MILP, solve_milp
 from repro.core.confidence import DeferralProfile, synthetic_confidence_scores
 from repro.core.milp import solve_allocation, solve_heterogeneous
-from repro.serving.profiles import CASCADES, default_serving
+from repro.serving.profiles import default_serving
 
 
 @pytest.fixture

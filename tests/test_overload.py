@@ -30,7 +30,8 @@ from repro.serving.admission import (ADMISSIONS, AcceptAllAdmission,
 from repro.serving.baselines import (make_profiles, run_ablation,
                                      run_baseline, run_controller)
 from repro.serving.profiles import default_serving
-from repro.serving.simulator import SimConfig, SimResult, Simulator
+from repro.serving.simulator import (CONSERVATION_FIELDS, SimConfig,
+                                     SimResult, Simulator)
 from repro.serving.trace import (azure_like_trace, incast_trace,
                                  static_trace)
 from repro.testing.golden import overload_fingerprint
@@ -56,11 +57,14 @@ PROFILES = {a: make_profiles(sv, 0) for a, sv in SERVING.items()}
 
 
 def _check_conservation(r):
+    # the identity itself comes from the simulator's declared taxonomy
+    # (CONSERVATION_FIELDS) so a new drop bucket can't silently escape
+    assert r.conserved(), {f: getattr(r, f) for f in
+                           ("total",) + CONSERVATION_FIELDS}
     assert (r.completed + r.shed_admission + r.dropped_predictive
             + r.dropped_deadline == r.total)
     assert r.dropped == r.dropped_predictive + r.dropped_deadline
-    assert min(r.shed_admission, r.dropped_predictive,
-               r.dropped_deadline) >= 0
+    assert min(getattr(r, f) for f in CONSERVATION_FIELDS) >= 0
 
 
 def _run(admission, trace, seed, **sim_kw):
@@ -340,3 +344,65 @@ def test_trace_scaled_and_incast():
     j1 = incast_trace(60, jitter_s=3.0, seed=5)
     j2 = incast_trace(60, jitter_s=3.0, seed=5)
     assert np.array_equal(j1.qps, j2.qps)
+
+
+# ---------------------------------------------------------------------------
+# CLI threading regressions: the admission knobs consumed by ADMISSIONS
+# factories must be reachable from launch/serve.py (found by the
+# registry-threading lint rule: --ecn-shed-mult and --admission-burst
+# used to stop at ServingConfig defaults).
+# ---------------------------------------------------------------------------
+def _serve_report(tmp_path, monkeypatch, name, extra):
+    import json
+    import sys
+
+    from repro.launch import serve
+    out = tmp_path / f"{name}.json"
+    argv = ["serve", "--duration", "30", "--static-qps", "30",
+            "--workers", "2", "--seed", "0", "--out", str(out)] + extra
+    monkeypatch.setattr(sys, "argv", argv)
+    serve.main()
+    return json.loads(out.read_text())
+
+
+def _assert_report_conserved(rep):
+    assert (rep["completed"] + rep["shed_admission"]
+            + rep["dropped_predictive"] + rep["dropped_deadline"]
+            == rep["total_queries"])
+
+
+def test_cli_threads_ecn_shed_mult(tmp_path, monkeypatch, capsys):
+    tight = _serve_report(tmp_path, monkeypatch, "tight",
+                          ["--admission", "queue-depth",
+                           "--ecn-k", "1", "--ecn-shed-mult", "1.0"])
+    loose = _serve_report(tmp_path, monkeypatch, "loose",
+                          ["--admission", "queue-depth",
+                           "--ecn-k", "1", "--ecn-shed-mult", "500"])
+    capsys.readouterr()
+    assert tight["ecn_shed_mult"] == 1.0
+    assert loose["ecn_shed_mult"] == 500.0
+    assert tight["ecn_k"] == loose["ecn_k"] == 1.0
+    # shedding starts at depth k*mult: the tight door sheds, the
+    # effectively-unbounded one does not
+    assert tight["shed_admission"] > loose["shed_admission"]
+    _assert_report_conserved(tight)
+    _assert_report_conserved(loose)
+
+
+def test_cli_threads_admission_burst(tmp_path, monkeypatch, capsys):
+    small = _serve_report(tmp_path, monkeypatch, "small",
+                          ["--admission", "token-bucket",
+                           "--admission-rate", "5",
+                           "--admission-burst", "0.2"])
+    big = _serve_report(tmp_path, monkeypatch, "big",
+                        ["--admission", "token-bucket",
+                         "--admission-rate", "5",
+                         "--admission-burst", "30"])
+    capsys.readouterr()
+    assert small["admission_burst_s"] == 0.2
+    assert big["admission_burst_s"] == 30.0
+    assert small["admission_rate_qps"] == big["admission_rate_qps"] == 5.0
+    # a deeper bucket admits more of the same offered load
+    assert big["shed_admission"] < small["shed_admission"]
+    _assert_report_conserved(small)
+    _assert_report_conserved(big)

@@ -7,7 +7,6 @@ import textwrap
 
 import jax
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.parallel.sharding import make_rules, param_pspec

@@ -101,7 +101,6 @@ def test_elastic_scaling(serving):
 
 def test_straggler_hedging_reduces_tail(serving):
     trace = static_trace(10.0, 120)
-    profile = make_profile(serving, 0)
     heavy_jitter = dict(straggler_prob=0.08, straggler_sigma=0.15)
     r_hedge = Simulator(serving, make_profile(serving, 0),
                         SimConfig(seed=0, hedging=True,

@@ -1,0 +1,552 @@
+"""Invariant-linter suite (src/repro/analysis/staticlint/).
+
+Per rule: a bad fixture is flagged, the matching good fixture is clean,
+and a ``# staticlint: ignore[...]`` suppression silences the finding.
+Plus framework behavior (suppressions, select, parse errors, JSON
+render), CLI exit codes, and the repo-wide gate: the linter runs clean
+on HEAD (the same invocation CI runs).
+"""
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis.staticlint import RULES
+from repro.analysis.staticlint.__main__ import main as staticlint_main
+from repro.analysis.staticlint.framework import run_lint
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _write(root, rel, body):
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(body))
+    return p
+
+
+def _lint(root, *rule_ids):
+    return run_lint([str(root)], select=list(rule_ids) or None)
+
+
+def _rules_hit(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+BAD_DETERMINISM = """\
+    import random
+    import time
+    from datetime import datetime
+
+    import numpy as np
+
+    def stamp():
+        t = time.time()
+        d = datetime.now()
+        r = random.random()
+        x = np.random.rand(3)
+        return t, d, r, x
+"""
+
+GOOD_DETERMINISM = """\
+    import time
+
+    import numpy as np
+
+    def solve(seed):
+        t0 = time.perf_counter()          # solve_ms: fingerprint-excluded
+        rng = np.random.default_rng(seed)
+        return rng.normal(), (time.perf_counter() - t0) * 1e3
+"""
+
+
+def test_determinism_bad_flagged(tmp_path):
+    _write(tmp_path, "serving/bad.py", BAD_DETERMINISM)
+    findings = _lint(tmp_path, "determinism")
+    msgs = "\n".join(f.message for f in findings)
+    assert len(findings) == 4
+    assert "time.time" in msgs and "datetime" in msgs
+    assert "random.random" in msgs and "np.random.rand" in msgs
+
+
+def test_determinism_good_clean(tmp_path):
+    _write(tmp_path, "serving/good.py", GOOD_DETERMINISM)
+    assert _lint(tmp_path, "determinism") == []
+
+
+def test_determinism_scope_is_limited(tmp_path):
+    # the same wall-clock calls outside serving//core//golden.py pass
+    _write(tmp_path, "launch/bench.py", BAD_DETERMINISM)
+    assert _lint(tmp_path, "determinism") == []
+    # testing/golden.py is in scope by filename
+    _write(tmp_path, "testing/golden.py", "import time\nt = time.time()\n")
+    assert len(_lint(tmp_path, "determinism")) == 1
+
+
+def test_determinism_suppression(tmp_path):
+    _write(tmp_path, "serving/sup.py", """\
+        import time
+        t = time.time()  # staticlint: ignore[determinism]
+    """)
+    assert _lint(tmp_path, "determinism") == []
+
+
+def test_determinism_import_aliases(tmp_path):
+    _write(tmp_path, "serving/alias.py", """\
+        import time as clock
+        from numpy import random as npr
+        t = clock.time()
+        x = npr.rand(2)
+    """)
+    assert len(_lint(tmp_path, "determinism")) == 2
+
+
+# ---------------------------------------------------------------------------
+# exception-hygiene
+# ---------------------------------------------------------------------------
+def test_hygiene_bad_flagged(tmp_path):
+    _write(tmp_path, "core/bad.py", """\
+        def f():
+            try:
+                risky()
+            except:
+                pass
+
+        def g():
+            try:
+                risky()
+            except Exception:
+                return None
+    """)
+    findings = _lint(tmp_path, "exception-hygiene")
+    assert len(findings) == 2
+    assert "bare" in findings[0].message
+
+
+def test_hygiene_good_clean(tmp_path):
+    _write(tmp_path, "serving/good.py", """\
+        def f():
+            try:
+                risky()
+            except KeyError:
+                pass            # narrow: catching what you expect
+
+        def g():
+            try:
+                risky()
+            except Exception as e:
+                raise RuntimeError("wrapped") from e
+    """)
+    assert _lint(tmp_path, "exception-hygiene") == []
+
+
+def test_hygiene_suppression_and_scope(tmp_path):
+    _write(tmp_path, "serving/sup.py", """\
+        def f():
+            try:
+                risky()
+            except Exception:  # staticlint: ignore[exception-hygiene]
+                pass
+    """)
+    _write(tmp_path, "scripts/tool.py", """\
+        try:
+            risky()
+        except:
+            pass
+    """)
+    assert _lint(tmp_path, "exception-hygiene") == []
+
+
+# ---------------------------------------------------------------------------
+# conservation-taxonomy
+# ---------------------------------------------------------------------------
+CONSERVED_SIM = """\
+    CONSERVATION_FIELDS = ("completed", "shed_admission",
+                           "dropped_predictive", "dropped_deadline")
+
+    class SimResult:
+        completed: int = 0
+        shed_admission: int = 0
+        dropped_predictive: int = 0
+        dropped_deadline: int = 0
+        total: int = 0
+
+    def run(r):
+        r.completed += 1
+        r.dropped_deadline += 1
+"""
+
+
+def test_conservation_clean(tmp_path):
+    _write(tmp_path, "serving/simulator.py", CONSERVED_SIM)
+    assert _lint(tmp_path, "conservation-taxonomy") == []
+
+
+def test_conservation_rogue_counter_field(tmp_path):
+    _write(tmp_path, "serving/simulator.py", CONSERVED_SIM + """\
+
+    class Telemetry:
+        dropped_oom: int = 0
+""")
+    findings = _lint(tmp_path, "conservation-taxonomy")
+    assert len(findings) == 1
+    assert "dropped_oom" in findings[0].message
+
+
+def test_conservation_rogue_increment(tmp_path):
+    _write(tmp_path, "serving/simulator.py", CONSERVED_SIM)
+    _write(tmp_path, "serving/backend.py", """\
+        def drop(r):
+            r.shed_overflow += 1
+    """)
+    findings = _lint(tmp_path, "conservation-taxonomy")
+    assert len(findings) == 1
+    assert "shed_overflow" in findings[0].message
+    # same increment outside serving/ is out of scope
+    _write(tmp_path, "serving/backend.py", "x = 1\n")
+    _write(tmp_path, "bench/backend.py", """\
+        def drop(r):
+            r.shed_overflow += 1
+    """)
+    assert _lint(tmp_path, "conservation-taxonomy") == []
+
+
+def test_conservation_missing_identity(tmp_path):
+    _write(tmp_path, "serving/simulator.py", """\
+        class SimResult:
+            completed: int = 0
+            dropped_deadline: int = 0
+    """)
+    findings = _lint(tmp_path, "conservation-taxonomy")
+    assert len(findings) == 1
+    assert "CONSERVATION_FIELDS" in findings[0].message
+    # a fixture tree without the counter classes stays quiet
+    _write(tmp_path, "serving/simulator.py", "x = 1\n")
+    assert _lint(tmp_path, "conservation-taxonomy") == []
+
+
+# ---------------------------------------------------------------------------
+# registry-threading
+# ---------------------------------------------------------------------------
+def _registry_project(tmp_path, *, default="a", choices="sorted(ADMISSIONS)",
+                      registry_extra="", cli_extra="",
+                      config_extra="", threaded_extra=""):
+    _write(tmp_path, "serving/admission.py", f"""\
+        class A:
+            pass
+
+        ADMISSIONS = {{
+            "a": lambda serving: A(),
+            {registry_extra}
+        }}
+    """)
+    _write(tmp_path, "config/base.py", f"""\
+        class ServingConfig:
+            admission: str = "{default}"
+            knob: float = 1.0
+            {config_extra}
+    """)
+    _write(tmp_path, "launch/serve.py", f"""\
+        from repro.serving.admission import ADMISSIONS
+
+        def main(ap):
+            ap.add_argument("--admission", choices={choices})
+            {cli_extra}
+            serving = default_serving(admission="a"{threaded_extra})
+    """)
+
+
+def test_registry_threading_clean(tmp_path):
+    _registry_project(tmp_path)
+    assert _lint(tmp_path, "registry-threading") == []
+
+
+def test_registry_default_not_registered(tmp_path):
+    _registry_project(tmp_path, default="zzz")
+    findings = _lint(tmp_path, "registry-threading")
+    assert len(findings) == 1
+    assert "'zzz'" in findings[0].message
+
+
+def test_registry_key_missing_from_choices(tmp_path):
+    _registry_project(tmp_path, choices='["a"]',
+                      registry_extra='"b": lambda serving: A(),')
+    findings = _lint(tmp_path, "registry-threading")
+    assert any("registered but missing" in f.message for f in findings)
+
+
+def test_registry_flag_without_policy(tmp_path):
+    _registry_project(tmp_path, choices='["a", "ghost"]')
+    findings = _lint(tmp_path, "registry-threading")
+    assert any("flag-without-policy" in f.message for f in findings)
+
+
+def test_registry_dynamic_choices_must_reference_registry(tmp_path):
+    _registry_project(tmp_path, choices="sorted(OTHER_DICT)")
+    findings = _lint(tmp_path, "registry-threading")
+    assert any("drift silently" in f.message for f in findings)
+
+
+def test_registry_unthreaded_knob(tmp_path):
+    _registry_project(
+        tmp_path,
+        registry_extra='"k": lambda serving: A(serving.knob),')
+    findings = _lint(tmp_path, "registry-threading")
+    assert len(findings) == 1
+    assert "knob" in findings[0].message and "never threads" in \
+        findings[0].message
+    # threading the knob through the CLI config call fixes it
+    _registry_project(
+        tmp_path,
+        registry_extra='"k": lambda serving: A(serving.knob),',
+        threaded_extra=", knob=2.0")
+    assert _lint(tmp_path, "registry-threading") == []
+
+
+def test_registry_unknown_config_member(tmp_path):
+    _registry_project(
+        tmp_path,
+        registry_extra='"k": lambda serving: A(serving.bogus),')
+    findings = _lint(tmp_path, "registry-threading")
+    assert any("not a ServingConfig member" in f.message for f in findings)
+
+
+def test_registry_suppression(tmp_path):
+    _registry_project(
+        tmp_path,
+        registry_extra='"k": lambda serving: A(serving.knob),'
+        '  # staticlint: ignore[registry-threading]')
+    assert _lint(tmp_path, "registry-threading") == []
+
+
+def test_registry_no_flag_at_all(tmp_path):
+    _write(tmp_path, "serving/admission.py", """\
+        class A:
+            pass
+
+        ADMISSIONS = {"a": lambda serving: A()}
+    """)
+    _write(tmp_path, "config/base.py", """\
+        class ServingConfig:
+            admission: str = "a"
+    """)
+    findings = _lint(tmp_path, "registry-threading")
+    assert any("no CLI flag --admission" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# protocol-conformance
+# ---------------------------------------------------------------------------
+def _protocol_project(tmp_path, impl_body):
+    header = textwrap.dedent("""\
+        from typing import Protocol
+
+        class AdmissionPolicy(Protocol):
+            name: str
+
+            def admit(self, now, depths, tier=0): ...
+
+        class Impl:
+    """)
+    body = textwrap.indent(textwrap.dedent(impl_body), "    ")
+    footer = '\nADMISSIONS = {"impl": lambda serving: Impl()}\n'
+    p = tmp_path / "serving" / "admission.py"
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(header + body + footer)
+
+
+def test_protocol_conforming_impl_clean(tmp_path):
+    _protocol_project(tmp_path, """\
+        name = "impl"
+
+        def admit(self, now, depths, tier=0):
+            return True
+    """)
+    assert _lint(tmp_path, "protocol-conformance") == []
+
+
+def test_protocol_missing_method(tmp_path):
+    _protocol_project(tmp_path, """\
+        name = "impl"
+    """)
+    findings = _lint(tmp_path, "protocol-conformance")
+    assert len(findings) == 1
+    assert "does not define AdmissionPolicy.admit" in findings[0].message
+
+
+def test_protocol_wrong_arity(tmp_path):
+    _protocol_project(tmp_path, """\
+        name = "impl"
+
+        def admit(self, now):
+            return True
+    """)
+    findings = _lint(tmp_path, "protocol-conformance")
+    assert len(findings) == 1
+    assert "arity" in findings[0].message
+
+
+def test_protocol_missing_attr(tmp_path):
+    _protocol_project(tmp_path, """\
+        def admit(self, now, depths, tier=0):
+            return True
+    """)
+    findings = _lint(tmp_path, "protocol-conformance")
+    assert len(findings) == 1
+    assert "never binds `name`" in findings[0].message
+
+
+def test_protocol_attr_via_self_and_inheritance(tmp_path):
+    _write(tmp_path, "serving/admission.py", """\
+        from typing import Protocol
+
+        class AdmissionPolicy(Protocol):
+            name: str
+
+            def admit(self, now, depths, tier=0): ...
+
+        class Base:
+            def admit(self, now, depths, tier=0):
+                return True
+
+        class Impl(Base):
+            def __init__(self):
+                self.name = "impl"
+
+        ADMISSIONS = {"impl": lambda serving: Impl()}
+    """)
+    assert _lint(tmp_path, "protocol-conformance") == []
+
+
+def test_protocol_impl_behind_helper_factory(tmp_path):
+    _write(tmp_path, "serving/scalers.py", """\
+        from typing import Protocol
+
+        class ScalingPolicy(Protocol):
+            def on_tick(self, backend, census): ...
+
+        class Null:
+            pass
+
+        def _classic():
+            def factory(serving):
+                return Null()
+            return factory
+
+        SCALERS = {"null": _classic()}
+    """)
+    findings = _lint(tmp_path, "protocol-conformance")
+    assert len(findings) == 1
+    assert "Null" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# framework: suppressions, select, parse errors, output
+# ---------------------------------------------------------------------------
+def test_ignore_file_and_star(tmp_path):
+    _write(tmp_path, "serving/s.py", """\
+        # staticlint: ignore-file[determinism]
+        import time
+        t = time.time()
+
+        def f():
+            try:
+                g()
+            except:   # staticlint: ignore[*]
+                pass
+    """)
+    assert _lint(tmp_path) == []
+
+
+def test_select_unknown_rule_raises(tmp_path):
+    with pytest.raises(KeyError):
+        run_lint([str(tmp_path)], select=["no-such-rule"])
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    _write(tmp_path, "serving/broken.py", "def f(:\n")
+    findings = _lint(tmp_path)
+    assert [f.rule for f in findings] == ["parse-error"]
+
+
+def test_findings_sorted_and_deduped(tmp_path):
+    _write(tmp_path, "serving/z.py", "import time\nt = time.time()\n")
+    _write(tmp_path, "serving/a.py", "import time\nt = time.time()\n")
+    findings = _lint(tmp_path, "determinism")
+    assert [pathlib.Path(f.path).name for f in findings] == \
+        ["a.py", "z.py"]
+    assert len(set(findings)) == len(findings)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+def test_cli_exit_codes_and_json(tmp_path, capsys):
+    bad = tmp_path / "serving"
+    _write(tmp_path, "serving/bad.py", "import time\nt = time.time()\n")
+    report = tmp_path / "report.json"
+    rc = staticlint_main([str(bad), "--json", "--json-out", str(report)])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert out["count"] == 1 and out["findings"][0]["rule"] == "determinism"
+    assert json.loads(report.read_text()) == out
+
+    (bad / "bad.py").write_text(
+        "import time\nt = time.perf_counter()\n")
+    assert staticlint_main([str(bad)]) == 0
+    assert staticlint_main([str(bad), "--select", "nope"]) == 2
+    assert staticlint_main(["--list-rules"]) == 0
+    listed = capsys.readouterr().out
+    for rid in RULES:
+        assert rid in listed
+
+
+@pytest.mark.parametrize("rule_id", sorted(RULES))
+def test_every_rule_cli_nonzero_on_its_bad_fixture(tmp_path, rule_id):
+    """ISSUE gate: the CLI exits non-zero on each rule's bad fixture."""
+    bad = {
+        "determinism": ("serving/bad.py", BAD_DETERMINISM),
+        "exception-hygiene": ("serving/bad.py", """\
+            def f():
+                try:
+                    g()
+                except:
+                    pass
+        """),
+        "conservation-taxonomy": ("serving/sim.py", CONSERVED_SIM + """\
+
+    def leak(r):
+        r.dropped_oom += 1
+"""),
+        "registry-threading": ("config/base.py", """\
+            class ServingConfig:
+                admission: str = "ghost"
+
+            ADMISSIONS = {"a": lambda serving: object()}
+        """),
+        "protocol-conformance": ("serving/adm.py", """\
+            from typing import Protocol
+
+            class AdmissionPolicy(Protocol):
+                def admit(self, now): ...
+
+            class Impl:
+                pass
+
+            ADMISSIONS = {"impl": lambda serving: Impl()}
+        """),
+    }[rule_id]
+    _write(tmp_path, *bad)
+    assert staticlint_main([str(tmp_path), "--select", rule_id]) == 1
+
+
+# ---------------------------------------------------------------------------
+# the repo-wide gate: HEAD lints clean (same invocation as CI)
+# ---------------------------------------------------------------------------
+def test_repo_lints_clean():
+    findings = run_lint([str(REPO / "src")])
+    assert findings == [], "\n".join(f.render() for f in findings)

@@ -1,6 +1,5 @@
 """Training substrate: optimizer, checkpointing, gradient compression,
 discriminator training, diffusion loss."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -8,8 +7,7 @@ import numpy as np
 import pytest
 
 from repro.training import checkpoint
-from repro.training.optimizer import (AdamWState, OptimizerConfig,
-                                      dequantize8, make_adamw, quantize8)
+from repro.training.optimizer import OptimizerConfig, make_adamw
 
 
 def test_adamw_minimizes_quadratic():
