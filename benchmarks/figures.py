@@ -328,23 +328,31 @@ def autoscale_frontier() -> Tuple[List[dict], float]:
 def degradation_curve() -> Tuple[List[dict], float]:
     """Graceful degradation under overload (ROADMAP item 4): sweep the
     pinned bursty trace at 1x/4x/16x/64x offered load under accept-all
-    vs queue-depth admission. Accept-all discovers overload at the
-    deadline — the violation ratio cliffs toward the excess-load
-    fraction; queue-depth degrades early (ECN threshold marking + door
-    shedding), holding violations near zero while quality and goodput
-    taper smoothly. Derived: the violation-ratio gap at 64x (cliff
-    height the admission policy removes)."""
+    vs queue-depth admission across an ECN mark-threshold grid
+    (k=10/30/60 — early/default/late marking). Accept-all discovers
+    overload at the deadline — the violation ratio cliffs toward the
+    excess-load fraction; queue-depth degrades early (ECN threshold
+    marking + door shedding), holding violations near zero while
+    quality and goodput taper smoothly, with k trading shed
+    aggressiveness against queueing slack. Derived: the violation-ratio
+    gap at 64x vs the k=30 default (cliff height the admission policy
+    removes)."""
     base = azure_like_trace(120, seed=3).scale(4, 32)
     rows = []
     vio: Dict[Tuple[str, float], float] = {}
-    for admission in ("accept-all", "queue-depth"):
+    sweep = [("accept-all", 30.0)] + [("queue-depth", k)
+                                      for k in (10.0, 30.0, 60.0)]
+    for admission, k in sweep:
         serving = default_serving("sdturbo", num_workers=16,
-                                  admission=admission)
+                                  admission=admission, ecn_k=k)
+        label = (admission if admission == "accept-all"
+                 else f"queue-depth-k{int(k)}")
         for scale in (1.0, 4.0, 16.0, 64.0):
             r = run_controller("diffserve", base.scaled(scale), serving,
                                seed=0)
-            vio[(admission, scale)] = r.violation_ratio
-            rows.append({"admission": admission, "load_scale": scale,
+            vio[(label, scale)] = r.violation_ratio
+            rows.append({"admission": label, "ecn_k": k,
+                         "load_scale": scale,
                          "offered": r.total, "completed": r.completed,
                          "shed_admission": r.shed_admission,
                          "dropped_predictive": r.dropped_predictive,
@@ -353,7 +361,41 @@ def degradation_curve() -> Tuple[List[dict], float]:
                          "goodput": round(r.goodput, 4),
                          "mean_fid": round(r.mean_fid, 3)})
     return rows, round(vio[("accept-all", 64.0)]
-                       - vio[("queue-depth", 64.0)], 4)
+                       - vio[("queue-depth-k30", 64.0)], 4)
+
+
+# ---------------------------------------------------------------------------
+# Micro-serving throughput — stage-granular vs whole-tier under overload
+# ---------------------------------------------------------------------------
+def microserve_throughput() -> Tuple[List[dict], float]:
+    """Disaggregated micro-serving (serving/microserve.py) vs whole-tier
+    serving on the *same* stage engine and worker budget: at deep
+    overload the solver lowers thresholds, so most tier-0 queries cross
+    the boundary confidence mid-denoise and preempt to the decoder —
+    per-query step counts become a second quality knob and effective
+    denoise capacity rises. ``off`` is the classic whole-tier simulator
+    for reference. Derived: micro-minus-whole-tier goodput at 16x
+    (strictly positive is the acceptance bar)."""
+    base = static_trace(30.0, 30)
+    rows = []
+    good: Dict[Tuple[str, float], float] = {}
+    for sg in ("off", "whole-tier", "micro"):
+        serving = default_serving("sdturbo", num_workers=8, stage_graph=sg)
+        for scale in (4.0, 16.0):
+            r = run_controller("diffserve", base.scaled(scale), serving,
+                               seed=0)
+            good[(sg, scale)] = r.goodput
+            rows.append({"stage_graph": sg, "load_scale": scale,
+                         "offered": r.total, "completed": r.completed,
+                         "dropped_predictive": r.dropped_predictive,
+                         "dropped_deadline": r.dropped_deadline,
+                         "dropped_stage": r.dropped_stage,
+                         "preempted_early": r.preempted_early,
+                         "slo_violation": round(r.violation_ratio, 4),
+                         "goodput": round(r.goodput, 4),
+                         "mean_fid": round(r.mean_fid, 3)})
+    return rows, round(good[("micro", 16.0)]
+                       - good[("whole-tier", 16.0)], 4)
 
 
 # ---------------------------------------------------------------------------
@@ -383,5 +425,6 @@ ALL = {
     "estimator_sweep": estimator_sweep,
     "autoscale_frontier": autoscale_frontier,
     "degradation_curve": degradation_curve,
+    "microserve_throughput": microserve_throughput,
     "milp_overhead": milp_overhead,
 }

@@ -46,6 +46,18 @@ def bench_serving(out_path: pathlib.Path) -> dict:
     t1 = time.perf_counter()
     rg = run_controller("diffserve", hot, sv_g, seed=0)
     wall_g = time.perf_counter() - t1
+
+    # micro-serving datum: stage-granular serving vs whole-tier on the
+    # same stage engine and worker budget at 16x offered load — the
+    # acceptance bar is micro goodput strictly above whole-tier
+    # (confidence-based preemption frees denoise slots early)
+    from repro.serving.trace import static_trace
+    deep = static_trace(30.0, 30).scaled(16.0)
+    micro_res = {}
+    for sg in ("whole-tier", "micro"):
+        sv_m = default_serving("sdturbo", num_workers=8, stage_graph=sg)
+        rm = run_controller("diffserve", deep, sv_m, seed=0)
+        micro_res[sg] = rm
     payload = {
         "pinned": {"trace": trace.name, "trace_seed": 3, "sim_seed": 0,
                    "cascade": "sdturbo", "workers": 16,
@@ -69,6 +81,18 @@ def bench_serving(out_path: pathlib.Path) -> dict:
             "offered": rg.total,
             "shed_admission": rg.shed_admission,
             "violation_ratio": round(rg.violation_ratio, 6),
+        },
+        "microserve": {
+            "trace": deep.name, "load_scale": 16.0, "workers": 8,
+            **{sg.replace("-", "_"): {
+                "offered": rm.total, "completed": rm.completed,
+                "preempted_early": rm.preempted_early,
+                "dropped_stage": rm.dropped_stage,
+                "goodput": round(rm.goodput, 6),
+            } for sg, rm in micro_res.items()},
+            "micro_goodput_gain": round(
+                micro_res["micro"].goodput
+                - micro_res["whole-tier"].goodput, 6),
         },
     }
     out_path.write_text(json.dumps(payload, indent=1) + "\n")

@@ -37,10 +37,12 @@ import numpy as np
 from repro.config.base import DiffusionConfig, as_cascade_spec
 from repro.core.cascade import DiffusionCascade
 from repro.models.unet import init_unet
+from repro.core.quality import load_quality_models, save_quality_models
 from repro.serving.baselines import CONTROLLERS, assemble_bundle
 from repro.serving.cluster import (ClusterBackend, ClusterRuntime,
                                    measured_worker_classes)
 from repro.serving.controlplane import ESTIMATORS
+from repro.serving.microserve import STAGES
 from repro.serving.profiles import (CASCADES, class_costs_from_arg,
                                     default_serving, worker_classes_from_arg)
 from repro.serving.simulator import SimConfig, Simulator
@@ -64,6 +66,22 @@ ap.add_argument("--worker-classes", default=None,
 ap.add_argument("--cost-per-class", default=None,
                 help="$/hour per class as name[=cost],... — switches the "
                 "allocator to the cost-weighted objective")
+ap.add_argument("--stage-graph", default="off", choices=sorted(STAGES),
+                help="stage-granular micro-serving: in cluster mode the "
+                "discriminator decouples onto per-boundary disc queues "
+                "drained by the cheapest class present")
+ap.add_argument("--stage-denoise-steps", type=int, default=8,
+                help="micro stage graph: denoise steps per tier")
+ap.add_argument("--stage-preempt-frac", type=float, default=0.5,
+                help="micro stage graph: earliest preemption fraction")
+ap.add_argument("--save-quality-models", default=None,
+                help="cluster mode: persist per-boundary quality models "
+                "fitted from this run's real discriminator confidences "
+                "as JSON (core/quality.py round-trip)")
+ap.add_argument("--quality-models", default=None,
+                help="seed the control plane's deferral profiles from a "
+                "saved quality-models JSON instead of the synthetic "
+                "offline fit")
 ap.add_argument("--duration", type=int, default=90)
 ap.add_argument("--seed", type=int, default=1)
 args = ap.parse_args()
@@ -74,10 +92,13 @@ if args.cost_per_class and not wcs:
     ap.error("--cost-per-class requires --worker-classes")
 costs = (class_costs_from_arg(args.cost_per_class)
          if args.cost_per_class else ())
-serving = default_serving(args.cascade, num_workers=args.workers,
+serving = default_serving(cascade=args.cascade, num_workers=args.workers,
                           worker_classes=wcs, class_costs=costs,
                           controller=args.controller,
-                          estimator=args.estimator or "ewma")
+                          estimator=args.estimator or "ewma",
+                          stage_graph=args.stage_graph,
+                          stage_denoise_steps=args.stage_denoise_steps,
+                          stage_preempt_frac=args.stage_preempt_frac)
 spec = as_cascade_spec(serving.cascade)
 n_tiers = spec.num_tiers
 
@@ -133,8 +154,13 @@ trace = azure_like_trace(args.duration, seed=2).scale(max(cap / 8, 0.5),
 
 # one shared assembly path with run_controller: bundle fields (fixed
 # plan, allocator ablation mode, random-confidence RNG) cannot drift
+loaded_profiles = None
+if args.quality_models:
+    loaded_models = load_quality_models(args.quality_models)
+    loaded_profiles = tuple(m.deferral_profile() for m in loaded_models)
 bundle, profiles, fixed, control, bundle_conf = assemble_bundle(
-    args.controller, trace, serving, seed=0, estimator=args.estimator)
+    args.controller, trace, serving, seed=0, estimator=args.estimator,
+    profiles=loaded_profiles)
 # query-agnostic bundles (Proteus) route on the bundle's random
 # confidences; the others score with the really-trained discriminator
 real_conf = lambda n: np.asarray(cascade.confidence(     # noqa: E731
@@ -184,6 +210,17 @@ if args.mode == "cluster":
     report["plan_timeline_head"] = [
         {"t": round(t, 1), "workers": list(w), "batches": list(b)}
         for t, w, b in plans[:8]]
+    if args.stage_graph != "off":
+        report["stage_graph"] = args.stage_graph
+        report["disc_class"] = backend.disc_class or "(homogeneous)"
+    if args.save_quality_models:
+        models = backend.fitted_quality_models()
+        save_quality_models(args.save_quality_models, models)
+        report["saved_quality_models"] = args.save_quality_models
+        report["quality_model_samples"] = [
+            len(s) for s in backend._conf_samples]
+if args.quality_models:
+    report["quality_models"] = args.quality_models
 if costs and r.plan_cost_timeline:
     report["mean_cost_per_hour"] = round(r.mean_plan_cost_per_hour, 3)
 if r.cascade_timeline:

@@ -55,6 +55,7 @@ DEFAULT_BINDINGS: Tuple[Binding, ...] = (
     Binding("FORECASTERS", "forecaster", "--forecaster"),
     Binding("ESTIMATORS", "estimator", "--estimator"),
     Binding("CONTROLLERS", "controller", "--controller"),
+    Binding("STAGES", "stage_graph", "--stage-graph"),
 )
 
 # keywords on registry-entry constructor calls (ControllerBundle) that

@@ -593,10 +593,28 @@ class ServingConfig:
     ecn_shed_mult: float = 4.0
     admission_rate_qps: float = 0.0
     admission_burst_s: float = 2.0
+    # disaggregated micro-serving (serving/microserve.py:STAGES): the
+    # stage-graph registry name ("off" keeps the classic whole-tier
+    # path), the denoise step quantization, and the minimum fraction of
+    # steps a query must run before confidence-based preemption may
+    # exit it early to decode. Resolved at ControlPlane build time.
+    stage_graph: str = "off"
+    stage_denoise_steps: int = 8
+    stage_preempt_frac: float = 0.5
+    # feed the admission door's shed rate back into the solver as a
+    # shed-adjusted QPS prior (core/allocator.py); off by default so
+    # goldens stay bit-identical
+    shed_feedback: bool = False
 
     def __post_init__(self):
         if self.ecn_k <= 0:
             raise ValueError(f"ecn_k must be > 0, got {self.ecn_k}")
+        if self.stage_denoise_steps < 1:
+            raise ValueError(f"stage_denoise_steps must be >= 1, got "
+                             f"{self.stage_denoise_steps}")
+        if not 0 < self.stage_preempt_frac <= 1:
+            raise ValueError(f"stage_preempt_frac must be in (0, 1], got "
+                             f"{self.stage_preempt_frac}")
         if self.ecn_shed_mult < 1.0:
             raise ValueError(f"ecn_shed_mult must be >= 1, got "
                              f"{self.ecn_shed_mult}")

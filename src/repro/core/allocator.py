@@ -28,13 +28,20 @@ class AllocatorOptions:
 class ResourceManager:
     def __init__(self, cascade, serving: ServingConfig,
                  profiles: "DeferralProfile | Sequence[DeferralProfile]",
-                 options: Optional[AllocatorOptions] = None):
+                 options: Optional[AllocatorOptions] = None,
+                 stage_graph=None):
         self.spec = as_cascade_spec(cascade)
         self.cascade = self.spec            # legacy alias
         self.serving = serving
         self.profiles = as_boundary_profiles(profiles,
                                              self.spec.num_boundaries)
         self.options = options or AllocatorOptions()
+        # per-stage allocation mode (serving/microserve.py StageGraph):
+        # plans carry stage_workers so the stage engine gets stage
+        # fleets, not just tier fleets
+        self.stage_graph = stage_graph
+        # shed-feedback state: last cumulative door-shed count seen
+        self._last_shed = 0
         self._demand_ewma: Optional[float] = None
         self._aimd_batches: List[int] = [
             max(self.spec.tier_batch_choices(i, serving.batch_choices))
@@ -78,6 +85,7 @@ class ResourceManager:
     def plan_for_demand(self, telemetry: Telemetry,
                         demand: float) -> AllocationPlan:
         opts = self.options
+        demand = self._shed_adjusted(telemetry, demand)
         if self.serving.worker_classes:
             solver = solve_heterogeneous_cascade
             kw = dict(
@@ -93,6 +101,8 @@ class ResourceManager:
                 queues=telemetry.queues,
                 arrivals=telemetry.arrivals,
             )
+        if self.stage_graph is not None:
+            kw["stage_graph"] = self.stage_graph
         if opts.mode == "static_threshold":
             plan = solver(
                 self.spec, self.serving, self.profiles, demand,
@@ -112,6 +122,22 @@ class ResourceManager:
         self.solve_times_ms.append(plan.solve_ms)
         self.last_plan = plan
         return plan
+
+    def _shed_adjusted(self, telemetry: Telemetry, demand: float) -> float:
+        """Shed-adjusted QPS prior (``serving.shed_feedback``): queries
+        the admission door turned away last period never reach the
+        arrival window, so a shedding system plans for the *survivor*
+        rate and can never provision its way out of overload. Fold the
+        per-period shed delta back into the demand the solver sees —
+        the door's decision becomes a solver signal, not a door-side
+        secret. Off by default (bit-identical goldens)."""
+        if not getattr(self.serving, "shed_feedback", False):
+            return demand
+        shed = int(getattr(telemetry, "shed_admission", 0) or 0)
+        delta = max(shed - self._last_shed, 0)
+        self._last_shed = shed
+        period = max(self.serving.control_period_s, 1e-9)
+        return demand + delta / period
 
     def _live_classes(self, telemetry: Telemetry) -> dict:
         """Worker-class table (``{name: WorkerClass}``, latency profiles

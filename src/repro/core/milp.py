@@ -56,6 +56,11 @@ class AllocationPlan:
     # $/hour of the chosen assignment (only when the solver was given
     # per-class costs); the cost-weighted objective's tie-break value
     cost: Optional[float] = None
+    # per-tier per-stage worker split (serving/microserve.py): only set
+    # when the solver was handed a StageGraph — the stage engine plans
+    # stage fleets from it, not just tier fleets. None for tier-level
+    # plans (the classic path, bit-identical).
+    stage_workers: Optional[Tuple[Tuple[int, ...], ...]] = None
 
     def cost_per_query(self, demand_qps: float) -> Optional[float]:
         """$/query at the given demand (cost rate / arrival rate)."""
@@ -138,6 +143,18 @@ def _pad(vals: Optional[Sequence[float]], n: int) -> Tuple[float, ...]:
     return (out + (0.0,) * n)[:n]
 
 
+def _with_stage_split(plan: AllocationPlan, stage_graph,
+                      spec) -> AllocationPlan:
+    """Per-stage allocation mode: attach the stage graph's waterfill
+    split of the tier-level worker counts (duck-typed — the graph lives
+    in serving/microserve.py; core stays serving-free)."""
+    if stage_graph is None or plan.stage_workers is not None:
+        return plan
+    return dataclasses.replace(
+        plan, stage_workers=stage_graph.split_workers(
+            spec, plan.batches, plan.workers))
+
+
 def solve_cascade(
     cascade: "CascadeSpec | CascadeConfig",
     serving: ServingConfig,
@@ -150,10 +167,13 @@ def solve_cascade(
     queuing_model: str = "littles_law",   # | "proteus_2x" (ablation)
     fixed_thresholds: Optional[Sequence[float]] = None,
     fixed_batches: Optional[Sequence[int]] = None,
+    stage_graph=None,
 ) -> AllocationPlan:
     """Exact N-tier solver: enumerate batch tuples, close the integer
     worker counts and deferral thresholds tier-by-tier from residual
-    capacity (see module docstring)."""
+    capacity (see module docstring). ``stage_graph`` (a
+    serving/microserve.py ``StageGraph``) additionally splits each
+    tier's workers into per-stage fleets on the returned plan."""
     t0 = time.perf_counter()
     spec = as_cascade_spec(cascade)
     if isinstance(profiles, DeferralProfile):
@@ -258,12 +278,15 @@ def solve_cascade(
         x0 = min(S, max(int(math.ceil(
             lam_D / profs[0].throughput(batches[0]))), 1))
         workers = (x0, max(S - x0, 0)) + (0,) * (n - 2)
-        return AllocationPlan(workers=workers, batches=batches,
-                              thresholds=(0.0,) * spec.num_boundaries,
-                              expected_latency=profs[0].exec_latency(
-                                  batches[0]),
-                              feasible=False, solve_ms=ms, objective=0.0)
-    return dataclasses.replace(best, solve_ms=ms)
+        return _with_stage_split(
+            AllocationPlan(workers=workers, batches=batches,
+                           thresholds=(0.0,) * spec.num_boundaries,
+                           expected_latency=profs[0].exec_latency(
+                               batches[0]),
+                           feasible=False, solve_ms=ms, objective=0.0),
+            stage_graph, spec)
+    return _with_stage_split(dataclasses.replace(best, solve_ms=ms),
+                             stage_graph, spec)
 
 
 def solve_allocation(
@@ -589,6 +612,7 @@ def solve_heterogeneous_cascade(
     fixed_batches: Optional[Sequence[int]] = None,
     threshold_grid: Optional[int] = None,
     class_costs: Optional[Mapping[str, float]] = None,
+    stage_graph=None,
 ) -> AllocationPlan:
     """Exact N-tier heterogeneous solver (paper §5 generalized from the
     hardwired light/heavy pair): an ILP over ``x[tier][class]`` with
@@ -825,14 +849,17 @@ def solve_heterogeneous_cascade(
             fb_cost = sum(alloc.get(names[c], 0) * costs[c]
                           for alloc in class_workers
                           for c in range(len(names)))
-        return AllocationPlan(workers=workers, batches=batches,
-                              thresholds=(0.0,) * spec.num_boundaries,
-                              expected_latency=profs[0].exec_latency(
-                                  batches[0]),
-                              feasible=False, solve_ms=ms, objective=0.0,
-                              class_workers=tuple(class_workers),
-                              cost=fb_cost)
-    return dataclasses.replace(best, solve_ms=ms)
+        return _with_stage_split(
+            AllocationPlan(workers=workers, batches=batches,
+                           thresholds=(0.0,) * spec.num_boundaries,
+                           expected_latency=profs[0].exec_latency(
+                               batches[0]),
+                           feasible=False, solve_ms=ms, objective=0.0,
+                           class_workers=tuple(class_workers),
+                           cost=fb_cost),
+            stage_graph, spec)
+    return _with_stage_split(dataclasses.replace(best, solve_ms=ms),
+                             stage_graph, spec)
 
 
 def plan_tier_latencies(cascade: "CascadeSpec | CascadeConfig",

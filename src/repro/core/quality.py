@@ -28,7 +28,9 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import json
 import math
+import pathlib
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -222,3 +224,36 @@ class BoundaryQualityModel:
             out.append((float(t), f,
                         self._quality_model().fid(f, router)))
         return out
+
+
+# ---------------------------------------------------------------------------
+# Persistence (cluster-fitted models survive the process)
+# ---------------------------------------------------------------------------
+def save_quality_models(path, models: Sequence[BoundaryQualityModel]):
+    """Persist per-boundary models as JSON (one dict per boundary).
+    Floats go through ``repr`` via json, so ``load_quality_models``
+    round-trips bit-identically — a cluster run's discriminator-fitted
+    models can seed later simulator or cluster sessions."""
+    payload = [{
+        "scores": list(m.scores),
+        "fid_keep": m.fid_keep,
+        "fid_defer": m.fid_defer,
+        "fid_best_mix": m.fid_best_mix,
+        "best_mix_defer_frac": m.best_mix_defer_frac,
+    } for m in models]
+    pathlib.Path(path).write_text(json.dumps(payload, indent=1))
+
+
+def load_quality_models(path) -> Tuple[BoundaryQualityModel, ...]:
+    """Inverse of ``save_quality_models``: one fitted
+    ``BoundaryQualityModel`` per boundary, scores and anchors exactly
+    as saved."""
+    payload = json.loads(pathlib.Path(path).read_text())
+    return tuple(
+        BoundaryQualityModel(
+            scores=tuple(float(s) for s in d["scores"]),
+            fid_keep=float(d["fid_keep"]),
+            fid_defer=float(d["fid_defer"]),
+            fid_best_mix=float(d["fid_best_mix"]),
+            best_mix_defer_frac=float(d["best_mix_defer_frac"]))
+        for d in payload)

@@ -31,6 +31,7 @@ from repro.serving.baselines import (BASELINES, CONTROLLERS,
                                      list_controllers, run_controller)
 from repro.serving.controlplane import ESTIMATORS
 from repro.serving.forecast import FORECASTERS
+from repro.serving.microserve import STAGES
 from repro.serving.profiles import (class_costs_from_arg, default_serving,
                                     list_cascades, resolve_cascade,
                                     worker_classes_from_arg)
@@ -98,6 +99,26 @@ def main():
     ap.add_argument("--ecn-shed-mult", type=float, default=4.0,
                     help="queue-depth admission: hard-shed depth as a "
                     "multiple of the ECN mark threshold k (default 4)")
+    ap.add_argument("--stage-graph", default="off",
+                    choices=sorted(STAGES),
+                    help="stage-granular micro-serving "
+                    "(serving/microserve.py): off (default, classic "
+                    "whole-tier path) / whole-tier (stage engine, one "
+                    "stage per tier) / micro (encode/denoise/decode "
+                    "split with continuous step batching + "
+                    "confidence-based preemption)")
+    ap.add_argument("--stage-denoise-steps", type=int, default=8,
+                    help="micro stage graph: denoise step count per "
+                    "tier (per-query steps become a second quality "
+                    "knob via preemption)")
+    ap.add_argument("--stage-preempt-frac", type=float, default=0.5,
+                    help="micro stage graph: earliest preemption point "
+                    "as a fraction of the denoise steps (confident "
+                    "queries exit to decode after ceil(frac*steps))")
+    ap.add_argument("--shed-feedback", action="store_true",
+                    help="fold the admission door's shed rate back "
+                    "into the solver's demand prior (plan for offered "
+                    "load, not just survivors)")
     ap.add_argument("--admission-rate", type=float, default=0.0,
                     help="token-bucket admission: sustained admit rate "
                     "in qps (required for --admission token-bucket)")
@@ -211,7 +232,13 @@ def main():
                  f"{args.forecast_horizon}")
     if args.warm_pool < 0:
         ap.error(f"--warm-pool must be >= 0, got {args.warm_pool}")
-    serving = default_serving(spec, num_workers=args.workers,
+    if args.stage_denoise_steps < 1:
+        ap.error(f"--stage-denoise-steps must be >= 1, got "
+                 f"{args.stage_denoise_steps}")
+    if not 0 < args.stage_preempt_frac <= 1:
+        ap.error(f"--stage-preempt-frac must be in (0, 1], got "
+                 f"{args.stage_preempt_frac}")
+    serving = default_serving(cascade=spec, num_workers=args.workers,
                               worker_classes=wcs, class_costs=costs,
                               controller=controller,
                               estimator=args.estimator or "ewma",
@@ -226,7 +253,11 @@ def main():
                               ecn_k=args.ecn_k,
                               ecn_shed_mult=args.ecn_shed_mult,
                               admission_rate_qps=args.admission_rate,
-                              admission_burst_s=args.admission_burst)
+                              admission_burst_s=args.admission_burst,
+                              stage_graph=args.stage_graph,
+                              stage_denoise_steps=args.stage_denoise_steps,
+                              stage_preempt_frac=args.stage_preempt_frac,
+                              shed_feedback=args.shed_feedback)
     r = run_controller(controller, trace, serving, seed=args.seed,
                        estimator=args.estimator)
 
@@ -258,6 +289,14 @@ def main():
         "threshold_timeline": r.threshold_timeline[:: max(
             len(r.threshold_timeline) // 50, 1)],
     }
+    if serving.stage_graph != "off":
+        report["stage_graph"] = serving.stage_graph
+        report["dropped_stage"] = r.dropped_stage
+        report["preempted_early"] = r.preempted_early
+        report["stage_denoise_steps"] = serving.stage_denoise_steps
+        report["stage_preempt_frac"] = serving.stage_preempt_frac
+    if serving.shed_feedback:
+        report["shed_feedback"] = True
     if serving.admission == "queue-depth":
         report["ecn_k"] = serving.ecn_k
         report["ecn_shed_mult"] = serving.ecn_shed_mult

@@ -277,13 +277,15 @@ def assemble_bundle(name: Optional[str], trace: Trace,
                     serving: ServingConfig, *, seed: int = 0,
                     estimator: Optional[str] = None,
                     allocator_options: Optional[AllocatorOptions] = None,
-                    fixed_plan=_UNSET):
+                    fixed_plan=_UNSET, profiles=None):
     """Resolve a registry bundle into its runnable pieces — (bundle,
     profiles, fixed_plan, control, confidence_fn) — the single place
     bundle fields become a ControlPlane, shared by ``run_controller``
     and examples/serve_cascade.py so the wiring cannot drift.
     ``fixed_plan`` overrides the bundle's provisioning solve when given
-    (``None`` forces a dynamic planner)."""
+    (``None`` forces a dynamic planner); ``profiles`` overrides the
+    offline synthetic boundary fit (e.g. ``--quality-models`` loads a
+    cluster run's discriminator-fitted calibration)."""
     name = (name or serving.controller).lower()
     try:
         bundle = CONTROLLERS[name]
@@ -297,7 +299,9 @@ def assemble_bundle(name: Optional[str], trace: Trace,
     if bundle.admission is not None and serving.admission != bundle.admission:
         serving = dataclasses.replace(serving, admission=bundle.admission)
     spec = as_cascade_spec(serving.cascade)
-    profiles = make_profiles(serving, seed, uniform=bundle.uniform_profile)
+    if profiles is None:
+        profiles = make_profiles(serving, seed,
+                                 uniform=bundle.uniform_profile)
     if fixed_plan is _UNSET:
         peak = float(np.max(trace.qps))
         fixed_plan = (bundle.plan_fn(spec, serving, profiles, peak)
@@ -338,6 +342,17 @@ def run_controller(name: Optional[str], trace: Trace, serving: ServingConfig,
     sim_kw = dict(seed=seed, router=bundle.router,
                   arrival_stage=bundle.arrival_stage, fixed_plan=plan)
     sim_kw.update(overrides)
+    if getattr(serving, "stage_graph", "off") not in ("off", "", None):
+        # stage-granular micro-serving (serving/microserve.py): the
+        # stage engine replays the same trace through per-stage queues
+        from repro.serving.microserve import (StageGraphSimulator,
+                                              make_stage_graph)
+        graph = make_stage_graph(serving.stage_graph, serving)
+        eng = StageGraphSimulator(serving, profiles, graph,
+                                  SimConfig(**sim_kw),
+                                  confidence_fn=confidence_fn,
+                                  control=control)
+        return eng.run(trace)
     sim = Simulator(serving, profiles, SimConfig(**sim_kw),
                     confidence_fn=confidence_fn, control=control)
     return sim.run(trace)

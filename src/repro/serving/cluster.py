@@ -262,6 +262,26 @@ class ClusterBackend:
         # overload hardening: serve() adopts the control plane's policy;
         # direct submit() callers get the accept-all baseline
         self.admission: AdmissionPolicy = AcceptAllAdmission()
+        # real discriminator confidences observed per boundary (only when
+        # the real discriminator scored them) — the calibration corpus
+        # ``fitted_quality_models`` persists via --save-quality-models
+        self._conf_samples: List[List[float]] = [
+            [] for _ in range(self.spec.num_boundaries)]
+        # stage-granular micro-serving (serving/microserve.py): the
+        # discriminator decouples from the tier worker onto per-boundary
+        # disc queues drained by a dedicated clock on the *cheapest*
+        # class present — tier slices free up as soon as images exist,
+        # and routing decisions land at disc-done time
+        self.stage_mode = getattr(serving, "stage_graph", "off") \
+            not in ("off", "", None)
+        # (ready_t, batch, confs, wall_s) awaiting the boundary's disc
+        self.disc_queues: List[deque] = [
+            deque() for _ in range(self.spec.num_boundaries)]
+        self._disc_busy: List[float] = [0.0] * self.spec.num_boundaries
+        cheap = min(serving.worker_classes, key=lambda wc: wc.speed,
+                    default=None)
+        self._disc_speed = cheap.speed if cheap else 1.0
+        self.disc_class = cheap.name if cheap else ""
         self.result = SimResult(
             completed_per_tier=[0] * self.num_tiers,
             tier_processed=[0] * self.num_tiers,
@@ -300,9 +320,15 @@ class ClusterBackend:
                       live_by_class=tuple(sorted(by_class.items())))
 
     def telemetry_window(self) -> Telemetry:
+        # queries parked at a boundary's disc queue still belong to the
+        # emitting tier's backlog (they hold no downstream decision yet)
+        disc_depth = [0.0] * self.num_tiers
+        for b, dq in enumerate(self.disc_queues):
+            disc_depth[b] += sum(len(entry[1]) for entry in dq)
         return windowed_telemetry(self.now, self.serving.control_period_s,
                                   self._arrivals_window,
-                                  tuple(float(len(q)) for q in self.queues),
+                                  tuple(float(len(q)) + disc_depth[i]
+                                        for i, q in enumerate(self.queues)),
                                   self.profiles, self.thresholds,
                                   self.census(),
                                   drops=(self.result.shed_admission,
@@ -417,6 +443,13 @@ class ClusterBackend:
                 f"stage for models {missing}; executable: "
                 f"{sorted(self._stages_by_model)}")
         new_n = new_spec.num_tiers
+        # scored-but-unrouted disc batches were judged against the old
+        # boundary: route them now at their ready time, then rebuild the
+        # disc queues at the new boundary count
+        for b, dq in enumerate(self.disc_queues):
+            while dq:
+                ready_t, batch, confs, _w = dq.popleft()
+                self._route_scored(b, batch, confs, ready_t)
         remap, kept = tier_remap(self.spec, new_spec)
         new_queues: List[deque] = [deque() for _ in range(new_n)]
         for i, q in enumerate(self.queues):
@@ -433,6 +466,11 @@ class ClusterBackend:
                 sl.role = None         # variant change: staged reload
         self.spec = new_spec
         self.num_tiers = new_n
+        self.disc_queues = [deque() for _ in range(new_spec.num_boundaries)]
+        self._disc_busy = [0.0] * new_spec.num_boundaries
+        self._conf_samples = [
+            (self._conf_samples[b] if b < len(self._conf_samples) else [])
+            for b in range(new_spec.num_boundaries)]
         self._stage_fns = [self._stages_by_model[t.model]
                            for t in new_spec.tiers]
         if new_profiles is not None:
@@ -585,6 +623,8 @@ class ClusterBackend:
                         continue
                     if self._run_batch_on(sl, tier, t_end):
                         progress = True
+            if self.stage_mode and self._drain_disc(t_end):
+                progress = True
 
     def _run_batch_on(self, sl: WorkerSlice, tier: int,
                       t_end: float) -> bool:
@@ -611,29 +651,63 @@ class ClusterBackend:
             self.result.class_batch_latencies.setdefault(
                 sl.class_name, []).append((len(batch), wall))
         if tier < self.num_tiers - 1:
-            confs = (self.confidence_fn(len(batch), tier)
-                     if self.confidence_fn is not None
-                     else self.runtime.cascade.confidence(imgs))
-            fresh = []
-            for qq, c in zip(batch, confs):
-                qq.confidence = float(c)
-                self.result.tier_processed[tier] += 1
-                if c < self.thresholds[tier]:
-                    qq.stage = tier + 1
-                    qq.deferred = True
-                    qq.enqueued_at = done_t
-                    self.result.deferred_per_boundary[tier] += 1
-                    self.queues[tier + 1].append(qq)
-                else:
-                    self._complete(qq, done_t)
-                fresh.append(float(c))
-            if fresh:
-                self.profiles[tier].update(fresh)   # online f(t) refresh
+            if self.confidence_fn is not None:
+                confs = self.confidence_fn(len(batch), tier)
+                disc_wall = self.spec.tiers[tier].disc_latency_s
+            else:
+                t0 = time.perf_counter()
+                confs = self.runtime.cascade.confidence(imgs)
+                disc_wall = time.perf_counter() - t0
+                self._conf_samples[tier].extend(float(c) for c in confs)
+            if self.stage_mode:
+                # disc stage decoupled: the tier slice is free at done_t;
+                # the routing decision waits for the boundary's disc
+                # clock (a cheap-class device pays the scoring time)
+                self.disc_queues[tier].append(
+                    (done_t, batch, confs, disc_wall))
+            else:
+                self._route_scored(tier, batch, confs, done_t)
         else:
             for qq in batch:
                 self.result.tier_processed[tier] += 1
                 self._complete(qq, done_t)
         return True
+
+    def _route_scored(self, tier: int, batch: List[Query], confs,
+                      done_t: float) -> None:
+        """Apply the boundary's threshold to scored outputs: keep
+        (complete at this tier) or defer to tier+1 at ``done_t``."""
+        fresh = []
+        for qq, c in zip(batch, confs):
+            qq.confidence = float(c)
+            self.result.tier_processed[tier] += 1
+            if c < self.thresholds[tier]:
+                qq.stage = tier + 1
+                qq.deferred = True
+                qq.enqueued_at = done_t
+                self.result.deferred_per_boundary[tier] += 1
+                self.queues[tier + 1].append(qq)
+            else:
+                self._complete(qq, done_t)
+            fresh.append(float(c))
+        if fresh:
+            self.profiles[tier].update(fresh)   # online f(t) refresh
+
+    def _drain_disc(self, t_end: float) -> bool:
+        """Stage mode: drain per-boundary disc queues on the dedicated
+        disc clock (scaled to the cheapest class's speed) — scored
+        batches route at disc-done time, not tier-done time."""
+        progress = False
+        for b, dq in enumerate(self.disc_queues):
+            while dq and dq[0][0] <= t_end and self._disc_busy[b] < t_end:
+                ready_t, batch, confs, disc_wall = dq.popleft()
+                start = max(self._disc_busy[b], ready_t)
+                wall = disc_wall / max(self._disc_speed, 1e-9)
+                done_t = start + wall
+                self._disc_busy[b] = done_t
+                self._route_scored(b, batch, confs, done_t)
+                progress = True
+        return progress
 
     def _complete(self, q: Query, done_t: float) -> None:
         q.done_at = done_t
@@ -695,7 +769,8 @@ class ClusterBackend:
                 quality_model or QualityModel.from_cascade(self.spec),
                 t_end)
             t = t_end
-            if (not pending and not any(self.queues)):
+            if (not pending and not any(self.queues)
+                    and not any(self.disc_queues)):
                 break
         # grace drain to exhaustion past the horizon (the simulator
         # backend drains its event queue the same way). Each pass opens
@@ -705,27 +780,35 @@ class ClusterBackend:
         # queues whose tier no slice holds are left over, dropped as
         # violations
         t_grace = end_t
-        while any(self.queues):
+        while any(self.queues) or any(self.disc_queues):
             servable = any(
                 q and any(sl.role == tier and self._schedulable(sl)
                           for sl in self.runtime.slices)
-                for tier, q in enumerate(self.queues))
+                for tier, q in enumerate(self.queues)) \
+                or any(self.disc_queues)   # disc clocks always exist
             if not servable:
                 break
             horizon = max(
-                max(self.busy_until.values(), default=t_grace),
-                max(qq.enqueued_at for q in self.queues for qq in q))
+                [max(self.busy_until.values(), default=t_grace)]
+                + [qq.enqueued_at for q in self.queues for qq in q]
+                + [entry[0] for dq in self.disc_queues for entry in dq]
+                + list(self._disc_busy))
             t_grace = max(t_grace, horizon) + period
             before = self._progress_state()
             self._drain(t_grace)
             if self._progress_state() == before:
                 break              # safety valve against unforeseen stalls
-        for q in [qq for queue in self.queues for qq in queue]:
+        leftovers = [qq for queue in self.queues for qq in queue]
+        leftovers += [qq for dq in self.disc_queues
+                      for entry in dq for qq in entry[1]]
+        for q in leftovers:
             q.dropped = True
             self.result.dropped_deadline += 1
             self.result.violations += 1
         for queue in self.queues:
             queue.clear()
+        for dq in self.disc_queues:
+            dq.clear()
         return self.result
 
     def _progress_state(self):
@@ -733,8 +816,35 @@ class ClusterBackend:
         cascade depth all count (a pass that only defers queries deeper
         is progress — they complete on a later pass)."""
         return (self.result.completed,
-                sum(len(q) for q in self.queues),
+                sum(len(q) for q in self.queues)
+                + sum(len(e[1]) for dq in self.disc_queues for e in dq),
                 sum(qq.stage for q in self.queues for qq in q))
+
+    def fitted_quality_models(self):
+        """Per-boundary ``BoundaryQualityModel``s fitted from this run's
+        *real* discriminator confidences (``_conf_samples``), with the
+        same FID-anchor scheme as ``autocascade.fit_boundary_models`` —
+        the object ``--save-quality-models`` persists so a later session
+        can plan from measured calibration instead of the synthetic
+        stand-in. Boundaries the run never scored (e.g. everything kept
+        at tier 0) fall back to the offline synthetic fit."""
+        from repro.core.quality import BoundaryQualityModel
+        from repro.serving.autocascade import fit_boundary_models
+        spec = self.spec
+        fids = spec.fid_per_tier or None
+        fallback = fit_boundary_models(spec)
+        out = []
+        for b in range(spec.num_boundaries):
+            if not self._conf_samples[b]:
+                out.append(fallback[b])
+                continue
+            out.append(BoundaryQualityModel.fit(
+                self._conf_samples[b],
+                fid_keep=fids[b] if fids else spec.fid_all_light,
+                fid_defer=fids[b + 1] if fids else spec.fid_all_heavy,
+                fid_best_mix=spec.fid_best_mix,
+                best_mix_defer_frac=spec.best_mix_defer_frac))
+        return tuple(out)
 
     def _prune_window(self):
         """Bound the arrival window even when the planner never reads

@@ -423,8 +423,14 @@ def build_control_plane(spec, serving: ServingConfig,
     elif fixed_plan is not None:
         planner = FixedPlanPolicy(fixed_plan)
     else:
+        stage_graph = None
+        if getattr(serving, "stage_graph", "off") not in (None, "", "off"):
+            # lazy: microserve imports this module for the backend base
+            from repro.serving.microserve import make_stage_graph
+            stage_graph = make_stage_graph(serving.stage_graph, serving)
         planner = SolverPlanner(ResourceManager(spec, serving, profiles,
-                                                allocator_options))
+                                                allocator_options,
+                                                stage_graph=stage_graph))
     if scaling is None:
         name = getattr(serving, "scaler", "heartbeat") or "heartbeat"
         if name == "heartbeat":

@@ -102,7 +102,7 @@ class SimConfig:
 # just declaring a field.
 CONSERVATION_FIELDS: Tuple[str, ...] = (
     "completed", "shed_admission", "dropped_predictive",
-    "dropped_deadline")
+    "dropped_deadline", "dropped_stage")
 
 
 @dataclasses.dataclass
@@ -114,6 +114,10 @@ class SimResult:
     shed_admission: int = 0
     dropped_predictive: int = 0
     dropped_deadline: int = 0
+    # stage-graph runs (serving/microserve.py): queries still queued in
+    # a micro-stage or riding a slot batch when the horizon closes;
+    # always 0 on the classic whole-tier path (golden-pinned)
+    dropped_stage: int = 0
     violations: int = 0
     total: int = 0
     deferred: int = 0
@@ -153,6 +157,13 @@ class SimResult:
         dataclasses.field(default_factory=list)
     # discrete events pumped (BENCH_serving.json event-throughput metric)
     events_processed: int = 0
+    # queries that exited denoise early on discriminator confidence
+    # (stage-graph runs; serving/microserve.py)
+    preempted_early: int = 0
+    # (t, ((tier, stage, queued, in_service), ...)) per control tick —
+    # the stage engine's per-stage occupancy timeline
+    stage_timeline: List[Tuple[float, Tuple]] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def cascade_switches(self) -> int:
@@ -165,7 +176,8 @@ class SimResult:
         admitted, so it is neither a violation nor a drop — under the
         accept-all baseline this property is bit-identical to the old
         single counter (golden-pinned)."""
-        return self.dropped_predictive + self.dropped_deadline
+        return (self.dropped_predictive + self.dropped_deadline
+                + self.dropped_stage)
 
     def conserved(self) -> bool:
         """The conservation identity over the split drop taxonomy."""

@@ -1,0 +1,338 @@
+"""Disaggregated micro-serving (serving/microserve.py).
+
+Unit tests for the stage-graph registry, the waterfill stage split, the
+step-granular DenoiseQueue (continuous batching joins at step k,
+confidence-based preemption), and the solver's per-stage allocation
+mode — plus a randomized stage-conservation fuzz over the
+``StageGraphSimulator``: every query is accounted for exactly once in
+the split drop taxonomy AND every stage's entered == exited flow
+balances after the end-of-run drain (preempted early-exits included).
+
+The pinned regressions: ``--stage-graph off`` keeps the classic
+whole-tier path bit-identical to the control-plane goldens, and at 16x
+offered load the micro graph sustains strictly higher goodput than
+whole-tier serving on the same engine and worker budget (the
+``microserve_throughput`` benchmark's headline, pinned as a test).
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.config.base import ServingConfig
+from repro.core.milp import Telemetry, solve_cascade
+from repro.core.quality import (BoundaryQualityModel, load_quality_models,
+                                save_quality_models)
+from repro.serving.autocascade import fit_boundary_models
+from repro.serving.baselines import make_profiles, run_baseline, run_controller
+from repro.serving.microserve import (STAGES, DenoiseQueue,
+                                      StageGraphSimulator, StageSpec,
+                                      StageGraph, _waterfill,
+                                      make_stage_graph, micro_graph,
+                                      stage_latency, whole_tier_graph)
+from repro.serving.profiles import default_serving
+from repro.serving.simulator import Query, SimConfig
+from repro.serving.trace import azure_like_trace, incast_trace, static_trace
+from repro.testing.golden import sim_fingerprint as fingerprint
+from repro.testing.hypo import given, settings, st
+
+from test_controlplane import GOLDEN
+
+
+# ---------------------------------------------------------------------------
+# Registry + graph validation
+# ---------------------------------------------------------------------------
+def test_stage_registry_and_factories():
+    assert sorted(STAGES) == ["micro", "off", "whole-tier"]
+    sv = default_serving("sdturbo", num_workers=8)
+    assert make_stage_graph("off", sv) is None
+    wt = make_stage_graph("whole-tier", sv)
+    assert wt.num_tiers == 2
+    assert all(len(chain) == 1 for chain in wt.tiers)
+    assert wt.tiers[0][0].disc and not wt.tiers[1][0].disc
+    mg = make_stage_graph("micro", sv)
+    # non-final tier: encode/denoise/decode + dedicated disc stage
+    assert [s.name for s in mg.tiers[0]] == [
+        "encode", "denoise", "decode", "discriminate"]
+    assert [s.name for s in mg.tiers[1]] == ["encode", "denoise", "decode"]
+    assert mg.denoise_index(0) == 1 and mg.denoise_index(1) == 1
+    with pytest.raises(KeyError, match="unknown stage graph"):
+        make_stage_graph("nope", sv)
+
+
+def test_stage_spec_and_graph_validation():
+    with pytest.raises(ValueError, match="stage kind"):
+        StageSpec("x", kind="warp")
+    with pytest.raises(ValueError, match="share"):
+        StageSpec("x", share=-0.1)
+    with pytest.raises(ValueError, match="steps"):
+        StageSpec("x", steps=0)
+    ok = (StageSpec("a", share=0.5), StageSpec("b", share=0.5))
+    with pytest.raises(ValueError, match="shares sum"):
+        StageGraph("bad", ((StageSpec("a", share=0.5),),))
+    with pytest.raises(ValueError, match="preempt_frac"):
+        StageGraph("bad", (ok,), preempt_frac=0.0)
+    with pytest.raises(ValueError, match=">= 1 stage"):
+        StageGraph("bad", ((),))
+    with pytest.raises(ValueError, match="at most one"):
+        StageGraph("bad", ((StageSpec("a", "denoise", 0.5),
+                            StageSpec("b", "denoise", 0.5)),))
+    # serving-level knob validation threads the same bounds
+    with pytest.raises(ValueError, match="stage_denoise_steps"):
+        default_serving("sdturbo", stage_denoise_steps=0)
+    with pytest.raises(ValueError, match="stage_preempt_frac"):
+        default_serving("sdturbo", stage_preempt_frac=1.5)
+
+
+def test_micro_graph_threads_serving_knobs():
+    sv = default_serving("sdturbo", num_workers=8, stage_graph="micro",
+                         stage_denoise_steps=12, stage_preempt_frac=0.25)
+    g = make_stage_graph(sv.stage_graph, sv)
+    di = g.denoise_index(0)
+    assert g.tiers[0][di].steps == 12
+    assert g.preempt_frac == 0.25
+
+
+# ---------------------------------------------------------------------------
+# Waterfill stage split + solver per-stage allocation mode
+# ---------------------------------------------------------------------------
+def test_waterfill_properties():
+    assert _waterfill([1.0, 1.0], 0) == [0, 0]
+    assert sum(_waterfill([0.1, 0.8, 0.1], 7)) == 7
+    # n >= stages: every stage served before any stage doubles up
+    for n in (3, 5, 9):
+        counts = _waterfill([0.05, 0.80, 0.15], n)
+        assert sum(counts) == n and min(counts) >= 1
+    # the heavy stage soaks up the surplus
+    assert _waterfill([0.05, 0.80, 0.15], 9)[1] >= 5
+
+
+def test_split_workers_follows_stage_demand():
+    sv = default_serving("sdturbo", num_workers=8)
+    g = micro_graph(sv.cascade)
+    split = g.split_workers(sv.cascade, batches=(4, 4), workers=(6, 2))
+    assert len(split) == 2
+    assert [sum(row) for row in split] == [6, 2]
+    # tier 0 has enough workers for every stage; denoise dominates
+    assert len(split[0]) == 4 and min(split[0]) >= 1
+    di = g.denoise_index(0)
+    assert split[0][di] == max(split[0])
+    # stage latencies recompose the tier latency (+ fixed disc cost)
+    spec = sv.cascade
+    total = sum(stage_latency(spec, 0, s, 4) for s in g.tiers[0])
+    expect = spec.tiers[0].profile.exec_latency(4) \
+        + spec.tiers[0].disc_latency_s
+    assert total == pytest.approx(expect)
+
+
+def test_solver_plans_stage_fleets():
+    sv = default_serving("sdturbo", num_workers=8)
+    profiles = make_profiles(sv, 0)
+    g = micro_graph(sv.cascade)
+    plan = solve_cascade(sv.cascade, sv, profiles, demand_qps=6.0,
+                         num_workers=8, stage_graph=g)
+    assert plan.stage_workers is not None
+    assert len(plan.stage_workers) == 2
+    for i, row in enumerate(plan.stage_workers):
+        assert len(row) == len(g.tiers[i])
+        assert sum(row) == plan.workers[i]
+    # without a stage graph the field stays unset (legacy plans)
+    plain = solve_cascade(sv.cascade, sv, profiles, demand_qps=6.0,
+                          num_workers=8)
+    assert plain.stage_workers is None
+
+
+# ---------------------------------------------------------------------------
+# DenoiseQueue: continuous batching + confidence-based preemption
+# ---------------------------------------------------------------------------
+def _q(qid, conf=None):
+    q = Query(qid=qid, arrival=0.0, deadline=10.0)
+    q.confidence = conf
+    return q
+
+
+def test_denoise_join_at_step_k_counts_running_batch_joins():
+    dq = DenoiseQueue(steps=8, preempt_frac=0.5, final=False)
+    slots = []
+    dq.waiting.extend([_q(0), _q(1)])
+    joined = dq.join(slots, cap=4)
+    slots.extend(joined)
+    assert len(slots) == 2 and dq.joins_at_step == 0   # batch was empty
+    stay, done, pre = dq.advance(slots, threshold=0.9)
+    assert (len(stay), len(done), len(pre)) == (2, 0, 0)
+    # a later arrival joins the *running* batch at step 1
+    dq.waiting.append(_q(2))
+    joined = dq.join(stay, cap=4)
+    stay.extend(joined)
+    assert len(stay) == 3 and dq.joins_at_step == 1
+    assert joined[0]._steps_done == 0 and stay[0]._steps_done == 1
+    # admit may consume-and-reject (the predictive-drop hook)
+    dq.waiting.append(_q(3))
+    assert dq.join(stay, cap=4, admit=lambda q: False) == []
+    assert not dq.waiting
+
+
+def test_denoise_preemption_thresholds_and_final_tier():
+    dq = DenoiseQueue(steps=8, preempt_frac=0.5, final=False)
+    assert dq.preempt_min == 4
+    confident, unsure = _q(0, conf=0.95), _q(1, conf=0.2)
+    slots = []
+    dq.waiting.extend([confident, unsure])
+    slots.extend(dq.join(slots, cap=4))
+    for step in range(1, 9):
+        slots, done, pre = dq.advance(slots, threshold=0.8)
+        if step < 4:
+            assert not pre          # below the preemption floor
+        if step == 4:
+            assert pre == [confident] and confident._preempted
+    # the unsure query ran all 8 steps
+    assert done == [unsure] and unsure._steps_done == 8
+    # the final tier never preempts: no boundary to be confident about
+    fq = DenoiseQueue(steps=4, preempt_frac=0.25, final=True)
+    q = _q(2, conf=1.0)
+    slots = []
+    fq.waiting.append(q)
+    slots.extend(fq.join(slots, cap=1))
+    for _ in range(4):
+        slots, done, pre = fq.advance(slots, threshold=0.5)
+        assert not pre
+    assert done == [q]
+
+
+# ---------------------------------------------------------------------------
+# Engine: preemption + continuous joins end to end
+# ---------------------------------------------------------------------------
+def _stage_engine(sv, trace, seed=0, confidence_fn=None):
+    profiles = make_profiles(sv, seed)
+    graph = make_stage_graph(sv.stage_graph, sv)
+    return StageGraphSimulator(sv, profiles, graph, SimConfig(seed=seed),
+                               confidence_fn=confidence_fn)
+
+
+def test_engine_preempts_confident_queries():
+    import numpy as np
+    sv = default_serving("sdturbo", num_workers=8, stage_graph="micro")
+    eng = _stage_engine(sv, None,
+                        confidence_fn=lambda n, b: np.ones(n))
+    r = eng.run(static_trace(30.0, 30).scaled(4.0))
+    assert r.preempted_early > 0
+    # preempted queries complete at their own tier (never deferred past
+    # the boundary they already cleared)
+    assert r.completed > 0
+    assert r.total == (r.completed + r.shed_admission + r.dropped_predictive
+                       + r.dropped_deadline + r.dropped_stage)
+
+
+def test_engine_continuous_batching_joins_mid_flight():
+    sv = default_serving("sdturbo", num_workers=8, stage_graph="micro")
+    eng = _stage_engine(sv, None)
+    eng.run(static_trace(30.0, 30).scaled(4.0))
+    assert eng.step_joins > 0
+    assert eng.step_joins == eng.denoise_joins()
+
+
+def test_engine_stage_timeline_and_snapshot_shape():
+    sv = default_serving("sdturbo", num_workers=8, stage_graph="micro")
+    eng = _stage_engine(sv, None)
+    r = eng.run(static_trace(10.0, 20))
+    assert r.stage_timeline
+    n_stages = sum(len(chain) for chain in eng.graph.tiers)
+    for _t, snap in r.stage_timeline:
+        assert len(snap) == n_stages
+        for tier, si, queued, in_service in snap:
+            assert queued >= 0 and in_service >= 0
+
+
+# ---------------------------------------------------------------------------
+# Stage conservation fuzz (the test_overload.py battery, per stage)
+# ---------------------------------------------------------------------------
+@given(st.floats(0.5, 8.0), st.integers(4, 48), st.integers(0, 1),
+       st.integers(0, 9999))
+@settings(max_examples=25, deadline=None)
+def test_stage_conservation_fuzz(scale, burst_qps, graph_i, seed):
+    """Across load scale x burst shape x stage graph: the split drop
+    taxonomy sums to total AND every stage queue's entered == exited
+    after the drain — joins at step k and preempted early exits
+    included."""
+    name = ("whole-tier", "micro")[graph_i]
+    sv = default_serving("sdturbo", num_workers=4, stage_graph=name)
+    tr = incast_trace(20, base_qps=2.0, burst_qps=float(burst_qps),
+                      burst_every_s=7.0, burst_width_s=1.5,
+                      seed=seed % 11)
+    eng = _stage_engine(sv, None, seed=seed)
+    r = eng.run(tr.scaled(scale))
+    assert r.conserved()
+    assert r.total == (r.completed + r.shed_admission + r.dropped_predictive
+                       + r.dropped_deadline + r.dropped_stage)
+    assert r.dropped == (r.dropped_predictive + r.dropped_deadline
+                         + r.dropped_stage)
+    for key, (entered, exited) in eng.stage_flow().items():
+        assert entered == exited, (key, eng.stage_flow())
+
+
+# ---------------------------------------------------------------------------
+# Pinned regressions: off-path goldens + the 16x goodput win
+# ---------------------------------------------------------------------------
+def test_stage_graph_off_reproduces_golden():
+    """The new ServingConfig knobs at their defaults (stage_graph=off)
+    keep the classic whole-tier path bit-identical to the control-plane
+    golden — micro-serving is strictly opt-in."""
+    sv = default_serving("sdturbo", num_workers=16, stage_graph="off",
+                         stage_denoise_steps=8, stage_preempt_frac=0.5)
+    r = run_baseline("diffserve",
+                     azure_like_trace(120, seed=3).scale(4, 32), sv, seed=0)
+    assert fingerprint(r) == GOLDEN["homogeneous"]
+    assert r.dropped_stage == 0 and r.preempted_early == 0
+    assert r.stage_timeline == []
+
+
+def test_micro_beats_whole_tier_goodput_at_16x():
+    """The acceptance bar: at 16x offered load on the same engine and
+    worker budget, confidence-based preemption buys the micro graph
+    strictly higher goodput than whole-tier serving."""
+    tr = static_trace(30.0, 30).scaled(16.0)
+    res = {}
+    for name in ("whole-tier", "micro"):
+        sv = default_serving("sdturbo", num_workers=8, stage_graph=name)
+        res[name] = run_controller("diffserve", tr, sv, seed=0)
+    assert res["micro"].preempted_early > 0
+    assert res["micro"].goodput > res["whole-tier"].goodput
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: shed feedback + quality-model persistence
+# ---------------------------------------------------------------------------
+def test_shed_feedback_raises_solver_demand():
+    from repro.core.allocator import ResourceManager
+    sv = default_serving("sdturbo", num_workers=8, shed_feedback=True)
+    rm = ResourceManager(sv.cascade, sv, make_profiles(sv, 0))
+    tel = Telemetry(demand_qps=4.0, queues=(0.0, 0.0), arrivals=(),
+                    shed_admission=0)
+    assert rm._shed_adjusted(tel, 4.0) == pytest.approx(4.0)
+    shed = dataclasses.replace(tel, shed_admission=50)
+    boosted = rm._shed_adjusted(shed, 4.0)
+    assert boosted == pytest.approx(4.0 + 50 / sv.control_period_s)
+    # cumulative counter: the same shed total adds nothing next tick
+    assert rm._shed_adjusted(shed, 4.0) == pytest.approx(4.0)
+    # off by default: the door's secret stays door-side
+    sv_off = default_serving("sdturbo", num_workers=8)
+    rm_off = ResourceManager(sv_off.cascade, sv_off,
+                             make_profiles(sv_off, 0))
+    assert rm_off._shed_adjusted(shed, 4.0) == pytest.approx(4.0)
+
+
+def test_quality_models_json_roundtrip(tmp_path):
+    sv = default_serving("sdturbo", num_workers=4)
+    models = fit_boundary_models(sv.cascade, seed=0)
+    path = tmp_path / "models.json"
+    save_quality_models(path, models)
+    loaded = load_quality_models(path)
+    assert loaded == tuple(models)
+    # the payload is plain JSON: one dict per boundary
+    payload = json.loads(path.read_text())
+    assert len(payload) == len(models)
+    assert set(payload[0]) == {"scores", "fid_keep", "fid_defer",
+                               "fid_best_mix", "best_mix_defer_frac"}
+    # the profile construction path survives the round-trip bit-for-bit
+    assert (loaded[0].deferral_profile().f(0.5)
+            == models[0].deferral_profile().f(0.5))

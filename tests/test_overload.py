@@ -6,8 +6,9 @@ Fuzzes the serving simulator across trace scale, synchronized-burst
 asserts the two overload invariants:
 
   conservation   total == completed + shed_admission +
-                 dropped_predictive + dropped_deadline (and the legacy
-                 ``dropped`` aggregate == predictive + deadline)
+                 dropped_predictive + dropped_deadline + dropped_stage
+                 (and the legacy ``dropped`` aggregate == predictive +
+                 deadline + stage)
   monotonicity   completion quality (mean FID) is non-increasing as
                  offered load scales up — degradation is graceful, with
                  no regime where *more* load yields *better* quality
@@ -62,8 +63,9 @@ def _check_conservation(r):
     assert r.conserved(), {f: getattr(r, f) for f in
                            ("total",) + CONSERVATION_FIELDS}
     assert (r.completed + r.shed_admission + r.dropped_predictive
-            + r.dropped_deadline == r.total)
-    assert r.dropped == r.dropped_predictive + r.dropped_deadline
+            + r.dropped_deadline + r.dropped_stage == r.total)
+    assert r.dropped == (r.dropped_predictive + r.dropped_deadline
+                         + r.dropped_stage)
     assert min(getattr(r, f) for f in CONSERVATION_FIELDS) >= 0
 
 
@@ -368,6 +370,7 @@ def _serve_report(tmp_path, monkeypatch, name, extra):
 def _assert_report_conserved(rep):
     assert (rep["completed"] + rep["shed_admission"]
             + rep["dropped_predictive"] + rep["dropped_deadline"]
+            + rep.get("dropped_stage", 0)
             == rep["total_queries"])
 
 
@@ -387,6 +390,28 @@ def test_cli_threads_ecn_shed_mult(tmp_path, monkeypatch, capsys):
     assert tight["shed_admission"] > loose["shed_admission"]
     _assert_report_conserved(tight)
     _assert_report_conserved(loose)
+
+
+def test_cli_threads_stage_graph(tmp_path, monkeypatch, capsys):
+    rep = _serve_report(tmp_path, monkeypatch, "micro",
+                        ["--stage-graph", "micro",
+                         "--stage-denoise-steps", "4",
+                         "--stage-preempt-frac", "0.25"])
+    capsys.readouterr()
+    assert rep["stage_graph"] == "micro"
+    assert rep["stage_denoise_steps"] == 4
+    assert rep["stage_preempt_frac"] == 0.25
+    assert rep["preempted_early"] >= 0
+    _assert_report_conserved(rep)
+
+
+def test_cli_threads_shed_feedback(tmp_path, monkeypatch, capsys):
+    rep = _serve_report(tmp_path, monkeypatch, "shedfb",
+                        ["--shed-feedback", "--admission", "queue-depth",
+                         "--ecn-k", "1", "--load-scale", "8"])
+    capsys.readouterr()
+    assert rep["shed_feedback"] is True
+    _assert_report_conserved(rep)
 
 
 def test_cli_threads_admission_burst(tmp_path, monkeypatch, capsys):
