@@ -1,0 +1,68 @@
+"""Per-stage perf ratchet over BENCH_serving.json's ``stages`` block.
+
+CI regenerates the fingerprint and compares it against the committed
+one: a >25% regression in any tier's mean e(b) wall, or in any jitted
+fn's compiled-program count (the bucketing invariant), fails the build.
+Legitimate regressions (e.g. a deliberately heavier kernel) land by
+re-running the bench locally, committing the new JSON, and setting
+``BENCH_RATCHET_OVERRIDE=1`` on the CI step for that PR.
+
+usage: python benchmarks/ratchet.py COMMITTED.json FRESH.json
+"""
+import json
+import os
+import pathlib
+import sys
+
+TOLERANCE = 1.25            # >25% worse fails
+
+
+def _tier_means(stages: dict) -> list:
+    return [sum(eb.values()) / max(len(eb), 1)
+            for eb in stages.get("tiers_e_ms", [])]
+
+
+def compare(old: dict, new: dict) -> list:
+    """Regression messages (empty = ratchet holds)."""
+    old_st, new_st = old.get("stages"), new.get("stages")
+    if not old_st:
+        return []                       # no committed baseline yet
+    if not new_st:
+        return ["fresh BENCH_serving.json lost its 'stages' block"]
+    problems = []
+    for i, (om, nm) in enumerate(zip(_tier_means(old_st),
+                                     _tier_means(new_st))):
+        if nm > TOLERANCE * om:
+            problems.append(
+                f"tier {i} mean e(b) regressed {om:.3f} -> {nm:.3f} ms "
+                f"(>{(TOLERANCE - 1) * 100:.0f}%)")
+    for i, (oc, nc) in enumerate(zip(old_st.get("compile_counts", []),
+                                     new_st.get("compile_counts", []))):
+        if nc > TOLERANCE * oc:
+            problems.append(
+                f"jitted fn {i} compile count regressed {oc} -> {nc} "
+                "(bucketing no longer bounds compiled programs)")
+    return problems
+
+
+def main(argv) -> int:
+    if len(argv) != 3:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    old = json.loads(pathlib.Path(argv[1]).read_text())
+    new = json.loads(pathlib.Path(argv[2]).read_text())
+    problems = compare(old, new)
+    for p in problems:
+        print(f"ratchet: {p}", file=sys.stderr)
+    if problems and os.environ.get("BENCH_RATCHET_OVERRIDE") == "1":
+        print("ratchet: BENCH_RATCHET_OVERRIDE=1 set — accepting the "
+              "regression", file=sys.stderr)
+        return 0
+    if not problems:
+        print("ratchet: per-stage e(b) and compile counts within "
+              f"{(TOLERANCE - 1) * 100:.0f}% of the committed baseline")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

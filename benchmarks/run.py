@@ -18,6 +18,50 @@ OUT = (pathlib.Path(__file__).resolve().parents[1]
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
+def _stage_latencies(kernel_impl: str, buckets: tuple, batches: tuple):
+    """Really execute a tiny 2-tier attention cascade at each batch size:
+    per-tier best-of-3 wall ms per batch, plus the cascade's compiled-
+    program counts (stage samplers in order, then the discriminator).
+    Warm-up happens before timing, so walls are steady-state e(b)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config.base import DiffusionConfig
+    from repro.core.cascade import DiffusionCascade
+    from repro.models.efficientnet import (DiscriminatorConfig,
+                                           init_discriminator)
+    from repro.models.unet import init_unet
+
+    stages = []
+    for i in range(2):
+        cfg = DiffusionConfig(
+            name=f"bench-tier{i}", image_size=8, in_channels=3,
+            base_channels=8, channel_mults=(1,), num_res_blocks=1,
+            attn_resolutions=(8,), num_heads=2, num_steps=1 + i,
+            text_dim=16)
+        stages.append((cfg, init_unet(jax.random.PRNGKey(i), cfg)))
+    dcfg = DiscriminatorConfig(stages=((16, 1, 1, 1), (24, 1, 2, 4)),
+                               head_channels=32, in_channels=3)
+    casc = DiffusionCascade(stages, dcfg,
+                            init_discriminator(jax.random.PRNGKey(9), dcfg),
+                            kernel_impl=kernel_impl, batch_buckets=buckets)
+    per_tier = []
+    for cfg, fn, params in casc.stage_fns():
+        eb = {}
+        for b in batches:
+            toks = jnp.zeros((b, 8), jnp.int32)
+            key = jax.random.PRNGKey(0)
+            fn(params, key, toks).block_until_ready()     # compile warm
+            walls = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                fn(params, key, toks).block_until_ready()
+                walls.append(time.perf_counter() - t0)
+            eb[str(b)] = round(min(walls) * 1e3, 3)
+        per_tier.append(eb)
+    return per_tier, casc.compile_counts(), casc.kernel_impl
+
+
 def bench_serving(out_path: pathlib.Path) -> dict:
     """The serving perf fingerprint CI tracks (BENCH_serving.json at the
     repo root): control-tick wall time, simulator event throughput, and
@@ -58,6 +102,16 @@ def bench_serving(out_path: pathlib.Path) -> dict:
         sv_m = default_serving("sdturbo", num_workers=8, stage_graph=sg)
         rm = run_controller("diffserve", deep, sv_m, seed=0)
         micro_res[sg] = rm
+    # per-stage kernel hot-path datum: e(b) at every bucket under the
+    # fused kernel plan ("auto" -> the fused jnp oracles on CPU CI) vs
+    # the unfused, unbucketed xla baseline; compile counts pin the
+    # bucketing invariant (<= one program per bucket per jitted fn)
+    buckets = (1, 2, 4, 8)
+    fused_eb, fused_counts, impl_name = _stage_latencies(
+        "auto", buckets, buckets)
+    xla_eb, xla_counts, _ = _stage_latencies("xla", (), buckets)
+    top = str(buckets[-1])
+
     payload = {
         "pinned": {"trace": trace.name, "trace_seed": 3, "sim_seed": 0,
                    "cascade": "sdturbo", "workers": 16,
@@ -93,6 +147,23 @@ def bench_serving(out_path: pathlib.Path) -> dict:
             "micro_goodput_gain": round(
                 micro_res["micro"].goodput
                 - micro_res["whole-tier"].goodput, 6),
+        },
+        "stages": {
+            "kernel_impl": impl_name,
+            "buckets": list(buckets),
+            # per-tier {batch: best-of-3 wall ms}, steady-state (warmed)
+            "tiers_e_ms": fused_eb,
+            # programs compiled per jitted fn (tiers..., discriminator):
+            # the bucket ladder bounds each entry
+            "compile_counts": fused_counts,
+            "xla_unbucketed_e_ms": xla_eb,
+            "xla_compile_counts": xla_counts,
+            "fused_vs_xla_at_top_bucket": [
+                round(f[top] / max(x[top], 1e-9), 4)
+                for f, x in zip(fused_eb, xla_eb)],
+            "control_tick_ms_mean": round(float(solve.mean()), 4),
+            "sim_events_per_s": round(r.events_processed
+                                      / max(wall, 1e-9)),
         },
     }
     out_path.write_text(json.dumps(payload, indent=1) + "\n")

@@ -41,6 +41,7 @@ from repro.core.quality import load_quality_models, save_quality_models
 from repro.serving.baselines import CONTROLLERS, assemble_bundle
 from repro.serving.cluster import (ClusterBackend, ClusterRuntime,
                                    measured_worker_classes)
+from repro.kernels.impls import KERNEL_IMPLS
 from repro.serving.controlplane import ESTIMATORS
 from repro.serving.microserve import STAGES
 from repro.serving.profiles import (CASCADES, class_costs_from_arg,
@@ -74,6 +75,13 @@ ap.add_argument("--stage-denoise-steps", type=int, default=8,
                 help="micro stage graph: denoise steps per tier")
 ap.add_argument("--stage-preempt-frac", type=float, default=0.5,
                 help="micro stage graph: earliest preemption fraction")
+ap.add_argument("--kernel-impl", default="auto",
+                choices=sorted(KERNEL_IMPLS),
+                help="kernel hot path for the jitted stages: auto / "
+                "pallas / interpret / ref / xla (unfused baseline)")
+ap.add_argument("--batch-buckets", default="1,2,4,8",
+                help="batch bucket ladder samplers pad to (empty string "
+                "disables bucketing)")
 ap.add_argument("--save-quality-models", default=None,
                 help="cluster mode: persist per-boundary quality models "
                 "fitted from this run's real discriminator confidences "
@@ -98,7 +106,11 @@ serving = default_serving(cascade=args.cascade, num_workers=args.workers,
                           estimator=args.estimator or "ewma",
                           stage_graph=args.stage_graph,
                           stage_denoise_steps=args.stage_denoise_steps,
-                          stage_preempt_frac=args.stage_preempt_frac)
+                          stage_preempt_frac=args.stage_preempt_frac,
+                          kernel_impl=args.kernel_impl,
+                          batch_buckets=tuple(
+                              int(b) for b in args.batch_buckets.split(",")
+                              if b.strip()))
 spec = as_cascade_spec(serving.cascade)
 n_tiers = spec.num_tiers
 

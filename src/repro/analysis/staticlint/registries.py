@@ -56,6 +56,7 @@ DEFAULT_BINDINGS: Tuple[Binding, ...] = (
     Binding("ESTIMATORS", "estimator", "--estimator"),
     Binding("CONTROLLERS", "controller", "--controller"),
     Binding("STAGES", "stage_graph", "--stage-graph"),
+    Binding("KERNEL_IMPLS", "kernel_impl", "--kernel-impl"),
 )
 
 # keywords on registry-entry constructor calls (ControllerBundle) that

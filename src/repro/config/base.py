@@ -605,6 +605,14 @@ class ServingConfig:
     # shed-adjusted QPS prior (core/allocator.py); off by default so
     # goldens stay bit-identical
     shed_feedback: bool = False
+    # kernel hot path (kernels/impls.py:KERNEL_IMPLS): how the cascade's
+    # jitted UNet/discriminator stages execute ("auto" resolves to the
+    # Pallas kernels on TPU and the fused jnp oracles elsewhere; "xla"
+    # keeps the bit-identical unfused baseline), plus the batch bucket
+    # ladder samplers pad to so XLA compiles O(#buckets) programs per
+    # stage. () disables bucketing (one program per batch size).
+    kernel_impl: str = "auto"
+    batch_buckets: Tuple[int, ...] = (1, 2, 4, 8)
 
     def __post_init__(self):
         if self.ecn_k <= 0:
@@ -632,6 +640,12 @@ class ServingConfig:
                              f"{self.warm_pool}")
         if self.class_costs and not self.worker_classes:
             raise ValueError("class_costs requires worker_classes")
+        bks = tuple(self.batch_buckets)
+        if any(b < 1 for b in bks):
+            raise ValueError(f"batch_buckets must be >= 1, got {bks}")
+        if list(bks) != sorted(set(bks)):
+            raise ValueError(f"batch_buckets must be strictly ascending, "
+                             f"got {bks}")
         if not self.worker_classes:
             return
         names = [wc.name for wc in self.worker_classes]

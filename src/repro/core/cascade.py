@@ -11,6 +11,7 @@ assigned LM architectures).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -18,11 +19,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import DiffusionConfig
+from repro.kernels import impls as kimpls
 from repro.models import diffusion as diff
 from repro.models.efficientnet import (DiscriminatorConfig,
                                        apply_discriminator)
 
 Stage = Tuple[DiffusionConfig, object]        # (config, params)
+
+
+def _stage_sample(params, noise, prompt_tokens, *, cfg, impl):
+    """Inner jitted body of one cascade stage. Latents arrive pre-drawn so
+    jit can donate their buffer (the DDIM loop rewrites x in place on
+    accelerators); values match the key-derived draw exactly."""
+    return diff.ddim_sample(params, cfg, None, prompt_tokens, impl=impl,
+                            init_noise=noise)
+
+
+def _disc_score(params, imgs, *, cfg, impl):
+    logits, _ = apply_discriminator(params, cfg, imgs, impl=impl)
+    return jax.nn.softmax(logits, -1)[:, 1]
 
 
 @dataclasses.dataclass
@@ -55,7 +70,9 @@ class DiffusionCascade:
 
     def __init__(self, stages: Sequence[Stage],
                  disc_cfg: DiscriminatorConfig, disc_params,
-                 latent_to_image: Optional[Callable] = None):
+                 latent_to_image: Optional[Callable] = None,
+                 kernel_impl: str = "xla",
+                 batch_buckets: Sequence[int] = ()):
         if isinstance(stages, DiffusionConfig):
             raise TypeError(
                 "DiffusionCascade now takes an ordered list of "
@@ -66,13 +83,61 @@ class DiffusionCascade:
             raise ValueError("a cascade needs >= 2 stages")
         self.disc_cfg, self.disc_params = disc_cfg, disc_params
         self.latent_to_image = latent_to_image or (lambda z: z)
-        self._samplers = [
-            jax.jit(lambda p, k, toks, cfg=cfg:
-                    diff.ddim_sample(p, cfg, k, toks))
+        self.kernel_impl: Optional[str] = None
+        self.batch_buckets: Tuple[int, ...] = ()
+        self.configure_kernels(kernel_impl, batch_buckets)
+
+    def configure_kernels(self, kernel_impl: str = "xla",
+                          batch_buckets: Sequence[int] = ()) -> None:
+        """(Re)build the jitted stage samplers + discriminator under a
+        kernel plan: ``kernel_impl`` routes model math ("xla" = the
+        baseline einsum path, "ref"/"interpret"/"pallas" the fused
+        kernels; "auto" resolves per backend), ``batch_buckets`` pads
+        batches up the bucket ladder so XLA compiles O(#buckets)
+        programs per stage instead of one per batch size."""
+        impl = kimpls.resolve_kernel_impl(kernel_impl)
+        buckets = tuple(int(b) for b in batch_buckets)
+        if (impl, buckets) == (self.kernel_impl, self.batch_buckets):
+            return
+        self.kernel_impl, self.batch_buckets = impl, buckets
+        self._inner_samplers = [
+            jax.jit(functools.partial(_stage_sample, cfg=cfg, impl=impl),
+                    donate_argnums=(1,))
             for cfg, _ in self.stages]
+        self._samplers = [
+            self._make_sampler(cfg, fn)
+            for (cfg, _), fn in zip(self.stages, self._inner_samplers)]
         self._score = jax.jit(
-            lambda p, imgs: jax.nn.softmax(
-                apply_discriminator(p, disc_cfg, imgs)[0], -1)[:, 1])
+            functools.partial(_disc_score, cfg=self.disc_cfg, impl=impl))
+
+    def bucket_for(self, n: int) -> int:
+        return kimpls.bucket_for(n, self.batch_buckets)
+
+    def _make_sampler(self, cfg: DiffusionConfig, inner) -> Callable:
+        """Host-side stage fn keeping the (params, key, toks) signature:
+        pads the batch to its bucket, draws the starting latent at bucket
+        shape (outside jit — location does not change the values), and
+        slices outputs back to the true batch."""
+        def sample(params, key, toks):
+            toks = jnp.asarray(toks)
+            n = toks.shape[0]
+            m = self.bucket_for(n)
+            if m != n:
+                pad = jnp.zeros((m - n,) + tuple(toks.shape[1:]), toks.dtype)
+                toks = jnp.concatenate([toks, pad], axis=0)
+            noise = jax.random.normal(
+                key, (m, cfg.image_size, cfg.image_size, cfg.in_channels),
+                jnp.float32)
+            out = inner(params, noise, toks)
+            return out[:n] if m != n else out
+        return sample
+
+    def compile_counts(self) -> List[int]:
+        """Compiled-program count per jitted fn (stage samplers in order,
+        then the discriminator scorer) — the bucketing invariant's
+        observable: a batch sweep may add at most one entry per bucket."""
+        fns = list(self._inner_samplers) + [self._score]
+        return [int(f._cache_size()) for f in fns]
 
     # ------- structure / legacy accessors -------
     @property
@@ -102,7 +167,15 @@ class DiffusionCascade:
                 zip(self.stages, self._samplers)]
 
     def confidence(self, images) -> np.ndarray:
-        return np.asarray(self._score(self.disc_params, images))
+        imgs = jnp.asarray(images)
+        n = imgs.shape[0]
+        m = self.bucket_for(n)
+        if m != n:
+            pad = jnp.zeros((m - n,) + tuple(imgs.shape[1:]), imgs.dtype)
+            imgs = jnp.concatenate([imgs, pad], axis=0)
+        # GroupNorm stats are per-sample, so padded rows cannot leak into
+        # real scores; their scores are dropped here.
+        return np.asarray(self._score(self.disc_params, imgs)[:n])
 
     def run_batch(self, key, prompt_tokens,
                   thresholds: Union[float, Sequence[float]]) -> CascadeResult:

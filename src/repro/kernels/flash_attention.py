@@ -24,7 +24,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                   scale: float, block_q: int, block_k: int, seq_len: int,
-                  causal: bool):
+                  causal: bool, kv_len):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -37,8 +37,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     q_start = qi * block_q
     k_start = ki * block_k
-    # causal: skip blocks fully above the diagonal
+    # causal: skip blocks fully above the diagonal; padded KV: skip
+    # blocks entirely past the valid prefix
     run = (not causal) or (k_start <= q_start + block_q - 1)
+    if kv_len is not None:
+        run = jnp.logical_and(run, k_start < kv_len)
 
     @pl.when(run)
     def _body():
@@ -53,6 +56,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
                                                       (block_q, block_k), 1)
             s = jnp.where(rows >= cols, s, NEG_INF)
+        if kv_len is not None:
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_k), 1)
+            s = jnp.where(cols < kv_len, s, NEG_INF)
         m_prev = m_scr[...]
         l_prev = l_scr[...]
         m_cur = jnp.max(s, axis=1)
@@ -74,9 +81,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention(q, k, v, *, causal: bool = True,
                     block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK,
-                    interpret: bool = False):
+                    kv_len=None, interpret: bool = False):
     """q: (B, Sq, H, D); k, v: (B, Sk, KH, D) with H = KH*G. Causal assumes
-    q and k cover the same positions (prefill)."""
+    q and k cover the same positions (prefill). ``kv_len`` marks k/v rows
+    at or past that index as padding (masked out of the softmax) so
+    callers can pad Sk up to a block multiple."""
     B, Sq, H, D = q.shape
     Sk, KH = k.shape[1], k.shape[2]
     G = H // KH
@@ -84,6 +93,8 @@ def flash_attention(q, k, v, *, causal: bool = True,
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
     assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    if kv_len is not None and not 0 < kv_len <= Sk:
+        raise ValueError(f"kv_len={kv_len} outside (0, {Sk}]")
 
     # layout: fold (B, KH, G) into the leading grid dim
     qr = q.reshape(B, Sq, KH, G, D).transpose(0, 2, 3, 1, 4) \
@@ -95,7 +106,8 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
     out = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, block_q=block_q,
-                          block_k=block_k, seq_len=Sk, causal=causal),
+                          block_k=block_k, seq_len=Sk, causal=causal,
+                          kv_len=kv_len),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, block_q, D), lambda b, qi, ki: (b, qi, 0)),

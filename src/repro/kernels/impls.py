@@ -1,0 +1,70 @@
+"""Kernel-implementation plans: registry -> config -> CLI, like policies.
+
+``kernel_impl`` selects how the model hot path (UNet attention, fused
+GroupNorm+SiLU) executes:
+
+  * ``pallas``    — the Pallas TPU kernels (compiled; TPU only).
+  * ``interpret`` — the same kernel bodies run by the Pallas interpreter
+                    (correctness path on CPU; slow).
+  * ``ref``       — the pure-jnp oracles in ``kernels/ref.py`` (fused
+                    call structure, XLA execution — the CPU fast path).
+  * ``xla``       — the original per-op einsum/groupnorm route, bypassing
+                    ``kernels/ops`` entirely (bit-identical baseline).
+  * ``auto``      — ``pallas`` on TPU, ``ref`` elsewhere.
+
+This module stays import-light (no jax at import time) so config/CLI can
+load it without paying for backend init.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Resolved hot-path plan: the model-level impl name plus the batch
+    bucket ladder used for shape-bucketed padding."""
+    impl: str
+    buckets: Tuple[int, ...]
+
+
+def resolve_kernel_impl(name: str) -> str:
+    """Map ``auto`` to a concrete impl for the current backend."""
+    if name != "auto":
+        return name
+    import jax
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def bucket_for(n: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket >= n; past the ladder, round up to a multiple of
+    the largest bucket (keeps the compiled-program count bounded)."""
+    if not buckets:
+        return n
+    for b in buckets:
+        if b >= n:
+            return b
+    top = buckets[-1]
+    return ((n + top - 1) // top) * top
+
+
+# Registry: name -> plan(serving). ``batch_buckets`` rides along so the
+# cascade gets both knobs in one resolve (``--kernel-impl ref
+# --batch-buckets 1,2,4,8``).
+KERNEL_IMPLS = {
+    "auto": lambda serving: KernelPlan(
+        resolve_kernel_impl("auto"), tuple(serving.batch_buckets)),
+    "pallas": lambda serving: KernelPlan(
+        "pallas", tuple(serving.batch_buckets)),
+    "interpret": lambda serving: KernelPlan(
+        "interpret", tuple(serving.batch_buckets)),
+    "ref": lambda serving: KernelPlan(
+        "ref", tuple(serving.batch_buckets)),
+    "xla": lambda serving: KernelPlan(
+        "xla", tuple(serving.batch_buckets)),
+}
+
+
+def kernel_plan(serving) -> KernelPlan:
+    return KERNEL_IMPLS[serving.kernel_impl](serving)

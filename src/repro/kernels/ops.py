@@ -13,6 +13,7 @@ import jax
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_groupnorm import fused_groupnorm as _groupnorm
 from repro.kernels.fused_rmsnorm import fused_rmsnorm as _rmsnorm
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.mlstm_chunk import mlstm_chunk as _mlstm
@@ -30,14 +31,14 @@ def _resolve(impl: str) -> str:
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "impl", "block_q",
-                                             "block_k"))
+                                             "block_k", "kv_len"))
 def flash_attention(q, k, v, *, causal=True, impl="auto",
-                    block_q=128, block_k=128):
+                    block_q=128, block_k=128, kv_len=None):
     mode = _resolve(impl)
     if mode == "xla":
-        return ref.flash_attention_ref(q, k, v, causal=causal)
+        return ref.flash_attention_ref(q, k, v, causal=causal, kv_len=kv_len)
     return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
-                  interpret=(mode == "interpret"))
+                  kv_len=kv_len, interpret=(mode == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_k"))
@@ -68,6 +69,17 @@ def fused_rmsnorm(x, scale, *, residual=None, eps=1e-5, impl="auto"):
                                residual if residual is not None else x,
                                eps=eps, impl=impl,
                                has_residual=residual is not None)
+
+
+@functools.partial(jax.jit, static_argnames=("groups", "act", "eps", "impl"))
+def fused_groupnorm(x, scale, bias, *, groups, act=True, eps=1e-5,
+                    impl="auto"):
+    mode = _resolve(impl)
+    if mode == "xla":
+        return ref.groupnorm_silu_ref(x, scale, bias, groups=groups, eps=eps,
+                                      act=act)
+    return _groupnorm(x, scale, bias, groups=groups, act=act, eps=eps,
+                      interpret=(mode == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

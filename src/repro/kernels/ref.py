@@ -7,8 +7,9 @@ import jax
 import jax.numpy as jnp
 
 
-def flash_attention_ref(q, k, v, *, causal: bool = True):
-    """q: (B,Sq,H,D); k,v: (B,Sk,KH,D). fp32 softmax, same-position causal."""
+def flash_attention_ref(q, k, v, *, causal: bool = True, kv_len=None):
+    """q: (B,Sq,H,D); k,v: (B,Sk,KH,D). fp32 softmax, same-position causal.
+    ``kv_len`` masks k/v rows at or past that index (padding)."""
     B, Sq, H, D = q.shape
     Sk, KH = k.shape[1], k.shape[2]
     G = H // KH
@@ -19,6 +20,9 @@ def flash_attention_ref(q, k, v, *, causal: bool = True):
     if causal:
         mask = jnp.tril(jnp.ones((Sq, Sk), bool))
         s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    if kv_len is not None:
+        valid = jnp.arange(Sk) < kv_len
+        s = jnp.where(valid[None, None, None, None], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgst,btkd->bskgd", p, vf)
     return o.reshape(B, Sq, H, D).astype(q.dtype)
@@ -46,6 +50,28 @@ def rmsnorm_ref(x, scale, *, eps: float = 1e-5, residual=None):
     var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
     out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
     return out.astype(x.dtype)
+
+
+def groupnorm_silu_ref(x, scale, bias, *, groups: int, eps: float = 1e-5,
+                       act: bool = True):
+    """Fused GroupNorm(+SiLU) oracle: the exact math of
+    ``models/efficientnet.groupnorm`` (fp32 stats per (sample, group)
+    over all spatial positions and within-group channels) followed by an
+    optional SiLU. x: (B, ..., C)."""
+    shape = x.shape
+    B, C = shape[0], shape[-1]
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, -1, g, C // g).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    var = jnp.var(xg, axis=(1, 3), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    out = xg.reshape(B, -1, C) * scale.astype(jnp.float32) \
+        + bias.astype(jnp.float32)
+    if act:
+        out = jax.nn.silu(out)
+    return out.reshape(shape).astype(x.dtype)
 
 
 def swiglu_ref(gate, up):

@@ -24,6 +24,7 @@ import pathlib
 
 import numpy as np
 
+from repro.kernels.impls import KERNEL_IMPLS
 from repro.serving.admission import ADMISSIONS
 from repro.serving.autocascade import CascadeBuilder, load_catalog
 from repro.serving.autoscaler import SCALERS, provisioned_cost
@@ -115,6 +116,16 @@ def main():
                     help="micro stage graph: earliest preemption point "
                     "as a fraction of the denoise steps (confident "
                     "queries exit to decode after ceil(frac*steps))")
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=sorted(KERNEL_IMPLS),
+                    help="kernel hot path for the jitted cascade stages "
+                    "(kernels/impls.py): auto (pallas on TPU, fused jnp "
+                    "oracles elsewhere) / pallas / interpret / ref / xla "
+                    "(unfused bit-identical baseline)")
+    ap.add_argument("--batch-buckets", default="1,2,4,8",
+                    help="comma-separated batch bucket ladder samplers "
+                    "pad to (bounds compiled programs to one per bucket "
+                    "per stage); empty string disables bucketing")
     ap.add_argument("--shed-feedback", action="store_true",
                     help="fold the admission door's shed rate back "
                     "into the solver's demand prior (plan for offered "
@@ -238,6 +249,12 @@ def main():
     if not 0 < args.stage_preempt_frac <= 1:
         ap.error(f"--stage-preempt-frac must be in (0, 1], got "
                  f"{args.stage_preempt_frac}")
+    try:
+        buckets = tuple(int(b) for b in args.batch_buckets.split(",")
+                        if b.strip())
+    except ValueError:
+        ap.error(f"--batch-buckets must be a comma-separated int list, "
+                 f"got {args.batch_buckets!r}")
     serving = default_serving(cascade=spec, num_workers=args.workers,
                               worker_classes=wcs, class_costs=costs,
                               controller=controller,
@@ -257,7 +274,9 @@ def main():
                               stage_graph=args.stage_graph,
                               stage_denoise_steps=args.stage_denoise_steps,
                               stage_preempt_frac=args.stage_preempt_frac,
-                              shed_feedback=args.shed_feedback)
+                              shed_feedback=args.shed_feedback,
+                              kernel_impl=args.kernel_impl,
+                              batch_buckets=buckets)
     r = run_controller(controller, trace, serving, seed=args.seed,
                        estimator=args.estimator)
 

@@ -49,13 +49,20 @@ def diffusion_loss(params, cfg: DiffusionConfig, key, x0, prompt_tokens):
 
 
 def ddim_sample(params, cfg: DiffusionConfig, key, prompt_tokens,
-                num_steps: Optional[int] = None, eta: float = 0.0):
+                num_steps: Optional[int] = None, eta: float = 0.0,
+                impl: str = "xla", init_noise=None):
     """Deterministic DDIM (eta=0). num_steps=1 reproduces the distilled
-    'turbo' execution profile of the paper's light models."""
+    'turbo' execution profile of the paper's light models. ``init_noise``
+    supplies the standard-normal starting latent (callers that jit with
+    donated latents pass it in; identical to the key-derived default when
+    drawn as ``normal(key, shape)``)."""
     steps = num_steps or cfg.num_steps
     B = prompt_tokens.shape[0]
     shape = (B, cfg.image_size, cfg.image_size, cfg.in_channels)
-    x = jax.random.normal(key, shape, jnp.float32)
+    if init_noise is None:
+        x = jax.random.normal(key, shape, jnp.float32)
+    else:
+        x = init_noise
     ab = _schedule()
     ts = jnp.linspace(NUM_TRAIN_STEPS - 1, 0, steps).astype(jnp.int32)
 
@@ -63,7 +70,8 @@ def ddim_sample(params, cfg: DiffusionConfig, key, prompt_tokens,
         t = ts[i]
         t_next = jnp.where(i + 1 < steps, ts[jnp.minimum(i + 1, steps - 1)],
                            -1)
-        eps = apply_unet(params, cfg, x, jnp.full((B,), t), prompt_tokens)
+        eps = apply_unet(params, cfg, x, jnp.full((B,), t), prompt_tokens,
+                         impl=impl)
         ab_t = ab[t]
         ab_n = jnp.where(t_next >= 0, ab[jnp.maximum(t_next, 0)], 1.0)
         x0 = (x - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
@@ -75,21 +83,27 @@ def ddim_sample(params, cfg: DiffusionConfig, key, prompt_tokens,
 
 
 def euler_sample(params, cfg: DiffusionConfig, key, prompt_tokens,
-                 num_steps: Optional[int] = None):
-    """Euler ancestral-style ODE sampler (alternative to DDIM)."""
+                 num_steps: Optional[int] = None, impl: str = "xla",
+                 init_noise=None):
+    """Euler ancestral-style ODE sampler (alternative to DDIM).
+    ``init_noise`` is a standard-normal draw; the sigma scaling happens
+    here either way."""
     steps = num_steps or cfg.num_steps
     B = prompt_tokens.shape[0]
     shape = (B, cfg.image_size, cfg.image_size, cfg.in_channels)
     ab = _schedule()
     sigmas = jnp.sqrt((1 - ab) / ab)
     ts = jnp.linspace(NUM_TRAIN_STEPS - 1, 0, steps).astype(jnp.int32)
-    x = jax.random.normal(key, shape, jnp.float32) * sigmas[ts[0]]
+    if init_noise is None:
+        init_noise = jax.random.normal(key, shape, jnp.float32)
+    x = init_noise * sigmas[ts[0]]
 
     def body(i, x):
         t = ts[i]
         sig = sigmas[t]
         xin = x / jnp.sqrt(sig ** 2 + 1)
-        eps = apply_unet(params, cfg, xin, jnp.full((B,), t), prompt_tokens)
+        eps = apply_unet(params, cfg, xin, jnp.full((B,), t), prompt_tokens,
+                         impl=impl)
         d = eps
         sig_next = jnp.where(i + 1 < steps, sigmas[ts[jnp.minimum(i + 1,
                                                                   steps - 1)]],

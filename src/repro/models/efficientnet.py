@@ -57,6 +57,19 @@ def groupnorm(x, scale, bias, groups):
     return (xg.reshape(B, H, W, C) * scale + bias).astype(x.dtype)
 
 
+def gn_act(x, p, groups, *, act=True, impl="xla"):
+    """GroupNorm (+ optional SiLU) routed per ``impl``: "xla" keeps the
+    original unfused ops (bit-identical baseline); anything else goes
+    through ``kernels.ops.fused_groupnorm`` — "ref" selects its fused
+    jnp oracle, "pallas"/"interpret" the Pallas kernel."""
+    if impl == "xla":
+        h = groupnorm(x, p["scale"], p["bias"], groups)
+        return jax.nn.silu(h) if act else h
+    from repro.kernels import ops
+    return ops.fused_groupnorm(x, p["scale"], p["bias"], groups=groups,
+                               act=act, impl="xla" if impl == "ref" else impl)
+
+
 def _gn_init(c):
     return {"scale": jnp.ones((c,), jnp.float32),
             "bias": jnp.zeros((c,), jnp.float32)}
@@ -80,17 +93,14 @@ def _mbconv_init(key, cin, cout, expand, se_ratio):
     return p
 
 
-def _mbconv_apply(p, x, stride, expand, gn_groups):
+def _mbconv_apply(p, x, stride, expand, gn_groups, impl="xla"):
     cin = x.shape[-1]
-    h = groupnorm(x, p["gn0"]["scale"], p["gn0"]["bias"], gn_groups)
+    h = gn_act(x, p["gn0"], gn_groups, act=False, impl=impl)
     if expand > 1:
-        h = jax.nn.silu(groupnorm(conv(h, p["w_exp"]),
-                                  p["gn1"]["scale"], p["gn1"]["bias"],
-                                  gn_groups))
+        h = gn_act(conv(h, p["w_exp"]), p["gn1"], gn_groups, impl=impl)
     mid = h.shape[-1]
     h = conv(h, p["w_dw"], stride=stride, groups=mid)
-    h = jax.nn.silu(groupnorm(h, p["gn2"]["scale"], p["gn2"]["bias"],
-                              gn_groups))
+    h = gn_act(h, p["gn2"], gn_groups, impl=impl)
     # squeeze-excite
     s = jnp.mean(h, axis=(1, 2), keepdims=True)
     s = jax.nn.silu(conv(s, p["w_se1"]))
@@ -124,25 +134,25 @@ def init_discriminator(key, cfg: DiscriminatorConfig):
     return p
 
 
-def apply_discriminator(params, cfg: DiscriminatorConfig, images):
+def apply_discriminator(params, cfg: DiscriminatorConfig, images,
+                        impl="xla"):
     """images: (B, H, W, C) in [-1, 1]. Returns (logits (B,2),
-    features (B, head_channels))."""
-    x = jax.nn.silu(groupnorm(conv(images, params["stem"], stride=2),
-                              params["stem_gn"]["scale"],
-                              params["stem_gn"]["bias"], cfg.gn_groups))
+    features (B, head_channels)). ``impl`` routes the GroupNorm+SiLU
+    stacks (see ``gn_act``)."""
+    x = gn_act(conv(images, params["stem"], stride=2), params["stem_gn"],
+               cfg.gn_groups, impl=impl)
     for i, (c, depth, stride, expand) in enumerate(cfg.stages):
         for d, bp in enumerate(params[f"stage{i}"]):
             x = _mbconv_apply(bp, x, stride if d == 0 else 1, expand,
-                              cfg.gn_groups)
-    x = jax.nn.silu(groupnorm(conv(x, params["head"]),
-                              params["head_gn"]["scale"],
-                              params["head_gn"]["bias"], cfg.gn_groups))
+                              cfg.gn_groups, impl=impl)
+    x = gn_act(conv(x, params["head"]), params["head_gn"], cfg.gn_groups,
+               impl=impl)
     feats = jnp.mean(x, axis=(1, 2))
     logits = feats @ params["fc"] + params["fc_b"]
     return logits, feats
 
 
-def confidence_score(params, cfg: DiscriminatorConfig, images):
+def confidence_score(params, cfg: DiscriminatorConfig, images, impl="xla"):
     """P('real') — the paper's confidence score (softmax over 2 classes)."""
-    logits, _ = apply_discriminator(params, cfg, images)
+    logits, _ = apply_discriminator(params, cfg, images, impl=impl)
     return jax.nn.softmax(logits, axis=-1)[:, 1]

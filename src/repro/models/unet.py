@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import DiffusionConfig
-from repro.models.efficientnet import _conv_init, _gn_init, conv, groupnorm
+from repro.models.efficientnet import (_conv_init, _gn_init, conv, gn_act,
+                                       groupnorm)
 
 
 def timestep_embedding(t, dim):
@@ -38,11 +39,11 @@ def _resblock_init(key, cin, cout, temb_dim):
     return p
 
 
-def _resblock(p, x, temb, groups=8):
-    h = jax.nn.silu(groupnorm(x, p["gn1"]["scale"], p["gn1"]["bias"], groups))
+def _resblock(p, x, temb, groups=8, impl="xla"):
+    h = gn_act(x, p["gn1"], groups, impl=impl)
     h = conv(h, p["w1"])
     h = h + (jax.nn.silu(temb) @ p["temb"])[:, None, None, :]
-    h = jax.nn.silu(groupnorm(h, p["gn2"]["scale"], p["gn2"]["bias"], groups))
+    h = gn_act(h, p["gn2"], groups, impl=impl)
     h = conv(h, p["w2"])
     skip = conv(x, p["skip"]) if "skip" in p else x
     return h + skip
@@ -57,23 +58,60 @@ def _attn_init(key, c, text_dim):
             "cv": _dense_init(ks[5], text_dim, c)}
 
 
-def _attn(p, x, ctx, num_heads, groups=8):
+def _flash_pad(s, block=128):
+    """Sequence length after padding for the Pallas flash kernel: no-op
+    when one block covers it (block shrinks to s), else the next multiple
+    of ``block``."""
+    return s if s <= block else -(-s // block) * block
+
+
+def _fused_attn(qh, kh, vh, impl):
+    """Dispatch (B,S,H,D) attention through kernels.ops.flash_attention.
+    "ref" uses the fused jnp oracle unpadded; "pallas"/"interpret" pad
+    Sq/Sk to block multiples and mask the padded K/V columns via
+    ``kv_len`` (padded q rows are sliced off — they never feed outputs)."""
+    from repro.kernels import ops
+    if impl == "ref":
+        return ops.flash_attention(qh, kh, vh, causal=False, impl="xla")
+    sq, sk = qh.shape[1], kh.shape[1]
+    sq_p, sk_p = _flash_pad(sq), _flash_pad(sk)
+    if sq_p != sq:
+        qh = jnp.pad(qh, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    if sk_p != sk:
+        kh = jnp.pad(kh, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, sk_p - sk), (0, 0), (0, 0)))
+    out = ops.flash_attention(qh, kh, vh, causal=False, impl=impl,
+                              kv_len=sk if sk_p != sk else None)
+    return out[:, :sq]
+
+
+def _attn(p, x, ctx, num_heads, groups=8, impl="xla"):
     """Self-attention over pixels + cross-attention to text ctx (B,L,T)."""
     B, H, W, C = x.shape
-    h = groupnorm(x, p["gn"]["scale"], p["gn"]["bias"], groups)
+    if impl == "xla":
+        h = groupnorm(x, p["gn"]["scale"], p["gn"]["bias"], groups)
+    else:
+        h = gn_act(x, p["gn"], groups, act=False, impl=impl)
     seq = h.reshape(B, H * W, C)
     q = seq @ p["wq"]
     k = jnp.concatenate([seq @ p["wk"], ctx @ p["ck"]], axis=1)
     v = jnp.concatenate([seq @ p["wv"], ctx @ p["cv"]], axis=1)
     hd = C // num_heads
 
-    def split(a):
-        return a.reshape(B, -1, num_heads, hd).transpose(0, 2, 1, 3)
-    qh, kh, vh = split(q), split(k), split(v)
-    att = jax.nn.softmax(
-        jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(hd), axis=-1)
-    out = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
-    out = out.transpose(0, 2, 1, 3).reshape(B, H * W, C) @ p["wo"]
+    if impl == "xla":
+        def split(a):
+            return a.reshape(B, -1, num_heads, hd).transpose(0, 2, 1, 3)
+        qh, kh, vh = split(q), split(k), split(v)
+        att = jax.nn.softmax(
+            jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(hd), axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", att, vh)
+        out = out.transpose(0, 2, 1, 3).reshape(B, H * W, C)
+    else:
+        out = _fused_attn(q.reshape(B, -1, num_heads, hd),
+                          k.reshape(B, -1, num_heads, hd),
+                          v.reshape(B, -1, num_heads, hd), impl)
+        out = out.reshape(B, H * W, C)
+    out = out @ p["wo"]
     return x + out.reshape(B, H, W, C)
 
 
@@ -135,9 +173,12 @@ def init_unet(key, cfg: DiffusionConfig):
     return p
 
 
-def apply_unet(params, cfg: DiffusionConfig, x, t, prompt_tokens):
+def apply_unet(params, cfg: DiffusionConfig, x, t, prompt_tokens,
+               impl="xla"):
     """x: (B,H,W,Cin) noisy latent; t: (B,) timesteps in [0, 1000);
-    prompt_tokens: (B, L) int32. Returns epsilon prediction."""
+    prompt_tokens: (B, L) int32. Returns epsilon prediction. ``impl``
+    routes GroupNorm+SiLU and attention through the kernel hot path
+    ("pallas" | "interpret" | "ref") or the baseline ops ("xla")."""
     temb = timestep_embedding(t, cfg.base_channels)
     temb = jax.nn.silu(temb @ params["temb1"]) @ params["temb2"]
     ctx = jnp.take(params["text_embed"], prompt_tokens % 1024, axis=0)
@@ -147,27 +188,26 @@ def apply_unet(params, cfg: DiffusionConfig, x, t, prompt_tokens):
     res = cfg.image_size
     for lvl, level in enumerate(params["downs"]):
         for bp, ap in zip(level["blocks"], level["attns"]):
-            h = _resblock(bp, h, temb)
+            h = _resblock(bp, h, temb, impl=impl)
             if ap is not None:
-                h = _attn(ap, h, ctx, cfg.num_heads)
+                h = _attn(ap, h, ctx, cfg.num_heads, impl=impl)
             skips.append(h)
         if "down" in level:
             h = conv(h, level["down"], stride=2)
             skips.append(h)
             res //= 2
-    h = _resblock(params["mid1"], h, temb)
-    h = _attn(params["mid_attn"], h, ctx, cfg.num_heads)
-    h = _resblock(params["mid2"], h, temb)
+    h = _resblock(params["mid1"], h, temb, impl=impl)
+    h = _attn(params["mid_attn"], h, ctx, cfg.num_heads, impl=impl)
+    h = _resblock(params["mid2"], h, temb, impl=impl)
     for level in params["ups"]:
         for bp, ap in zip(level["blocks"], level["attns"]):
             h = _resblock(bp, jnp.concatenate([h, skips.pop()], axis=-1),
-                          temb)
+                          temb, impl=impl)
             if ap is not None:
-                h = _attn(ap, h, ctx, cfg.num_heads)
+                h = _attn(ap, h, ctx, cfg.num_heads, impl=impl)
         if "up" in level:
             B, H, W, C = h.shape
             h = jax.image.resize(h, (B, H * 2, W * 2, C), "nearest")
             h = conv(h, level["up"])
-    h = jax.nn.silu(groupnorm(h, params["out_gn"]["scale"],
-                              params["out_gn"]["bias"], 8))
+    h = gn_act(h, params["out_gn"], 8, impl=impl)
     return conv(h, params["out"])

@@ -33,6 +33,7 @@ from repro.config.base import (LatencyProfile, LatencyScale, ServingConfig,
 from repro.core.cascade import DiffusionCascade
 from repro.core.confidence import as_boundary_profiles
 from repro.core.milp import Telemetry
+from repro.kernels.impls import kernel_plan
 from repro.serving.admission import AcceptAllAdmission, AdmissionPolicy
 from repro.serving.controlplane import (Census, ControlDecision,
                                         ControlPlane, windowed_telemetry)
@@ -73,6 +74,13 @@ class ClusterRuntime:
     def __init__(self, cascade: DiffusionCascade, serving: ServingConfig):
         self.cascade = cascade
         self.serving = serving
+        # apply the serving kernel plan (--kernel-impl / --batch-buckets)
+        # to the cascade's jitted hot path; duck-typed because tests drive
+        # the runtime with stub cascades that only expose stage_fns()
+        if hasattr(cascade, "configure_kernels") \
+                and hasattr(serving, "kernel_impl"):
+            plan = kernel_plan(serving)
+            cascade.configure_kernels(plan.impl, plan.buckets)
         devs = jax.devices()
         n = len(devs)
         tp = max(serving.worker_tp_size, 1)
@@ -118,8 +126,18 @@ class ClusterRuntime:
                     toks = jnp.zeros((b, prompt_len), jnp.int32)
                     key = jax.random.PRNGKey(0)
                     fn(params, key, toks).block_until_ready()  # compile warm
+                    pre = (self.cascade.compile_counts()
+                           if hasattr(self.cascade, "compile_counts")
+                           else None)
                     best = min(_time_call(fn, params, key, toks)
                                for _ in range(repeats))
+                    if pre is not None \
+                            and self.cascade.compile_counts() != pre:
+                        raise RuntimeError(
+                            f"stage {getattr(cfg, 'name', cfg)} recompiled "
+                            f"during timed repeats at batch {b}: the e(b) "
+                            "profile would fold compile time into service "
+                            "time")
                     ts.append((b, best))
                 base = ts[0][1]
                 if len(ts) > 1:
@@ -246,6 +264,9 @@ class ClusterBackend:
                                  for i, t in enumerate(self.spec.tiers)
                                  if i < len(stage_fns)}
         self._stage_fns = list(stage_fns)
+        # (stage fn id, bucket) pairs already executed once: _run_stage
+        # warms unseen shapes untimed so compiles never leak into walls
+        self._warmed: set = set()
         # failure domain: injected crash/repair events in virtual time;
         # quarantine is what detect_faults *discovered* via heartbeats
         self._fault_events: List[Tuple[float, str, int]] = sorted(
@@ -597,6 +618,16 @@ class ClusterBackend:
         ctx = (jax.default_device(sl.devices[0]) if sl.devices
                else contextlib.nullcontext())
         with ctx:
+            bucket = batch_n
+            if hasattr(self.runtime.cascade, "bucket_for"):
+                bucket = self.runtime.cascade.bucket_for(batch_n)
+            wkey = (id(fn), bucket)
+            if wkey not in self._warmed:
+                # first call at this (stage, bucket) shape compiles; keep
+                # it out of the measured wall so service times stay
+                # comparable to the planner's steady-state e(b) profile
+                fn(params, k, toks).block_until_ready()
+                self._warmed.add(wkey)
             t0 = time.perf_counter()
             imgs = fn(params, k, toks)
             imgs.block_until_ready()

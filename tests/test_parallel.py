@@ -13,7 +13,11 @@ from repro.parallel.sharding import make_rules, param_pspec
 
 
 def _run_subprocess(code: str):
+    # pin the CPU platform: --xla_force_host_platform_device_count only
+    # applies there, and on hosts with libtpu installed an unpinned jax
+    # hangs fetching TPU instance metadata until the subprocess timeout
     env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "JAX_PLATFORMS": "cpu",
            "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
     import os
     env["HOME"] = os.environ.get("HOME", "/root")
